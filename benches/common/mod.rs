@@ -1,0 +1,25 @@
+#![allow(dead_code)]
+//! Shared helpers for the figure benches (custom harness: each bench is a
+//! plain binary printing the paper's series + writing bench_out/*.csv).
+
+use smlt::perfmodel::ModelProfile;
+
+pub const OUT_DIR: &str = "bench_out";
+
+/// Workers axis used by the scalability figures.
+pub fn worker_sweep() -> Vec<u32> {
+    vec![8, 16, 24, 32, 48, 64, 96, 128]
+}
+
+/// The five benchmark models of §5.1.
+pub fn benchmark_models() -> Vec<ModelProfile> {
+    ModelProfile::all()
+}
+
+/// Pretty banner shared by all figure benches.
+pub fn banner(fig: &str, what: &str) {
+    println!("\n================================================================");
+    println!("  {fig} — {what}");
+    println!("  (paper: SMLT, Ali et al. 2022; this run: calibrated simulator)");
+    println!("================================================================");
+}

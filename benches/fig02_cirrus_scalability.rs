@@ -1,0 +1,53 @@
+//! Fig 2: scalability of BERT-Small / BERT-Medium under Cirrus — same
+//! axes as Fig 1; the dedicated PS endpoint congests as workers grow.
+
+mod common;
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::simrun::IterModel;
+use smlt::costmodel::Pricing;
+use smlt::faas::FaasPlatform;
+use smlt::optimizer::Config;
+use smlt::perfmodel::{Calibration, ModelProfile};
+use smlt::sync::{comm_breakdown, Scheme, SyncEnv};
+use smlt::util::table::Table;
+
+fn main() {
+    common::banner("Figure 2", "Cirrus scalability (BERT-Small / BERT-Medium)");
+    let pricing = Pricing::default();
+    let cal = Calibration::default();
+    let platform = FaasPlatform::with_seed(2);
+    let mem = 6144;
+
+    for profile in [ModelProfile::bert_small(), ModelProfile::bert_medium()] {
+        let mut t = Table::new(
+            &format!("{} per-iteration time vs workers (Cirrus)", profile.name),
+            &["workers", "compute_s", "comm_s", "total_s", "UL-grad_s", "DL-grad_s"],
+        );
+        for w in common::worker_sweep() {
+            let model = IterModel {
+                system: SystemKind::Cirrus,
+                profile: &profile,
+                global_batch: 1024,
+                platform: &platform,
+                cal: &cal,
+                pricing: &pricing,
+            };
+            let (comp, comm) = model.iter_time(Config { workers: w, mem_mb: mem });
+            let env = SyncEnv::standard(platform.net_bw_bps(mem));
+            let b = comm_breakdown(Scheme::CirrusPs, &env, profile.grad_bytes(), w, 0);
+            t.row(&[
+                w.to_string(),
+                format!("{comp:.2}"),
+                format!("{comm:.2}"),
+                format!("{:.2}", comp + comm),
+                format!("{:.2}", b.ul_grad),
+                format!("{:.2}", b.dl_grad),
+            ]);
+        }
+        t.print();
+        let name = profile.name.to_lowercase().replace('-', "_");
+        t.write_csv(format!("{}/fig02_{name}.csv", common::OUT_DIR)).unwrap();
+    }
+    println!("-> like Fig 1: the single PS endpoint congests with scale.");
+}

@@ -1,0 +1,94 @@
+//! Fig 3: per-iteration computation-time and cost *distributions* across
+//! deployment configurations (workers 10–200, memory {3,6,10} GB) for
+//! BERT-Medium, BERT-Small, ResNet-18 and ResNet-50.
+//!
+//! Expected shape: wide spreads with heavy upper tails — the paper's
+//! argument that picking the "right" ⟨workers, memory⟩ is non-trivial
+//! and wrong picks are expensive.
+
+mod common;
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::simrun::IterModel;
+use smlt::costmodel::Pricing;
+use smlt::faas::FaasPlatform;
+use smlt::optimizer::Config;
+use smlt::perfmodel::{Calibration, ModelProfile};
+use smlt::util::stats::summarize;
+use smlt::util::table::Table;
+
+fn main() {
+    common::banner(
+        "Figure 3",
+        "per-iteration time & cost distributions over deployment configs",
+    );
+    let pricing = Pricing::default();
+    let cal = Calibration::default();
+    let platform = FaasPlatform::with_seed(3);
+
+    let models = [
+        ModelProfile::bert_medium(),
+        ModelProfile::bert_small(),
+        ModelProfile::resnet18(),
+        ModelProfile::resnet50(),
+    ];
+    let mut tt = Table::new(
+        "per-iteration TIME distribution (s) over workers 10-200 x mem {3,6,10} GB",
+        &["model", "min", "p25", "p50", "p75", "p95", "max"],
+    );
+    let mut tc = Table::new(
+        "per-iteration COST distribution ($) over the same grid",
+        &["model", "min", "p25", "p50", "p75", "p95", "max"],
+    );
+    for profile in &models {
+        let mut times = Vec::new();
+        let mut costs = Vec::new();
+        for w in (10..=200).step_by(10) {
+            for mem in [3072u32, 6144, 10240] {
+                let m = IterModel {
+                    system: SystemKind::Smlt,
+                    profile,
+                    global_batch: 512,
+                    platform: &platform,
+                    cal: &cal,
+                    pricing: &pricing,
+                };
+                let c = Config { workers: w, mem_mb: mem };
+                let (comp, comm) = m.iter_time(c);
+                times.push(comp + comm);
+                costs.push(m.iter_cost(c));
+            }
+        }
+        let st = summarize(&times);
+        let sc = summarize(&costs);
+        tt.row(&[
+            profile.name.to_string(),
+            format!("{:.2}", st.min),
+            format!("{:.2}", st.p25),
+            format!("{:.2}", st.p50),
+            format!("{:.2}", st.p75),
+            format!("{:.2}", st.p95),
+            format!("{:.2}", st.max),
+        ]);
+        tc.row(&[
+            profile.name.to_string(),
+            format!("{:.4}", sc.min),
+            format!("{:.4}", sc.p25),
+            format!("{:.4}", sc.p50),
+            format!("{:.4}", sc.p75),
+            format!("{:.4}", sc.p95),
+            format!("{:.4}", sc.max),
+        ]);
+        assert!(
+            st.max / st.min > 3.0,
+            "{}: config choice must matter (spread {:.1}x)",
+            profile.name,
+            st.max / st.min
+        );
+    }
+    tt.print();
+    tc.print();
+    tt.write_csv(format!("{}/fig03_time.csv", common::OUT_DIR)).unwrap();
+    tc.write_csv(format!("{}/fig03_cost.csv", common::OUT_DIR)).unwrap();
+    println!("-> multi-x spread between best and worst configs: the paper's\n   case for automated configuration search.");
+}

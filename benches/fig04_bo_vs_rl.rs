@@ -1,0 +1,109 @@
+//! Fig 4: Bayesian optimization vs reinforcement learning for deployment
+//! search — (a) CDF of prediction error, (b) normalized optimization
+//! overhead. Expected: comparable accuracy, ~3x overhead for RL.
+
+mod common;
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::simrun::IterModel;
+use smlt::costmodel::Pricing;
+use smlt::faas::FaasPlatform;
+use smlt::optimizer::rl::{QLearner, RlParams};
+use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, GridSearch, Objective};
+use smlt::perfmodel::Calibration;
+use smlt::util::stats::ecdf;
+use smlt::util::table::Table;
+
+struct EffObjective<'a> {
+    m: IterModel<'a>,
+}
+
+impl Objective for EffObjective<'_> {
+    fn eval(&mut self, c: Config) -> f64 {
+        let (a, b) = self.m.iter_time(c);
+        (a + b) * self.m.iter_cost(c)
+    }
+    fn eval_cost_s(&self, c: Config) -> f64 {
+        let (a, b) = self.m.iter_time(c);
+        2.0 * (a + b).min(10.0) + 1.0
+    }
+}
+
+fn main() {
+    common::banner("Figure 4", "Bayesian optimization vs reinforcement learning");
+    let pricing = Pricing::default();
+    let cal = Calibration::default();
+    let platform = FaasPlatform::with_seed(4);
+
+    let mut bo_errors = Vec::new();
+    let mut rl_errors = Vec::new();
+    let mut bo_overhead = Vec::new();
+    let mut rl_overhead = Vec::new();
+
+    // 20 search problems: 5 models x 4 batch sizes
+    for profile in common::benchmark_models() {
+        for batch in [128u32, 256, 512, 1024] {
+            let make = || EffObjective {
+                m: IterModel {
+                    system: SystemKind::Smlt,
+                    profile: &profile,
+                    global_batch: batch,
+                    platform: &platform,
+                    cal: &cal,
+                    pricing: &pricing,
+                },
+            };
+            // ground truth via a coarse grid
+            let coarse = ConfigSpace { mem_step_mb: 512, worker_step: 4, ..Default::default() };
+            let (_, truth, _) = GridSearch::run(&mut make(), &coarse);
+
+            let bo = BayesOpt::new(
+                ConfigSpace::default(),
+                BoParams { seed: batch as u64, ..Default::default() },
+            )
+            .run(&mut make());
+            let rl = QLearner::new(
+                ConfigSpace::default(),
+                RlParams { seed: batch as u64, ..Default::default() },
+            )
+            .run(&mut make());
+
+            bo_errors.push(((bo.best_value - truth) / truth).max(0.0));
+            rl_errors.push(((rl.best_value - truth) / truth).max(0.0));
+            bo_overhead.push(bo.profiling_s);
+            rl_overhead.push(rl.profiling_s);
+        }
+    }
+
+    let mut t = Table::new(
+        "(a) prediction-error CDF: relative regret vs exhaustive search",
+        &["percentile", "BO error", "RL error"],
+    );
+    let (bo_v, _) = ecdf(&bo_errors);
+    let (rl_v, _) = ecdf(&rl_errors);
+    for q in [10, 25, 50, 75, 90, 100] {
+        let idx = ((q as f64 / 100.0) * (bo_v.len() - 1) as f64).round() as usize;
+        t.row(&[
+            format!("p{q}"),
+            format!("{:.3}", bo_v[idx]),
+            format!("{:.3}", rl_v[idx]),
+        ]);
+    }
+    t.print();
+    t.write_csv(format!("{}/fig04_error_cdf.csv", common::OUT_DIR)).unwrap();
+
+    let bo_mean = bo_overhead.iter().sum::<f64>() / bo_overhead.len() as f64;
+    let rl_mean = rl_overhead.iter().sum::<f64>() / rl_overhead.len() as f64;
+    let mut t = Table::new(
+        "(b) normalized optimization overhead (profiling seconds, BO = 1.0)",
+        &["optimizer", "mean profiling s", "normalized"],
+    );
+    t.row(&["Bayesian".into(), format!("{bo_mean:.0}"), "1.00".into()]);
+    t.row(&["RL (Q-learning)".into(), format!("{rl_mean:.0}"), format!("{:.2}", rl_mean / bo_mean)]);
+    t.print();
+    t.write_csv(format!("{}/fig04_overhead.csv", common::OUT_DIR)).unwrap();
+    println!(
+        "-> RL needs {:.1}x the profiling of BO for comparable accuracy (paper: ~3x).",
+        rl_mean / bo_mean
+    );
+}

@@ -1,0 +1,46 @@
+//! Fig 9 (Scenario 1): minimize monetary cost under a training-time
+//! limit, BERT-Medium. SMLT profiles briefly, then picks the cheapest
+//! deadline-feasible deployment; Siren/Cirrus ignore the goal.
+
+mod common;
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, Goal, SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let deadline = args.get_f64("deadline", 4500.0);
+    let iters = args.get_usize("iters", 100) as u64;
+    common::banner(
+        "Figure 9",
+        &format!("Scenario 1: min cost s.t. {deadline:.0}s deadline (BERT-Medium)"),
+    );
+    let phases = Workloads::static_run(ModelProfile::bert_medium(), iters, 256);
+
+    let mut t = Table::new(
+        "deadline scenario",
+        &["system", "profiling s", "training s", "total s", "profiling $", "total $", "meets deadline"],
+    );
+    for sys in [SystemKind::Smlt, SystemKind::Siren, SystemKind::Cirrus] {
+        let mut job = SimJob::new(sys, phases.clone());
+        if sys.user_centric() {
+            job.goal = Goal::Deadline { t_max_s: deadline };
+        }
+        let out = simulate(&job);
+        t.row(&[
+            sys.name().to_string(),
+            format!("{:.0}", out.profiling_time_s),
+            format!("{:.0}", out.total_time_s - out.profiling_time_s),
+            format!("{:.0}", out.total_time_s),
+            format!("{:.2}", out.profiling_cost()),
+            format!("{:.2}", out.total_cost()),
+            (out.total_time_s <= deadline).to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv(format!("{}/fig09_scenario1.csv", common::OUT_DIR)).unwrap();
+    println!("-> only SMLT honors the limit; its profiling time/cost is shown\n   separately for fairness, as in the paper.");
+}

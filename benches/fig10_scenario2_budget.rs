@@ -1,0 +1,56 @@
+//! Fig 10 (Scenario 2): minimize training time under a $ budget,
+//! BERT-Medium. SMLT spends up to the budget on speed; baselines hit or
+//! miss it by coincidence.
+
+mod common;
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, Goal, SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let budget = args.get_f64("budget", 50.0);
+    let iters = args.get_usize("iters", 100) as u64;
+    common::banner(
+        "Figure 10",
+        &format!("Scenario 2: min time s.t. ${budget:.0} budget (BERT-Medium)"),
+    );
+    let phases = Workloads::static_run(ModelProfile::bert_medium(), iters, 256);
+
+    let mut t = Table::new(
+        "budget scenario",
+        &["system", "total s", "profiling $", "total $", "within budget"],
+    );
+    let mut smlt_time = 0.0;
+    let mut baseline_best = f64::INFINITY;
+    for sys in [SystemKind::Smlt, SystemKind::Siren, SystemKind::Cirrus] {
+        let mut job = SimJob::new(sys, phases.clone());
+        if sys.user_centric() {
+            job.goal = Goal::Budget { s_max: budget };
+        }
+        let out = simulate(&job);
+        if sys == SystemKind::Smlt {
+            smlt_time = out.total_time_s;
+        } else if out.total_cost() <= budget {
+            baseline_best = baseline_best.min(out.total_time_s);
+        }
+        t.row(&[
+            sys.name().to_string(),
+            format!("{:.0}", out.total_time_s),
+            format!("{:.2}", out.profiling_cost()),
+            format!("{:.2}", out.total_cost()),
+            (out.total_cost() <= budget).to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv(format!("{}/fig10_scenario2.csv", common::OUT_DIR)).unwrap();
+    if baseline_best.is_finite() {
+        println!(
+            "-> SMLT is {:.1}x faster than the best budget-respecting baseline.",
+            baseline_best / smlt_time
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Microbenchmarks of the Rust hot paths (§Perf L3): PJRT step latency,
+//! native vs XLA aggregation, param-store throughput, event-queue rate,
+//! GP posterior update. Prints ns/op-style rows; used by the performance
+//! pass in EXPERIMENTS.md.
+
+mod common;
+
+use smlt::optimizer::Gp;
+use smlt::runtime::{params, Engine, Manifest};
+use smlt::simclock::Sim;
+use smlt::storage::ParamStore;
+use smlt::sync::aggregate_mean;
+use smlt::util::rng::Pcg;
+use smlt::util::table::Table;
+use std::time::Instant;
+
+fn time_it(mut f: impl FnMut(), iters: u32) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    common::banner("Microbench", "L3 hot paths");
+    let mut t = Table::new("hot-path latencies", &["op", "time", "notes"]);
+
+    // event queue throughput
+    let ev = time_it(
+        || {
+            let mut sim = Sim::new();
+            for i in 0..10_000 {
+                sim.schedule(i as f64, |_| {});
+            }
+            sim.run();
+        },
+        20,
+    );
+    t.row(&[
+        "simclock 10k events".into(),
+        format!("{:.2} ms", ev * 1e3),
+        format!("{:.1} M events/s", 10_000.0 / ev / 1e6),
+    ]);
+
+    // native aggregation (8 workers x 4M floats ~ ResNet-50 shards)
+    let mut rng = Pcg::new(1);
+    let slices: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..1_000_000).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let views: Vec<&[f32]> = slices.iter().map(|s| s.as_slice()).collect();
+    let agg = time_it(|| { std::hint::black_box(aggregate_mean(&views)); }, 10);
+    t.row(&[
+        "aggregate_mean 8x1M f32".into(),
+        format!("{:.2} ms", agg * 1e3),
+        format!("{:.2} GB/s", 8.0 * 4e6 / agg / 1e9),
+    ]);
+
+    // param store put/get
+    let kv = ParamStore::new();
+    let payload: Vec<f32> = vec![0.0; 65_536];
+    let put = time_it(
+        || {
+            kv.put("bench", payload.clone());
+            std::hint::black_box(kv.get("bench"));
+        },
+        2000,
+    );
+    t.row(&[
+        "param store put+get 256KB".into(),
+        format!("{:.1} us", put * 1e6),
+        format!("{:.2} GB/s", 2.0 * 262_144.0 / put / 1e9),
+    ]);
+
+    // GP posterior refit at n=20 observations
+    let gp_fit = time_it(
+        || {
+            let mut gp = Gp::default();
+            let mut r = Pcg::new(2);
+            for _ in 0..20 {
+                gp.observe(vec![r.next_f64(), r.next_f64()], r.normal());
+            }
+            std::hint::black_box(gp.predict(&[0.5, 0.5]));
+        },
+        200,
+    );
+    t.row(&[
+        "GP fit(20 obs)+predict".into(),
+        format!("{:.2} ms", gp_fit * 1e3),
+        "BO acquisition path".into(),
+    ]);
+
+    // PJRT grad-step latency (tiny variant), if artifacts exist
+    let root = Manifest::default_root();
+    if root.join("manifest.json").exists() {
+        let mut eng = Engine::new(Manifest::load(root).unwrap()).unwrap();
+        let spec = eng.manifest().variant("tiny").unwrap().clone();
+        let p = params::init_params(&spec, 0);
+        let toks = params::gen_tokens(&spec, 0);
+        eng.warm("tiny").unwrap();
+        let _ = eng.grad_step("tiny", &p, &toks).unwrap();
+        let step = time_it(|| { std::hint::black_box(eng.grad_step("tiny", &p, &toks).unwrap()); }, 20);
+        t.row(&[
+            "PJRT grad_step (tiny 0.1M)".into(),
+            format!("{:.2} ms", step * 1e3),
+            "AOT executable, cached".into(),
+        ]);
+        let zeros = vec![0.0f32; spec.n_params];
+        let upd = time_it(
+            || {
+                std::hint::black_box(
+                    eng.apply_update("tiny", &p, &zeros, &zeros, &p, 1e-3).unwrap(),
+                );
+            },
+            20,
+        );
+        t.row(&[
+            "PJRT apply_update (tiny)".into(),
+            format!("{:.2} ms", upd * 1e3),
+            "fused Adam kernel".into(),
+        ]);
+        // XLA-path aggregation vs native
+        if let Some(agg_spec) = eng.manifest().aggregators.first().cloned() {
+            let stacked: Vec<f32> =
+                vec![0.5; agg_spec.n_workers * agg_spec.shard_len];
+            let _ = eng.shard_mean(agg_spec.n_workers, agg_spec.shard_len, &stacked).unwrap();
+            let xla = time_it(
+                || {
+                    std::hint::black_box(
+                        eng.shard_mean(agg_spec.n_workers, agg_spec.shard_len, &stacked)
+                            .unwrap(),
+                    );
+                },
+                20,
+            );
+            t.row(&[
+                format!("XLA shard_mean {}x{}", agg_spec.n_workers, agg_spec.shard_len),
+                format!("{:.2} ms", xla * 1e3),
+                "--agg xla ablation path".into(),
+            ]);
+        }
+    } else {
+        t.row(&["PJRT benches".into(), "skipped".into(), "run `make artifacts`".into()]);
+    }
+
+    t.print();
+    t.write_csv(format!("{}/microbench.csv", common::OUT_DIR)).unwrap();
+}

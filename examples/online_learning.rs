@@ -1,0 +1,45 @@
+//! Online learning (§5.4, Fig 11b): 24 hours of bursty data arrivals.
+//! Serverless systems scale to zero between bursts; VM-based systems pay
+//! for idle capacity. Prints the end-to-end cost comparison.
+//!
+//! ```text
+//! cargo run --release --example online_learning -- --hours 24
+//! ```
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let hours = args.get_usize("hours", 24) as u32;
+    let seed = args.get_usize("seed", 5) as u64;
+    let phases = Workloads::online_learning(ModelProfile::resnet50(), hours, seed);
+    let busy: u64 = phases.iter().map(|p| p.iters).sum();
+    println!(
+        "{hours}h online-learning trace: {} bursts, {busy} updates total",
+        phases.iter().filter(|p| p.iters > 0).count()
+    );
+
+    let mut t = Table::new(
+        "Online learning cost comparison (ResNet-50, 24 h)",
+        &["system", "total $", "training $", "idle/profiling $", "updates"],
+    );
+    for sys in [SystemKind::Smlt, SystemKind::LambdaMl, SystemKind::Mlcd, SystemKind::Iaas] {
+        let out = simulate(&SimJob::new(sys, phases.clone()));
+        let total = out.total_cost();
+        let training = out.ledger.training_only(&out.pricing);
+        t.row(&[
+            sys.name().to_string(),
+            format!("{total:.2}"),
+            format!("{training:.2}"),
+            format!("{:.2}", total - training),
+            out.iters_done.to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_out/example_online_learning.csv")?;
+    Ok(())
+}

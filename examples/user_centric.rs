@@ -1,0 +1,64 @@
+//! User-centric deployment (§5.3, Figs 9/10): run the same BERT-Medium
+//! job under (1) a training deadline minimizing cost, and (2) a monetary
+//! budget minimizing time, and show SMLT honoring both while baselines
+//! are goal-oblivious.
+//!
+//! ```text
+//! cargo run --release --example user_centric -- --deadline 4500 --budget 50
+//! ```
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, Goal, SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let deadline = args.get_f64("deadline", 4500.0);
+    let budget = args.get_f64("budget", 50.0);
+    let iters = args.get_usize("iters", 100) as u64;
+    let phases = Workloads::static_run(ModelProfile::bert_medium(), iters, 256);
+
+    let mut t = Table::new(
+        &format!("Scenario 1: minimize cost s.t. deadline {deadline:.0}s (BERT-Medium)"),
+        &["system", "time s", "cost $", "profiling $", "meets deadline"],
+    );
+    for sys in [SystemKind::Smlt, SystemKind::Siren, SystemKind::Cirrus] {
+        let mut job = SimJob::new(sys, phases.clone());
+        if sys == SystemKind::Smlt {
+            job.goal = Goal::Deadline { t_max_s: deadline };
+        }
+        let out = simulate(&job);
+        t.row(&[
+            sys.name().to_string(),
+            format!("{:.0}", out.total_time_s),
+            format!("{:.2}", out.total_cost()),
+            format!("{:.2}", out.profiling_cost()),
+            (out.total_time_s <= deadline).to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_out/example_scenario1.csv")?;
+
+    let mut t = Table::new(
+        &format!("Scenario 2: minimize time s.t. budget ${budget:.0} (BERT-Medium)"),
+        &["system", "time s", "cost $", "within budget"],
+    );
+    for sys in [SystemKind::Smlt, SystemKind::Siren, SystemKind::Cirrus] {
+        let mut job = SimJob::new(sys, phases.clone());
+        if sys == SystemKind::Smlt {
+            job.goal = Goal::Budget { s_max: budget };
+        }
+        let out = simulate(&job);
+        t.row(&[
+            sys.name().to_string(),
+            format!("{:.0}", out.total_time_s),
+            format!("{:.2}", out.total_cost()),
+            (out.total_cost() <= budget).to_string(),
+        ]);
+    }
+    t.print();
+    t.write_csv("bench_out/example_scenario2.csv")?;
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT bridge: lower the L2/L1 computation to HLO text + manifest.
+
+Emits, per model variant:
+  artifacts/<variant>/grad_step.hlo.txt     (flat_params, tokens) -> (loss, grads)
+  artifacts/<variant>/apply_update.hlo.txt  (params, m, v, grads, lr_t) -> (p', m', v')
+plus standalone aggregator artifacts:
+  artifacts/agg/shard_mean_w<N>_l<L>.hlo.txt
+and artifacts/manifest.json describing shapes, the deterministic init spec
+(mirrored in Rust) and a numeric smoke record (expected tiny-variant loss)
+that the Rust integration tests assert against.
+
+Interchange is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--variants tiny,small,base]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import shard_mean
+
+# (n_workers, shard_len) pairs compiled for the XLA-path aggregator demo
+# and integration tests; the Rust hot path uses its native SIMD mean and
+# falls back to these for the `--agg xla` ablation.
+AGG_SHAPES = [(2, 65536), (4, 65536), (8, 65536)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: M.ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    n = M.n_params(cfg)
+    fp = jax.ShapeDtypeStruct((n,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    lr = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+
+    gs_path = os.path.join(out_dir, "grad_step.hlo.txt")
+    text = to_hlo_text(jax.jit(M.make_grad_step(cfg)).lower(fp, toks))
+    with open(gs_path, "w") as f:
+        f.write(text)
+
+    au_path = os.path.join(out_dir, "apply_update.hlo.txt")
+    text = to_hlo_text(jax.jit(M.apply_update).lower(fp, fp, fp, fp, lr))
+    with open(au_path, "w") as f:
+        f.write(text)
+
+    return {
+        "name": cfg.name,
+        "n_params": n,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "grad_step": os.path.relpath(gs_path, start=os.path.dirname(out_dir)),
+        "apply_update": os.path.relpath(au_path, start=os.path.dirname(out_dir)),
+        "param_spec": [
+            {"name": name, "shape": list(shape), "init": init}
+            for name, shape, init in M.param_spec(cfg)
+        ],
+    }
+
+
+def lower_aggregators(out_root: str) -> dict:
+    agg_dir = os.path.join(out_root, "agg")
+    os.makedirs(agg_dir, exist_ok=True)
+    entries = {}
+    for n_workers, shard_len in AGG_SHAPES:
+        spec = jax.ShapeDtypeStruct((n_workers, shard_len), jnp.float32)
+        text = to_hlo_text(jax.jit(shard_mean).lower(spec))
+        rel = f"agg/shard_mean_w{n_workers}_l{shard_len}.hlo.txt"
+        with open(os.path.join(out_root, rel), "w") as f:
+            f.write(text)
+        entries[f"w{n_workers}_l{shard_len}"] = {
+            "n_workers": n_workers, "shard_len": shard_len, "path": rel,
+        }
+    return entries
+
+
+def smoke_record() -> dict:
+    """Ground-truth numbers the Rust integration tests must reproduce."""
+    cfg = M.CONFIGS["tiny"]
+    fp = jnp.asarray(M.lcg_init(cfg, seed=0))
+    toks = jnp.asarray(M.lcg_tokens(cfg, seed=0))
+    loss, grads = jax.jit(M.make_grad_step(cfg))(fp, toks)
+    p2, m2, v2 = jax.jit(M.apply_update)(
+        fp, jnp.zeros_like(fp), jnp.zeros_like(fp), grads,
+        jnp.array([[1e-3]], jnp.float32),
+    )
+    return {
+        "variant": "tiny",
+        "seed": 0,
+        "expected_loss": float(loss),
+        "grads_l2": float(jnp.linalg.norm(grads)),
+        "params_l2_after_update": float(jnp.linalg.norm(p2)),
+        "params_head": [float(x) for x in np.asarray(fp[:8])],
+        "tokens_head": [int(x) for x in np.asarray(toks).reshape(-1)[:8]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default="tiny,small,base",
+                    help="comma-separated subset of " + ",".join(M.CONFIGS))
+    args = ap.parse_args()
+    out_root = os.path.abspath(args.out)
+    os.makedirs(out_root, exist_ok=True)
+
+    manifest = {"variants": {}, "aggregators": {}, "smoke": {}}
+    for name in args.variants.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        print(f"[aot] lowering {cfg.name}: {M.n_params(cfg)/1e6:.2f}M params")
+        manifest["variants"][cfg.name] = lower_variant(
+            cfg, os.path.join(out_root, cfg.name))
+    print("[aot] lowering aggregators")
+    manifest["aggregators"] = lower_aggregators(out_root)
+    print("[aot] computing smoke record (tiny grad_step ground truth)")
+    manifest["smoke"] = smoke_record()
+    with open(os.path.join(out_root, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out_root}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

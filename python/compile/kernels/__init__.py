@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO)."""
+
+from .adam import adam_update
+from .layernorm import layernorm
+from .matmul import linear, matmul
+from .shard_mean import shard_mean
+
+__all__ = ["adam_update", "layernorm", "linear", "matmul", "shard_mean"]

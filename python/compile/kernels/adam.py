@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: fused Adam update.
+
+One pass over each parameter tensor updates (param, m, v) together:
+three HBM reads + three writes per element, vs. the unfused jnp
+formulation's ~10 intermediate round trips. Bias correction is folded
+into ``lr_t`` by the caller (the Rust coordinator computes
+``lr * sqrt(1 - b2^t) / (1 - b1^t)`` per step and feeds it as a (1,1)
+input), so the kernel itself is step-independent and one compiled
+executable serves the whole run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+BETA1 = 0.9
+BETA2 = 0.999
+ADAM_EPS = 1e-8
+# CPU-interpret schedule: single cell — under interpret mode every grid
+# step pays a dynamic-update-slice over the full output, so multi-cell
+# grids multiply memory traffic (measured: 17-cell grid = 4.4 s vs 1-cell
+# = 0.3 s on the 33.7M-param `base` vector). TPU schedule: 8K-lane tiles.
+FLAT_BLOCK = int(os.environ.get("SMLT_ADAM_BLOCK", str(1 << 27)))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, lr_ref, p_out, m_out, v_out):
+    g = g_ref[...]
+    m = BETA1 * m_ref[...] + (1.0 - BETA1) * g
+    v = BETA2 * v_ref[...] + (1.0 - BETA2) * g * g
+    lr_t = lr_ref[0, 0]
+    p_out[...] = p_ref[...] - lr_t * m / (jnp.sqrt(v) + ADAM_EPS)
+    m_out[...] = m
+    v_out[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def adam_update(p, m, v, g, lr_t, *, block: int = FLAT_BLOCK):
+    """Fused Adam on a flat f32 vector; returns (p', m', v').
+
+    ``lr_t`` is the bias-corrected step size as a (1, 1) f32 array.
+    """
+    (length,) = p.shape
+    bl = min(block, _round_up(length, 8))
+    lp = _round_up(length, bl)
+
+    def pad(a):
+        return jnp.pad(a, (0, lp - length)).reshape(1, lp)
+
+    spec = pl.BlockSpec((1, bl), lambda i: (0, i))
+    outs = pl.pallas_call(
+        _adam_kernel,
+        grid=(lp // bl,),
+        in_specs=[spec, spec, spec, spec, pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((1, lp), p.dtype)] * 3,
+        interpret=True,
+    )(pad(p), pad(m), pad(v), pad(g), lr_t.reshape(1, 1))
+    return tuple(o[0, :length] for o in outs)

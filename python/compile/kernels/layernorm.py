@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: fused LayerNorm (forward and hand-derived backward).
+
+One VMEM pass computes mean / variance / normalized output per row tile
+(vs. the naive jnp formulation, which materializes mean and variance as
+separate HBM round trips). The backward kernel implements the standard
+three-term LayerNorm gradient, also as a single fused Pallas pass.
+
+Statistics are saved as (rows, 1) so every Pallas operand stays 2-D
+(TPU-friendly layout; interpret mode does not care but the real-TPU
+lowering would).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+EPS = 1e-5
+# CPU-interpret schedule: large row blocks (grid-cell overhead dominates
+# under interpret mode); the TPU schedule would be 128-row tiles. See
+# matmul.py DEFAULT_BLOCK for the measurement.
+ROW_BLOCK = int(os.environ.get("SMLT_LN_BLOCK", "2048"))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, y_ref, mu_ref, rstd_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    y_ref[...] = (x - mu) * rstd * g_ref[...] + b_ref[...]
+    mu_ref[...] = mu
+    rstd_ref[...] = rstd
+
+
+def _ln_bwd_kernel(x_ref, g_ref, mu_ref, rstd_ref, dy_ref, dx_ref):
+    x, gamma = x_ref[...], g_ref[...]
+    mu, rstd, dy = mu_ref[...], rstd_ref[...], dy_ref[...]
+    xhat = (x - mu) * rstd
+    dyg = dy * gamma
+    d = x.shape[1]
+    # dx = rstd * (dyg - mean(dyg) - xhat * mean(dyg * xhat))
+    m1 = jnp.sum(dyg, axis=1, keepdims=True) / d
+    m2 = jnp.sum(dyg * xhat, axis=1, keepdims=True) / d
+    dx_ref[...] = rstd * (dyg - m1 - xhat * m2)
+
+
+def _fwd_call(x, gamma, beta, block_rows: int):
+    rows, d = x.shape
+    br = min(block_rows, _round_up(rows, 8))
+    rp = _round_up(rows, br)
+    x_p = jnp.pad(x, ((0, rp - rows), (0, 0))) if rp != rows else x
+    y, mu, rstd = pl.pallas_call(
+        _ln_fwd_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, d), x.dtype),
+            jax.ShapeDtypeStruct((rp, 1), x.dtype),
+            jax.ShapeDtypeStruct((rp, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x_p, gamma.reshape(1, d), beta.reshape(1, d))
+    return y[:rows], mu[:rows], rstd[:rows]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """Row-wise LayerNorm over the last axis of a 2-D input."""
+    y, _, _ = _fwd_call(x, gamma, beta, ROW_BLOCK)
+    return y
+
+
+def _layernorm_fwd(x, gamma, beta):
+    y, mu, rstd = _fwd_call(x, gamma, beta, ROW_BLOCK)
+    return y, (x, gamma, mu, rstd)
+
+
+def _layernorm_bwd(res, dy):
+    x, gamma, mu, rstd = res
+    rows, d = x.shape
+    br = min(ROW_BLOCK, _round_up(rows, 8))
+    rp = _round_up(rows, br)
+
+    def pad(a):
+        return jnp.pad(a, ((0, rp - rows), (0, 0))) if rp != rows else a
+
+    dx = pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), x.dtype),
+        interpret=True,
+    )(pad(x), gamma.reshape(1, d), pad(mu), pad(rstd), pad(dy))[:rows]
+    xhat = (x - mu) * rstd
+    dgamma = jnp.sum(dy * xhat, axis=0)
+    dbeta = jnp.sum(dy, axis=0)
+    return dx, dgamma, dbeta
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: tiled matmul — the training hot-spot.
+
+The same kernel instance serves the forward pass (``x @ W``), the data
+gradient (``g @ W.T``) and the weight gradient (``x.T @ g``) through the
+``linear`` custom-VJP wrapper below, so the *backward* pass of every weight
+matmul in the model is also a Pallas kernel.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(M/bm, N/bn, K/bk) with K innermost; the output block acts as the VMEM
+accumulator (its index map ignores the K grid axis, so Pallas keeps the
+block resident across the K loop — the standard Pallas accumulation idiom).
+On TPU the right blocks are 128x128x128 (MXU systolic tile; working set
+3 x 64 KiB = 192 KiB « 16 MiB VMEM). Under interpret=True on CPU the
+default is maximal blocks — see the note at DEFAULT_BLOCK.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the Rust
+runtime can run it. Real-TPU perf is *estimated* in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default schedule is backend-dependent. On a real TPU the right blocks are
+# 128x128x128 (MXU tile, VMEM-resident accumulator). Under interpret=True on
+# CPU-PJRT, the grid lowers to an HLO while-loop of dynamic slices which XLA
+# cannot re-fuse into a fast dot — measured 28x slower than a single-cell
+# grid (see EXPERIMENTS.md §Perf L1). We therefore default to maximal blocks
+# (single grid cell -> the kernel body lowers to one fused dot, within ~9%
+# of native jnp.dot) and keep the 128-tile schedule selectable for the
+# TPU-shaped artifacts + correctness tests.
+import os
+
+DEFAULT_BLOCK = int(os.environ.get("SMLT_MATMUL_BLOCK", "4096"))
+TPU_BLOCK = 128  # documented real-TPU schedule (MXU systolic tile)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_blocks: int):
+    """Grid point (i, j, k): o[i, j] += a[i, k] @ b[k, j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del k_blocks  # grid bound lives in the pallas_call; kept for clarity
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """``a @ b`` via the tiled Pallas kernel; arbitrary (non-aligned) shapes.
+
+    Inputs are zero-padded up to block multiples (zeros contribute nothing
+    to the contraction), the kernel runs on the aligned problem, and the
+    result is sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shapes {a.shape} x {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, _round_up(m, 8)),
+                  min(block_n, _round_up(n, 8)),
+                  min(block_k, _round_up(k, 8)))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    k_blocks = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_blocks=k_blocks),
+        grid=(mp // bm, np_ // bn, k_blocks),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense layer ``x @ w + b`` with Pallas forward *and* backward."""
+    return matmul(x, w) + b
+
+
+def _linear_fwd(x, w, b):
+    return matmul(x, w) + b, (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w.T)      # data gradient — Pallas
+    dw = matmul(x.T, g)      # weight gradient — Pallas
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every L1 Pallas kernel (the correctness signal).
+
+Each function mirrors the semantics of its Pallas counterpart with the
+plainest possible jnp formulation; pytest + hypothesis assert allclose
+over randomized shapes/values (python/tests/test_kernels.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .adam import ADAM_EPS, BETA1, BETA2
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b)
+
+
+def linear_ref(x, w, b):
+    return jnp.dot(x, w) + b
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def shard_mean_ref(stacked):
+    return jnp.mean(stacked, axis=0)
+
+
+def adam_update_ref(p, m, v, g, lr_t):
+    m2 = BETA1 * m + (1 - BETA1) * g
+    v2 = BETA2 * v + (1 - BETA2) * g * g
+    p2 = p - lr_t.reshape(()) * m2 / (jnp.sqrt(v2) + ADAM_EPS)
+    return p2, m2, v2
+
+
+def linear_grads_ref(x, w, b, dy):
+    """Reference (dx, dw, db) for the linear custom-VJP."""
+    return jnp.dot(dy, w.T), jnp.dot(x.T, dy), jnp.sum(dy, axis=0)
+
+
+def layernorm_grads_ref(x, gamma, beta, dy, eps=1e-5):
+    """Reference LayerNorm gradients via jax autodiff on the jnp oracle."""
+
+    def f(x, gamma, beta):
+        return jnp.sum(layernorm_ref(x, gamma, beta, eps) * dy)
+
+    return jax.grad(f, argnums=(0, 1, 2))(x, gamma, beta)

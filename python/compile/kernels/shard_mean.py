@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: gradient shard-mean — the hierarchical aggregator's hot op.
+
+Each SMLT shard aggregator receives its assigned gradient shard from all
+``n`` workers (a ``(n, shard_len)`` stack) and produces the element-wise
+mean. The kernel tiles the shard axis; the (small) worker axis stays fully
+resident in VMEM, so each output element costs exactly ``n`` HBM reads and
+one write — the roofline for this op.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+import os
+
+# CPU-interpret schedule: maximal tiles (each interpret grid step pays a
+# dynamic-update-slice over the full output — see adam.py). The TPU
+# schedule would be tiles sized to keep the (n_workers, block) stack in
+# VMEM, i.e. block ~ 16 MiB / (4 B * n_workers) lanes.
+SHARD_BLOCK = int(os.environ.get("SMLT_SHARD_BLOCK", str(1 << 24)))
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _shard_mean_kernel(s_ref, o_ref, *, n_workers: int):
+    o_ref[...] = jnp.sum(s_ref[...], axis=0, keepdims=True) * (1.0 / n_workers)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def shard_mean(stacked: jax.Array, *, block: int = SHARD_BLOCK) -> jax.Array:
+    """Mean over axis 0 of a ``(n_workers, shard_len)`` gradient stack."""
+    if stacked.ndim != 2:
+        raise ValueError(f"shard_mean expects 2-D, got {stacked.shape}")
+    n, length = stacked.shape
+    bl = min(block, _round_up(length, 8))
+    lp = _round_up(length, bl)
+    s = jnp.pad(stacked, ((0, 0), (0, lp - length))) if lp != length else stacked
+    out = pl.pallas_call(
+        functools.partial(_shard_mean_kernel, n_workers=n),
+        grid=(lp // bl,),
+        in_specs=[pl.BlockSpec((n, bl), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, bl), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, lp), stacked.dtype),
+        interpret=True,
+    )(s)
+    return out[0, :length]

@@ -1,0 +1,232 @@
+"""L2: transformer language model (forward/backward/Adam) in JAX.
+
+Stands in for the paper's BERT-Small/Medium training workload. Every weight
+matmul (QKV projection, attention output, both MLP layers, LM head) and
+every LayerNorm routes through the L1 Pallas kernels — forward *and*
+backward (custom VJPs) — so the compute hot path of the lowered HLO is the
+Pallas code. Attention score/value contractions use jnp einsum (they are
+O(S^2 d) vs the O(S d^2 + S d ff) weight matmuls that dominate at our
+shapes); see DESIGN.md §Hardware-Adaptation.
+
+Interchange with the Rust coordinator is a single flat f32 parameter
+vector: ``grad_step(flat_params, tokens) -> (loss, flat_grads)`` and
+``apply_update(flat_params, m, v, grads, lr_t) -> (params', m', v')``.
+Flat tensors keep the PJRT call signature tiny and let the hierarchical
+aggregator shard raw f32 ranges without pytree bookkeeping.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import adam_update, layernorm, linear, matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer-LM hyperparameters for one AOT variant."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int  # per-worker microbatch the artifact is compiled for
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                        d_ff=128, seq_len=32, batch=4),
+    "small": ModelConfig("small", vocab=4096, d_model=256, n_layers=4,
+                         n_heads=4, d_ff=1024, seq_len=64, batch=8),
+    "base": ModelConfig("base", vocab=8192, d_model=512, n_layers=8,
+                        n_heads=8, d_ff=2048, seq_len=128, batch=8),
+    "mega": ModelConfig("mega", vocab=16384, d_model=768, n_layers=12,
+                        n_heads=12, d_ff=3072, seq_len=128, batch=4),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """Deterministic (name, shape, init) list defining the flat layout.
+
+    ``init`` is one of ``normal:<std>`` / ``zeros`` / ``ones`` and is
+    reproduced bit-for-bit by the Rust coordinator (shared LCG scheme, see
+    ``lcg_init`` below and rust/src/runtime/params.rs).
+    """
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    spec: List[Tuple[str, Tuple[int, ...], str]] = [
+        ("tok_emb", (v, d), "normal:0.02"),
+        ("pos_emb", (s, d), "normal:0.02"),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "ln1_g", (d,), "ones"),
+            (p + "ln1_b", (d,), "zeros"),
+            (p + "wqkv", (d, 3 * d), "normal:0.02"),
+            (p + "bqkv", (3 * d,), "zeros"),
+            (p + "wo", (d, d), "normal:0.02"),
+            (p + "bo", (d,), "zeros"),
+            (p + "ln2_g", (d,), "ones"),
+            (p + "ln2_b", (d,), "zeros"),
+            (p + "w1", (d, ff), "normal:0.02"),
+            (p + "b1", (ff,), "zeros"),
+            (p + "w2", (ff, d), "normal:0.02"),
+            (p + "b2", (d,), "zeros"),
+        ]
+    spec += [
+        ("lnf_g", (d,), "ones"),
+        ("lnf_b", (d,), "zeros"),
+        ("head_w", (d, v), "normal:0.02"),
+        ("head_b", (v,), "zeros"),
+    ]
+    return spec
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s, _ in param_spec(cfg))
+
+
+def _unflatten(cfg: ModelConfig, flat: jax.Array) -> dict:
+    out, off = {}, 0
+    for name, shape, _ in param_spec(cfg):
+        size = int(np.prod(shape))
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared deterministic init (mirrored in Rust: rust/src/runtime/params.rs).
+# ---------------------------------------------------------------------------
+
+LCG_MUL = np.uint64(6364136223846793005)
+LCG_ADD = np.uint64(1442695040888963407)
+
+
+def _fnv1a(s: str) -> np.uint64:
+    h = np.uint64(0xCBF29CE484222325)
+    for ch in s.encode():
+        h = np.uint64((int(h) ^ ch) * 0x100000001B3 & 0xFFFFFFFFFFFFFFFF)
+    return h
+
+
+def lcg_uniform(seed: np.uint64, n: int) -> np.ndarray:
+    """n floats in [-1, 1) from the shared LCG; bit-reproducible in Rust."""
+    out = np.empty(n, dtype=np.float32)
+    x = np.uint64(seed)
+    with np.errstate(over="ignore"):
+        for i in range(n):
+            x = np.uint64(x * LCG_MUL + LCG_ADD)
+            u24 = np.uint64(x >> np.uint64(40))
+            out[i] = (float(u24) / float(1 << 24)) * 2.0 - 1.0
+    return out
+
+
+def lcg_init(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Full flat parameter vector from the shared deterministic scheme."""
+    parts = []
+    for name, shape, init in param_spec(cfg):
+        size = int(np.prod(shape))
+        if init == "zeros":
+            parts.append(np.zeros(size, np.float32))
+        elif init == "ones":
+            parts.append(np.ones(size, np.float32))
+        else:
+            std = float(init.split(":")[1])
+            # diffuse the seed so seed=1 does not collide with the `| 1`
+            # parity bit (mirrored in rust runtime/params.rs)
+            diffused = np.uint64(
+                (seed * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
+            tseed = np.uint64((_fnv1a(name) ^ diffused) | np.uint64(1))
+            parts.append((lcg_uniform(tseed, size) * std).astype(np.float32))
+    return np.concatenate(parts)
+
+
+def lcg_tokens(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Deterministic (batch, seq_len+1) token block, shared with Rust."""
+    n = cfg.batch * (cfg.seq_len + 1)
+    x = np.uint64(seed * 2 + 12345)
+    out = np.empty(n, dtype=np.int32)
+    with np.errstate(over="ignore"):
+        for i in range(n):
+            x = np.uint64(x * LCG_MUL + LCG_ADD)
+            out[i] = int((int(x) >> 33) % cfg.vocab)
+    return out.reshape(cfg.batch, cfg.seq_len + 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss / grad / update.
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    """Causal-LM logits for int32 ``tokens`` of shape (B, S)."""
+    b, s = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    mask = jnp.where(
+        jnp.tril(jnp.ones((s, s), bool)), 0.0, -1e9
+    )[None, None, :, :]
+    for l in range(cfg.n_layers):
+        pf = f"layer{l}."
+        xf = x.reshape(b * s, d)
+        hln = layernorm(xf, p[pf + "ln1_g"], p[pf + "ln1_b"])
+        qkv = linear(hln, p[pf + "wqkv"], p[pf + "bqkv"])
+        qkv = qkv.reshape(b, s, 3, h, dh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh) + mask
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, d)
+        x = x + linear(ctx, p[pf + "wo"], p[pf + "bo"]).reshape(b, s, d)
+        xf = x.reshape(b * s, d)
+        h2 = layernorm(xf, p[pf + "ln2_g"], p[pf + "ln2_b"])
+        mlp = linear(
+            jax.nn.gelu(linear(h2, p[pf + "w1"], p[pf + "b1"])),
+            p[pf + "w2"], p[pf + "b2"],
+        )
+        x = x + mlp.reshape(b, s, d)
+    xf = layernorm(x.reshape(b * s, d), p["lnf_g"], p["lnf_b"])
+    return linear(xf, p["head_w"], p["head_b"])  # (B*S, V)
+
+
+def loss_fn(cfg: ModelConfig, flat_params: jax.Array,
+            tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy; ``tokens`` is (B, S+1) int32."""
+    p = _unflatten(cfg, flat_params)
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, p, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = targets.reshape(-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_grad_step(cfg: ModelConfig):
+    """(flat_params, tokens) -> (loss, flat_grads); the worker hot path."""
+
+    def grad_step(flat_params, tokens):
+        loss, grads = jax.value_and_grad(
+            lambda fp: loss_fn(cfg, fp, tokens)
+        )(flat_params)
+        return loss, grads
+
+    return grad_step
+
+
+def apply_update(flat_params, m, v, grads, lr_t):
+    """One fused-Adam step over the whole flat parameter vector.
+
+    ``lr_t`` is the bias-corrected step size, shape (1, 1) f32, computed by
+    the Rust coordinator as ``lr * sqrt(1 - b2^t) / (1 - b1^t)``.
+    """
+    return adam_update(flat_params, m, v, grads, lr_t)

@@ -1,0 +1,66 @@
+"""AOT path: HLO-text lowering round-trips and manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.kernels import shard_mean
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_tiny_grad_step():
+    cfg = M.CONFIGS["tiny"]
+    n = M.n_params(cfg)
+    fp = jax.ShapeDtypeStruct((n,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    text = aot.to_hlo_text(jax.jit(M.make_grad_step(cfg)).lower(fp, toks))
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # flat-params and tokens appear as entry parameters
+    assert f"f32[{n}]" in text
+    assert f"s32[{cfg.batch},{cfg.seq_len + 1}]" in text
+
+
+def test_hlo_text_lowering_shard_mean():
+    spec = jax.ShapeDtypeStruct((4, 256), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(shard_mean).lower(spec))
+    assert "ENTRY" in text and "f32[4,256]" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_integrity():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert "tiny" in man["variants"]
+    for name, v in man["variants"].items():
+        cfg = M.CONFIGS[name]
+        assert v["n_params"] == M.n_params(cfg)
+        for key in ("grad_step", "apply_update"):
+            path = os.path.join(ART, v[key])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                assert "ENTRY" in f.read()
+        spec = [(e["name"], tuple(e["shape"]), e["init"])
+                for e in v["param_spec"]]
+        assert spec == M.param_spec(cfg)
+    smoke = man["smoke"]
+    assert smoke["variant"] in man["variants"]
+    assert 0 < smoke["expected_loss"] < 20
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_smoke_record_reproducible():
+    """Re-derive the smoke ground truth; guards aot.py regressions."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    fresh = aot.smoke_record()
+    assert abs(fresh["expected_loss"] - man["smoke"]["expected_loss"]) < 1e-4
+    assert fresh["tokens_head"] == man["smoke"]["tokens_head"]

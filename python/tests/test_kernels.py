@@ -1,0 +1,190 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; allclose against ref.py. These tests are
+the core correctness signal for the compute hot path that ends up inside
+the AOT artifacts the Rust coordinator executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam_update, layernorm, linear, matmul, shard_mean
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=130)
+small_dims = st.integers(min_value=1, max_value=48)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("block", [32, 64, 128, 256])
+def test_matmul_block_shapes(block):
+    a = rand(7, (150, 90))
+    b = rand(8, (90, 70))
+    out = matmul(a, b, block_m=block, block_n=block, block_k=block)
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (128, 128, 128), (1, 200, 3),
+                                   (129, 1, 129), (8, 8, 8)])
+def test_matmul_edge_shapes(shape):
+    m, k, n = shape
+    a, b = rand(1, (m, k)), rand(2, (k, n))
+    np.testing.assert_allclose(
+        matmul(a, b), ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_bf16():
+    a = rand(3, (64, 64), jnp.bfloat16)
+    b = rand(4, (64, 64), jnp.bfloat16)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b), np.float32),
+        np.asarray(ref.matmul_ref(a, b), np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_matmul_shape_error():
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+
+
+# ---------------------------------------------------------------- linear vjp
+
+@settings(max_examples=15, deadline=None)
+@given(m=small_dims, k=small_dims, n=small_dims, seed=st.integers(0, 2**31 - 1))
+def test_linear_forward_and_vjp(m, k, n, seed):
+    x, w = rand(seed, (m, k)), rand(seed + 1, (k, n))
+    b, dy = rand(seed + 2, (n,)), rand(seed + 3, (m, n))
+    np.testing.assert_allclose(
+        linear(x, w, b), ref.linear_ref(x, w, b), rtol=2e-4, atol=2e-4)
+    _, vjp = jax.vjp(linear, x, w, b)
+    dx, dw, db = vjp(dy)
+    rx, rw, rb = ref.linear_grads_ref(x, w, b, dy)
+    np.testing.assert_allclose(dx, rx, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(dw, rw, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(db, rb, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- layernorm
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 300), d=st.integers(2, 160),
+       seed=st.integers(0, 2**31 - 1))
+def test_layernorm_matches_ref(rows, d, seed):
+    x = rand(seed, (rows, d))
+    gamma = rand(seed + 1, (d,)) * 0.1 + 1.0
+    beta = rand(seed + 2, (d,)) * 0.1
+    np.testing.assert_allclose(
+        layernorm(x, gamma, beta), ref.layernorm_ref(x, gamma, beta),
+        rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 80), d=st.integers(2, 96),
+       seed=st.integers(0, 2**31 - 1))
+def test_layernorm_vjp(rows, d, seed):
+    x = rand(seed, (rows, d))
+    gamma = rand(seed + 1, (d,)) * 0.1 + 1.0
+    beta = rand(seed + 2, (d,)) * 0.1
+    dy = rand(seed + 3, (rows, d))
+    _, vjp = jax.vjp(layernorm, x, gamma, beta)
+    dx, dg, db = vjp(dy)
+    rx, rg, rb = ref.layernorm_grads_ref(x, gamma, beta, dy)
+    np.testing.assert_allclose(dx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(dg, rg, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(db, rb, rtol=1e-3, atol=1e-3)
+
+
+def test_layernorm_invariances():
+    # shift/scale invariance of the normalization core
+    x = rand(0, (16, 32))
+    g, b = jnp.ones(32), jnp.zeros(32)
+    y1 = layernorm(x, g, b)
+    y2 = layernorm(x * 3.0 + 7.0, g, b)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)
+    # rows have ~zero mean, ~unit variance
+    np.testing.assert_allclose(jnp.mean(y1, axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.var(y1, axis=1), 1.0, rtol=1e-2)
+
+
+# ---------------------------------------------------------------- shard_mean
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 16), length=st.integers(1, 9000),
+       seed=st.integers(0, 2**31 - 1))
+def test_shard_mean_matches_ref(n, length, seed):
+    s = rand(seed, (n, length))
+    np.testing.assert_allclose(
+        shard_mean(s), ref.shard_mean_ref(s), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [256, 1024, 4096, 16384])
+def test_shard_mean_blocks(block):
+    s = rand(5, (8, 20000))
+    np.testing.assert_allclose(
+        shard_mean(s, block=block), ref.shard_mean_ref(s),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_shard_mean_is_permutation_invariant():
+    s = rand(6, (6, 512))
+    perm = jnp.asarray(np.random.default_rng(0).permutation(6))
+    np.testing.assert_allclose(
+        shard_mean(s), shard_mean(s[perm]), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- adam
+
+@settings(max_examples=20, deadline=None)
+@given(length=st.integers(1, 50000), seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-5, 1e-1))
+def test_adam_matches_ref(length, seed, lr):
+    p = rand(seed, (length,))
+    m = rand(seed + 1, (length,)) * 0.1
+    v = jnp.abs(rand(seed + 2, (length,))) * 0.01
+    g = rand(seed + 3, (length,))
+    lr_t = jnp.array([[lr]], jnp.float32)
+    out = adam_update(p, m, v, g, lr_t)
+    exp = ref.adam_update_ref(p, m, v, g, lr_t)
+    for o, e in zip(out, exp):
+        np.testing.assert_allclose(o, e, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_zero_grad_keeps_params_near():
+    p = rand(1, (1000,))
+    m = jnp.zeros(1000)
+    v = jnp.zeros(1000)
+    g = jnp.zeros(1000)
+    p2, m2, v2 = adam_update(p, m, v, g, jnp.array([[0.1]], jnp.float32))
+    np.testing.assert_allclose(p2, p, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(m2, 0.0, atol=1e-8)
+    np.testing.assert_allclose(v2, 0.0, atol=1e-8)
+
+
+def test_adam_descends_quadratic():
+    # minimizing 0.5*p^2 => grad = p; iterating must shrink |p|
+    p = rand(2, (100,))
+    m = jnp.zeros(100)
+    v = jnp.zeros(100)
+    lr = jnp.array([[0.05]], jnp.float32)
+    n0 = float(jnp.linalg.norm(p))
+    for _ in range(50):
+        p, m, v = adam_update(p, m, v, p, lr)
+    assert float(jnp.linalg.norm(p)) < 0.5 * n0

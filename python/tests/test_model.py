@@ -1,0 +1,158 @@
+"""L2 correctness: transformer model, loss, gradients, deterministic init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(M.lcg_init(CFG, seed=0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jnp.asarray(M.lcg_tokens(CFG, seed=0))
+
+
+def test_param_spec_is_deterministic():
+    s1, s2 = M.param_spec(CFG), M.param_spec(CFG)
+    assert s1 == s2
+    assert s1[0][0] == "tok_emb"
+    assert s1[-1][0] == "head_b"
+
+
+def test_n_params_matches_spec(params):
+    assert params.shape == (M.n_params(CFG),)
+
+
+def test_unflatten_roundtrip(params):
+    t = M._unflatten(CFG, params)
+    flat = jnp.concatenate([t[n].reshape(-1) for n, _, _ in M.param_spec(CFG)])
+    np.testing.assert_array_equal(flat, params)
+
+
+def test_lcg_init_reproducible():
+    a = M.lcg_init(CFG, seed=0)
+    b = M.lcg_init(CFG, seed=0)
+    np.testing.assert_array_equal(a, b)
+    c = M.lcg_init(CFG, seed=1)
+    assert np.any(a != c)
+
+
+def test_lcg_init_respects_init_kinds():
+    flat = M.lcg_init(CFG, seed=0)
+    t = M._unflatten(CFG, jnp.asarray(flat))
+    np.testing.assert_array_equal(t["layer0.ln1_g"], 1.0)
+    np.testing.assert_array_equal(t["layer0.bqkv"], 0.0)
+    emb = np.asarray(t["tok_emb"])
+    assert np.abs(emb).max() <= 0.02 + 1e-7
+    assert emb.std() > 0.005
+
+
+def test_lcg_tokens_in_range():
+    toks = M.lcg_tokens(CFG, seed=0)
+    assert toks.shape == (CFG.batch, CFG.seq_len + 1)
+    assert toks.min() >= 0 and toks.max() < CFG.vocab
+
+
+def test_forward_shapes(params, tokens):
+    p = M._unflatten(CFG, params)
+    logits = M.forward(CFG, p, tokens[:, :-1])
+    assert logits.shape == (CFG.batch * CFG.seq_len, CFG.vocab)
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    # with tiny init, logits ~ 0 => loss ~ ln(vocab)
+    loss = M.loss_fn(CFG, params, tokens)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.05
+
+
+def test_causality(params, tokens):
+    """Changing a future token must not affect earlier logits."""
+    p = M._unflatten(CFG, params)
+    inp = tokens[:, :-1]
+    logits1 = M.forward(CFG, p, inp)
+    inp2 = inp.at[:, -1].set((inp[:, -1] + 1) % CFG.vocab)
+    logits2 = M.forward(CFG, p, inp2)
+    b, s = inp.shape
+    l1 = logits1.reshape(b, s, -1)[:, : s - 1]
+    l2 = logits2.reshape(b, s, -1)[:, : s - 1]
+    np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+
+
+def test_grads_finite_and_nonzero(params, tokens):
+    loss, grads = jax.jit(M.make_grad_step(CFG))(params, tokens)
+    g = np.asarray(grads)
+    assert np.isfinite(g).all()
+    assert np.linalg.norm(g) > 1e-3
+    assert np.isfinite(float(loss))
+
+
+def test_grad_matches_native_jax(params, tokens):
+    """Pallas-kernel gradients == gradients of an all-jnp reference model."""
+    from compile.kernels import ref
+
+    def ref_loss(flat):
+        p = M._unflatten(CFG, flat)
+        b, s = CFG.batch, CFG.seq_len
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        d, h, dh = CFG.d_model, CFG.n_heads, CFG.head_dim
+        x = p["tok_emb"][inp] + p["pos_emb"][None, :s, :]
+        mask = jnp.where(jnp.tril(jnp.ones((s, s), bool)), 0.0, -1e9)[None, None]
+        for l in range(CFG.n_layers):
+            pf = f"layer{l}."
+            xf = x.reshape(b * s, d)
+            hln = ref.layernorm_ref(xf, p[pf + "ln1_g"], p[pf + "ln1_b"])
+            qkv = ref.linear_ref(hln, p[pf + "wqkv"], p[pf + "bqkv"])
+            qkv = qkv.reshape(b, s, 3, h, dh)
+            q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh) + mask
+            pr = jax.nn.softmax(sc, axis=-1)
+            ctx = jnp.einsum("bhqk,bkhd->bqhd", pr, v).reshape(b * s, d)
+            x = x + ref.linear_ref(ctx, p[pf + "wo"], p[pf + "bo"]).reshape(b, s, d)
+            xf = x.reshape(b * s, d)
+            h2 = ref.layernorm_ref(xf, p[pf + "ln2_g"], p[pf + "ln2_b"])
+            mlp = ref.linear_ref(
+                jax.nn.gelu(ref.linear_ref(h2, p[pf + "w1"], p[pf + "b1"])),
+                p[pf + "w2"], p[pf + "b2"])
+            x = x + mlp.reshape(b, s, d)
+        xf = ref.layernorm_ref(x.reshape(b * s, d), p["lnf_g"], p["lnf_b"])
+        logits = ref.linear_ref(xf, p["head_w"], p["head_b"])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt.reshape(-1)[:, None], axis=-1)
+        return jnp.mean(nll)
+
+    loss_p, grads_p = jax.jit(M.make_grad_step(CFG))(params, tokens)
+    loss_r, grads_r = jax.jit(jax.value_and_grad(ref_loss))(params)
+    assert abs(float(loss_p) - float(loss_r)) < 1e-4
+    np.testing.assert_allclose(
+        np.asarray(grads_p), np.asarray(grads_r), rtol=5e-3, atol=5e-4)
+
+
+def test_training_reduces_loss(params, tokens):
+    gs = jax.jit(M.make_grad_step(CFG))
+    au = jax.jit(M.apply_update)
+    p, m, v = params, jnp.zeros_like(params), jnp.zeros_like(params)
+    loss0 = None
+    lr = jnp.array([[1e-2]], jnp.float32)
+    for i in range(15):
+        loss, g = gs(p, tokens)
+        if loss0 is None:
+            loss0 = float(loss)
+        p, m, v = au(p, m, v, g, lr)
+    assert float(loss) < loss0 - 1.0
+
+
+def test_grad_step_batch_invariance(params):
+    """Duplicating the batch must not change loss or grads (mean reduction)."""
+    toks = M.lcg_tokens(CFG, seed=3)[:2]
+    dup = np.concatenate([toks, toks], axis=0)
+    l1 = M.loss_fn(CFG, params, jnp.asarray(dup))
+    l2 = M.loss_fn(CFG, params, jnp.asarray(np.concatenate([toks, toks])))
+    assert abs(float(l1) - float(l2)) < 1e-6

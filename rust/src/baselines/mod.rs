@@ -1,0 +1,168 @@
+//! Comparison systems (§5): Siren, Cirrus, LambdaML, MLCD, IaaS.
+//!
+//! Each baseline is characterized by the axes the paper varies:
+//! synchronization scheme, invocation pattern, substrate (FaaS vs VM),
+//! adaptivity (does it re-optimize resources when the workload changes?)
+//! and how/whether it profiles before training. The shared simulation
+//! driver in [`crate::coordinator::simrun`] interprets these descriptors,
+//! so every figure compares systems under identical workloads.
+
+use crate::faas::InvokeMode;
+use crate::sync::Scheme;
+
+/// Which system runs the training job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// this paper: hierarchical sync, task scheduler, adaptive BO
+    Smlt,
+    /// Wang et al.: serverless PS via cloud storage, fixed resources
+    /// (their RL tunes worker count offline; modeled as fixed + central
+    /// storage sync, per §2.2/Fig 1)
+    Siren,
+    /// Carreira et al.: serverless workers + dedicated PS endpoint
+    Cirrus,
+    /// Jiang et al.: serverless ScatterReduce via object store, fixed
+    /// user-chosen resources, async function-to-function invocation
+    LambdaMl,
+    /// Yi et al.: VM-based MLaaS; Bayesian optimizer runs *once* before
+    /// training (profiling on VMs is expensive), then fixed VMs
+    Mlcd,
+    /// plain VM cluster, user-managed, always-on
+    Iaas,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Smlt => "SMLT",
+            SystemKind::Siren => "Siren",
+            SystemKind::Cirrus => "Cirrus",
+            SystemKind::LambdaMl => "LambdaML",
+            SystemKind::Mlcd => "MLCD",
+            SystemKind::Iaas => "IaaS",
+        }
+    }
+
+    pub fn all() -> [SystemKind; 6] {
+        [
+            SystemKind::Smlt,
+            SystemKind::Siren,
+            SystemKind::Cirrus,
+            SystemKind::LambdaMl,
+            SystemKind::Mlcd,
+            SystemKind::Iaas,
+        ]
+    }
+
+    /// Serverless systems run on the FaaS substrate; MLCD/IaaS on VMs.
+    pub fn is_serverless(&self) -> bool {
+        !matches!(self, SystemKind::Mlcd | SystemKind::Iaas)
+    }
+
+    /// Gradient-synchronization scheme (serverless systems only; VM
+    /// systems use in-cluster ring allreduce over the VM NIC).
+    pub fn scheme(&self) -> Option<Scheme> {
+        match self {
+            SystemKind::Smlt => Some(Scheme::SmltHierarchical),
+            SystemKind::Siren => Some(Scheme::SirenCentral),
+            SystemKind::Cirrus => Some(Scheme::CirrusPs),
+            SystemKind::LambdaMl => Some(Scheme::LambdaMlScatterReduce),
+            _ => None,
+        }
+    }
+
+    /// How workers get launched (determines which FaaS quirks bite).
+    pub fn invoke_mode(&self) -> InvokeMode {
+        match self {
+            SystemKind::Smlt => InvokeMode::DirectTracked,
+            SystemKind::LambdaMl => InvokeMode::AsyncChained,
+            SystemKind::Siren | SystemKind::Cirrus => InvokeMode::StepFunctionsMap,
+            _ => InvokeMode::DirectTracked,
+        }
+    }
+
+    /// Does the system re-optimize resources when training dynamics
+    /// change (batch size / model size)? Only SMLT (§3.1).
+    pub fn adaptive(&self) -> bool {
+        matches!(self, SystemKind::Smlt)
+    }
+
+    /// Does the system profile/optimize before training at all?
+    pub fn optimizes_initial_config(&self) -> bool {
+        matches!(self, SystemKind::Smlt | SystemKind::Mlcd)
+    }
+
+    /// Does an external task scheduler amortize init across the duration
+    /// cap (§4.1)? Without it, every restart pays full re-init.
+    pub fn amortizes_init(&self) -> bool {
+        matches!(self, SystemKind::Smlt)
+    }
+
+    /// Honors user deadline/budget goals?
+    pub fn user_centric(&self) -> bool {
+        matches!(self, SystemKind::Smlt)
+    }
+
+    /// VM systems keep instances running between bursts (idle cost);
+    /// serverless pays per use.
+    pub fn pays_idle(&self) -> bool {
+        matches!(self, SystemKind::Mlcd | SystemKind::Iaas)
+    }
+}
+
+/// Ring-allreduce time on a VM cluster (the MLCD/IaaS sync path):
+/// 2 (n-1)/n * G bytes per worker over the VM NIC.
+pub fn vm_allreduce_s(grad_bytes: u64, n: u32, nic_bps: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let vol = 2.0 * (n as f64 - 1.0) / n as f64 * grad_bytes as f64;
+    0.001 * (n as f64).log2().ceil() + vol / nic_bps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_smlt_is_fully_adaptive_and_user_centric() {
+        for s in SystemKind::all() {
+            assert_eq!(s.adaptive(), s == SystemKind::Smlt);
+            assert_eq!(s.user_centric(), s == SystemKind::Smlt);
+        }
+    }
+
+    #[test]
+    fn serverless_vs_vm_split() {
+        assert!(SystemKind::Smlt.is_serverless());
+        assert!(SystemKind::LambdaMl.is_serverless());
+        assert!(!SystemKind::Mlcd.is_serverless());
+        assert!(!SystemKind::Iaas.is_serverless());
+        assert!(SystemKind::Mlcd.scheme().is_none());
+        assert!(SystemKind::Smlt.scheme().is_some());
+    }
+
+    #[test]
+    fn vm_systems_pay_idle() {
+        assert!(SystemKind::Iaas.pays_idle());
+        assert!(!SystemKind::Smlt.pays_idle());
+    }
+
+    #[test]
+    fn allreduce_scales_gently() {
+        let g = 100_000_000;
+        let bw = 10e9 / 8.0;
+        let t2 = vm_allreduce_s(g, 2, bw);
+        let t16 = vm_allreduce_s(g, 16, bw);
+        // ring volume asymptotes at 2G: 16 workers < 2x the 2-worker time
+        assert!(t16 < t2 * 2.0);
+        assert_eq!(vm_allreduce_s(g, 1, bw), 0.0);
+    }
+
+    #[test]
+    fn mlcd_optimizes_once_lambdaml_never() {
+        assert!(SystemKind::Mlcd.optimizes_initial_config());
+        assert!(!SystemKind::LambdaMl.optimizes_initial_config());
+        assert!(!SystemKind::Mlcd.adaptive());
+    }
+}

@@ -1,0 +1,31 @@
+//! Memory-leak regression check for the PJRT execution path.
+//!
+//! The `xla` crate's `execute(Literal...)` leaks its internal input
+//! conversions (~one input set per call); `runtime::Engine` therefore
+//! routes through explicit buffers + `execute_b`. This binary loops the
+//! two hot executables and prints RSS — flat RSS = healthy.
+//! (EXPERIMENTS.md §Perf L3, iteration 7.)
+
+use smlt::runtime::{params, Engine, Manifest};
+fn rss_mb() -> u64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines().find(|l| l.starts_with("VmRSS")).unwrap()
+        .split_whitespace().nth(1).unwrap().parse::<u64>().unwrap() / 1024
+}
+fn main() {
+    let mut eng = Engine::new(Manifest::load(Manifest::default_root()).unwrap()).unwrap();
+    let spec = eng.manifest().variant("small").unwrap().clone();
+    let p = params::init_params(&spec, 0);
+    let toks = params::gen_tokens(&spec, 0);
+    eng.warm("small").unwrap();
+    println!("start rss {} MB", rss_mb());
+    for i in 0..30 {
+        let _ = eng.grad_step("small", &p, &toks).unwrap();
+        if i % 10 == 9 { println!("grad_step {}: rss {} MB", i, rss_mb()); }
+    }
+    let zeros = vec![0.0f32; spec.n_params];
+    for i in 0..30 {
+        let _ = eng.apply_update("small", &p, &zeros, &zeros, &p, 1e-3).unwrap();
+        if i % 10 == 9 { println!("apply {}: rss {} MB", i, rss_mb()); }
+    }
+}

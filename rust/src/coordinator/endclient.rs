@@ -1,0 +1,127 @@
+//! End client (§4.1, Table 1 ①): artifact manager, resource manager and
+//! the public entry point a user drives a training job through.
+//!
+//! The artifact manager stages code + data into the object store; the
+//! resource manager owns the deployment configuration and consults the
+//! Bayesian optimizer; the task scheduler (in [`crate::scheduler`]) runs
+//! the workers. For real-mode jobs the "cloud" is this process: artifacts
+//! are the AOT HLO files, workers are threads, the parameter store is
+//! in-process.
+
+use crate::optimizer::Config;
+use crate::runtime::{Manifest, SharedEngine};
+use crate::worker::{run_worker_fleet, FleetConfig, FleetResult, InvocationBudget};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Artifact manager (①a): resolves and validates the deployed artifacts.
+pub struct ArtifactManager {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactManager {
+    /// "Upload" = verify the AOT bundle exists and parse its manifest
+    /// (the build step `make artifacts` is the actual packaging).
+    pub fn stage(root: impl Into<PathBuf>) -> Result<ArtifactManager> {
+        let root = root.into();
+        let manifest = Manifest::load(&root)
+            .with_context(|| format!("staging artifacts from {root:?}"))?;
+        Ok(ArtifactManager { root, manifest })
+    }
+
+    pub fn default_stage() -> Result<ArtifactManager> {
+        Self::stage(Manifest::default_root())
+    }
+}
+
+/// Resource manager (①b): holds the current deployment configuration.
+pub struct ResourceManager {
+    pub config: Config,
+    pub reconfigurations: u32,
+}
+
+impl ResourceManager {
+    pub fn new(initial: Config) -> ResourceManager {
+        ResourceManager { config: initial, reconfigurations: 0 }
+    }
+
+    /// Apply a new configuration (from the optimizer or a user override).
+    pub fn reconfigure(&mut self, c: Config) -> bool {
+        if c != self.config {
+            self.config = c;
+            self.reconfigurations += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// A real-mode training job over the AOT artifacts.
+pub struct EndClient {
+    pub artifacts: ArtifactManager,
+    pub engine: SharedEngine,
+    pub resources: ResourceManager,
+}
+
+impl EndClient {
+    pub fn new(artifact_root: Option<PathBuf>, workers: u32) -> Result<EndClient> {
+        let artifacts = match artifact_root {
+            Some(r) => ArtifactManager::stage(r)?,
+            None => ArtifactManager::default_stage()?,
+        };
+        let engine = SharedEngine::new(artifacts.manifest.clone())?;
+        Ok(EndClient {
+            artifacts,
+            engine,
+            resources: ResourceManager::new(Config { workers, mem_mb: 3072 }),
+        })
+    }
+
+    /// Train `variant` for `total_iters` with the current worker fleet,
+    /// real PJRT execution + real hierarchical sync, under serverless
+    /// lifecycle rules (`iters_per_invocation` bounds each "function").
+    pub fn train(
+        &mut self,
+        variant: &str,
+        total_iters: u64,
+        lr: f64,
+        iters_per_invocation: u64,
+        seed: u64,
+    ) -> Result<FleetResult> {
+        let cfg = FleetConfig {
+            variant: variant.to_string(),
+            n_workers: self.resources.config.workers as usize,
+            total_iters,
+            lr,
+            seed,
+            budget: InvocationBudget { iters_per_invocation },
+            ckpt_every: (iters_per_invocation / 2).max(1),
+        };
+        run_worker_fleet(self.engine.clone(), cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_manager_counts_reconfigurations() {
+        let mut rm = ResourceManager::new(Config { workers: 4, mem_mb: 1024 });
+        assert!(!rm.reconfigure(Config { workers: 4, mem_mb: 1024 }));
+        assert!(rm.reconfigure(Config { workers: 8, mem_mb: 1024 }));
+        assert_eq!(rm.reconfigurations, 1);
+    }
+
+    #[test]
+    fn artifact_manager_requires_manifest() {
+        assert!(ArtifactManager::stage("/nonexistent").is_err());
+        let root = Manifest::default_root();
+        if root.join("manifest.json").exists() {
+            let am = ArtifactManager::stage(root).unwrap();
+            assert!(am.manifest.variants.contains_key("tiny"));
+        }
+    }
+}

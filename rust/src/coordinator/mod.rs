@@ -1,0 +1,9 @@
+//! End client + workloads + the shared simulation driver (§4.1, §5).
+
+pub mod endclient;
+pub mod simrun;
+pub mod workload;
+
+pub use endclient::{ArtifactManager, EndClient, ResourceManager};
+pub use simrun::{simulate, Goal, IterModel, SimJob, SimOutcome};
+pub use workload::{Phase, Workloads};

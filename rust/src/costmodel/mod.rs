@@ -1,0 +1,165 @@
+//! Cloud cost model: Lambda GB-seconds, S3 requests, ECS container-hours,
+//! EC2 VM-hours (us-east-1 list prices, 2022-era, matching the paper).
+//!
+//! Every simulated deployment accumulates a [`CostLedger`]; Figs 3, 9, 10,
+//! 11 and the 3x headline cost claim are computed from it.
+
+/// Pricing constants (USD). Public so benches can ablate.
+#[derive(Clone, Debug)]
+pub struct Pricing {
+    /// Lambda: $ per GB-second of configured memory
+    pub lambda_gb_s: f64,
+    /// Lambda: $ per request
+    pub lambda_request: f64,
+    /// S3: $ per GET / per PUT request
+    pub s3_get: f64,
+    pub s3_put: f64,
+    /// S3 storage $/GB-month (negligible for training runs but modeled)
+    pub s3_gb_month: f64,
+    /// Fargate/ECS: $ per vCPU-hour and per GB-hour (parameter store)
+    pub ecs_vcpu_h: f64,
+    pub ecs_gb_h: f64,
+    /// EC2 on-demand $/h for the IaaS/MLCD baseline VM (m5.2xlarge-like:
+    /// 8 vCPU / 32 GB)
+    pub vm_hour: f64,
+    pub vm_vcpus: f64,
+}
+
+impl Default for Pricing {
+    fn default() -> Self {
+        Pricing {
+            lambda_gb_s: 0.0000166667,
+            lambda_request: 0.20 / 1e6,
+            s3_get: 0.0004 / 1000.0,
+            s3_put: 0.005 / 1000.0,
+            s3_gb_month: 0.023,
+            ecs_vcpu_h: 0.04048,
+            ecs_gb_h: 0.004445,
+            vm_hour: 0.384,
+            vm_vcpus: 8.0,
+        }
+    }
+}
+
+impl Pricing {
+    /// Lambda compute cost for `n` workers x `mem_mb` x `seconds` each.
+    pub fn lambda_cost(&self, n: u32, mem_mb: u32, seconds: f64) -> f64 {
+        let gb = mem_mb as f64 / 1024.0;
+        n as f64 * (gb * seconds * self.lambda_gb_s + self.lambda_request)
+    }
+
+    /// Parameter-store cost: `containers` Fargate tasks (2 vCPU / 4 GB
+    /// each) alive for `seconds`.
+    pub fn param_store_cost(&self, containers: u32, seconds: f64) -> f64 {
+        let h = seconds / 3600.0;
+        containers as f64 * h * (2.0 * self.ecs_vcpu_h + 4.0 * self.ecs_gb_h)
+    }
+
+    /// VM cost for `n` instances alive `seconds` (billed per second like
+    /// modern EC2, with the hourly list rate).
+    pub fn vm_cost(&self, n: u32, seconds: f64) -> f64 {
+        n as f64 * seconds / 3600.0 * self.vm_hour
+    }
+}
+
+/// Accumulated cost of one training run / experiment.
+#[derive(Clone, Debug, Default)]
+pub struct CostLedger {
+    pub lambda_compute: f64,
+    pub lambda_requests: u64,
+    pub s3_gets: u64,
+    pub s3_puts: u64,
+    pub param_store: f64,
+    pub vm: f64,
+    /// profiling-phase share of the above (reported separately in Figs 9-11)
+    pub profiling: f64,
+}
+
+impl CostLedger {
+    pub fn add_lambda(&mut self, p: &Pricing, n: u32, mem_mb: u32, seconds: f64) {
+        self.lambda_compute += p.lambda_cost(n, mem_mb, seconds);
+        self.lambda_requests += n as u64;
+    }
+
+    pub fn add_s3(&mut self, gets: u64, puts: u64) {
+        self.s3_gets += gets;
+        self.s3_puts += puts;
+    }
+
+    pub fn add_param_store(&mut self, p: &Pricing, containers: u32, seconds: f64) {
+        self.param_store += p.param_store_cost(containers, seconds);
+    }
+
+    pub fn add_vm(&mut self, p: &Pricing, n: u32, seconds: f64) {
+        self.vm += p.vm_cost(n, seconds);
+    }
+
+    /// Mark everything accumulated so far as profiling overhead.
+    pub fn mark_profiling(&mut self, p: &Pricing) {
+        self.profiling = self.total(p);
+    }
+
+    pub fn total(&self, p: &Pricing) -> f64 {
+        self.lambda_compute
+            + self.s3_gets as f64 * p.s3_get
+            + self.s3_puts as f64 * p.s3_put
+            + self.param_store
+            + self.vm
+    }
+
+    /// Training-only share (total minus the profiling prefix).
+    pub fn training_only(&self, p: &Pricing) -> f64 {
+        (self.total(p) - self.profiling).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_pricing_reference_points() {
+        let p = Pricing::default();
+        // 1 GB for 1 second = $0.0000166667 (+1 request)
+        let c = p.lambda_cost(1, 1024, 1.0);
+        assert!((c - (0.0000166667 + 0.2e-6)).abs() < 1e-12);
+        // scaling: 10 workers at 10 GB for 1 h ~ $6.0
+        let c = p.lambda_cost(10, 10_240, 3600.0);
+        assert!((c - 6.0).abs() < 0.1, "got {c}");
+    }
+
+    #[test]
+    fn vm_cheaper_when_fully_utilized_lambda_cheaper_when_idle() {
+        let p = Pricing::default();
+        // equal raw capacity: 1 VM (8 vCPU) vs 8 Lambdas at 1769 MB (1 vCPU)
+        let vm = p.vm_cost(1, 3600.0);
+        let lam = p.lambda_cost(8, 1769, 3600.0);
+        assert!(vm < lam, "fully-utilized VM should be cheaper: {vm} vs {lam}");
+        // ...but a 24 h mostly-idle online workload (5% duty cycle)
+        let vm_idle = p.vm_cost(1, 24.0 * 3600.0);
+        let lam_burst = p.lambda_cost(8, 1769, 0.05 * 24.0 * 3600.0);
+        assert!(lam_burst < vm_idle, "{lam_burst} vs {vm_idle}");
+    }
+
+    #[test]
+    fn ledger_accumulates_and_separates_profiling() {
+        let p = Pricing::default();
+        let mut l = CostLedger::default();
+        l.add_lambda(&p, 4, 2048, 100.0);
+        l.add_s3(1000, 100);
+        l.mark_profiling(&p);
+        let after_profiling = l.total(&p);
+        l.add_lambda(&p, 16, 3072, 500.0);
+        l.add_param_store(&p, 2, 500.0);
+        assert!(l.total(&p) > after_profiling);
+        assert!((l.profiling - after_profiling).abs() < 1e-12);
+        assert!(l.training_only(&p) > 0.0);
+    }
+
+    #[test]
+    fn param_store_cost_scales_with_time_and_containers() {
+        let p = Pricing::default();
+        assert!(p.param_store_cost(2, 3600.0) > p.param_store_cost(1, 3600.0));
+        assert!((p.param_store_cost(1, 3600.0) - (2.0 * p.ecs_vcpu_h + 4.0 * p.ecs_gb_h)).abs() < 1e-12);
+    }
+}

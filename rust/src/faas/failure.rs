@@ -1,0 +1,82 @@
+//! Failure injection for the fault-tolerance path (§4.1).
+//!
+//! The paper's protocol: a worker that successfully uploads its gradients
+//! sets a flag in its output; a missing flag marks the worker failed and
+//! the task scheduler restarts it. The injector decides *when* workers
+//! fail; both the simulator and the real-mode worker threads consult it.
+
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct FailureInjector {
+    rng: Pcg,
+    /// per-second hazard rate of a running worker crashing
+    pub hazard_per_s: f64,
+    pub injected: u64,
+}
+
+impl FailureInjector {
+    pub fn new(hazard_per_s: f64, seed: u64) -> Self {
+        FailureInjector { rng: Pcg::new(seed ^ 0xFA11), hazard_per_s, injected: 0 }
+    }
+
+    /// No failures (hazard 0).
+    pub fn none() -> Self {
+        Self::new(0.0, 0)
+    }
+
+    /// Does a worker running for `dt` seconds fail during that window?
+    pub fn fails_within(&mut self, dt: f64) -> bool {
+        if self.hazard_per_s <= 0.0 {
+            return false;
+        }
+        let p = 1.0 - (-self.hazard_per_s * dt).exp();
+        let hit = self.rng.next_f64() < p;
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// Sample a time-to-failure (s); `None` when failures are disabled.
+    pub fn sample_ttf(&mut self) -> Option<f64> {
+        if self.hazard_per_s <= 0.0 {
+            None
+        } else {
+            Some(self.rng.exponential(self.hazard_per_s))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_hazard_never_fails() {
+        let mut f = FailureInjector::none();
+        for _ in 0..1000 {
+            assert!(!f.fails_within(1e6));
+        }
+        assert_eq!(f.injected, 0);
+        assert!(f.sample_ttf().is_none());
+    }
+
+    #[test]
+    fn hazard_rate_calibrated() {
+        let mut f = FailureInjector::new(0.01, 42);
+        let n = 20_000;
+        let fails = (0..n).filter(|_| f.fails_within(10.0)).count();
+        let expect = (1.0 - (-0.1f64).exp()) * n as f64; // ~9.5%
+        let ratio = fails as f64 / expect;
+        assert!((0.9..1.1).contains(&ratio), "fails={fails} expect~{expect}");
+    }
+
+    #[test]
+    fn ttf_mean_close_to_inverse_rate() {
+        let mut f = FailureInjector::new(0.05, 7);
+        let n = 20_000;
+        let mean = (0..n).map(|_| f.sample_ttf().unwrap()).sum::<f64>() / n as f64;
+        assert!((mean - 20.0).abs() < 1.0, "mean ttf {mean}");
+    }
+}

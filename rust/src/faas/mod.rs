@@ -1,0 +1,15 @@
+//! Serverless-platform substrate: AWS-Lambda-like semantics.
+//!
+//! The paper runs on AWS Lambda; we model its documented behaviour
+//! (DESIGN.md §3): memory as the single resource knob (128 MB – 10 GB,
+//! 1 MB granularity), CPU and network scaled proportionally to memory,
+//! a hard execution-duration cap (15 min), cold-start delays, per-function
+//! concurrency limits, and the two anomalies §4.1 calls out — undocumented
+//! async-invocation delays and Step-Functions 'Map' concurrency throttling.
+//! Failure injection drives the fault-tolerance path of the task scheduler.
+
+pub mod failure;
+pub mod platform;
+
+pub use failure::FailureInjector;
+pub use platform::{FaasLimits, FaasPlatform, Invocation, InvokeMode};

@@ -1,0 +1,248 @@
+//! Lambda-like platform model: resources, cold starts, invocation quirks.
+
+use crate::util::rng::Pcg;
+
+/// Platform limits & scaling constants (AWS Lambda defaults; all public so
+/// benches can ablate them).
+#[derive(Clone, Debug)]
+pub struct FaasLimits {
+    /// minimum / maximum configurable memory (MB), 1 MB granularity
+    pub mem_min_mb: u32,
+    pub mem_max_mb: u32,
+    /// hard per-invocation execution cap (seconds); 900 s on AWS Lambda
+    pub duration_limit_s: f64,
+    /// memory at which the function gets one full vCPU (AWS: ~1769 MB)
+    pub mb_per_vcpu: f64,
+    /// maximum vCPUs a single function can reach (AWS: 6 at 10 GB)
+    pub max_vcpus: f64,
+    /// network bandwidth at max memory (bytes/s); scales ~linearly with
+    /// memory and saturates around 600 Mbps on Lambda
+    pub net_bw_max_bps: f64,
+    /// account-level concurrent-execution limit
+    pub concurrency_limit: u32,
+    /// local ephemeral storage (bytes) — /tmp, 512 MB default
+    pub ephemeral_bytes: u64,
+    /// median cold-start (s) and lognormal sigma
+    pub cold_start_median_s: f64,
+    pub cold_start_sigma: f64,
+    /// probability that an *async* invocation hits the undocumented delay
+    /// the paper observed on AWS Lambda (§4.1), and its magnitude (s)
+    pub async_anomaly_prob: f64,
+    pub async_anomaly_s: f64,
+    /// effective concurrency cap of a Step-Functions 'Map' state even when
+    /// configured as 'infinite' (the paper's footnote 6; AWS forum #311362)
+    pub stepfn_map_concurrency: u32,
+}
+
+impl Default for FaasLimits {
+    fn default() -> Self {
+        FaasLimits {
+            mem_min_mb: 128,
+            mem_max_mb: 10_240,
+            duration_limit_s: 900.0,
+            mb_per_vcpu: 1769.0,
+            max_vcpus: 6.0,
+            net_bw_max_bps: 600e6 / 8.0, // 600 Mbps
+            concurrency_limit: 1000,
+            ephemeral_bytes: 512 << 20,
+            cold_start_median_s: 0.35,
+            cold_start_sigma: 0.45,
+            async_anomaly_prob: 0.08,
+            async_anomaly_s: 2.5,
+            stepfn_map_concurrency: 40,
+        }
+    }
+}
+
+/// How workers are launched — direct sync invocation (SMLT's task
+/// scheduler), async function-to-function (LambdaML), or a Step-Functions
+/// 'Map' state. The mode determines which platform quirks apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InvokeMode {
+    /// independent synchronous invocations tracked by an external scheduler
+    DirectTracked,
+    /// function invokes functions asynchronously (hits the async anomaly)
+    AsyncChained,
+    /// Step Functions 'Map' fan-out (hits the hidden concurrency cap)
+    StepFunctionsMap,
+}
+
+/// Result of simulating one invocation launch.
+#[derive(Clone, Copy, Debug)]
+pub struct Invocation {
+    /// delay from request to the function body starting (cold start +
+    /// platform-added invocation latency)
+    pub startup_delay_s: f64,
+    /// true if this invocation was queued behind a concurrency limit
+    pub throttled: bool,
+}
+
+/// The simulated platform. Deterministic given its seed.
+pub struct FaasPlatform {
+    pub limits: FaasLimits,
+    rng: Pcg,
+    /// currently running function instances
+    running: u32,
+    pub total_invocations: u64,
+    pub total_throttled: u64,
+}
+
+impl FaasPlatform {
+    pub fn new(limits: FaasLimits, seed: u64) -> Self {
+        FaasPlatform { limits, rng: Pcg::new(seed), running: 0, total_invocations: 0, total_throttled: 0 }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(FaasLimits::default(), seed)
+    }
+
+    /// Clamp a requested memory size to the platform's valid range.
+    pub fn clamp_mem(&self, mem_mb: u32) -> u32 {
+        mem_mb.clamp(self.limits.mem_min_mb, self.limits.mem_max_mb)
+    }
+
+    /// vCPUs available at `mem_mb` (Lambda scales CPU with memory).
+    pub fn vcpus(&self, mem_mb: u32) -> f64 {
+        (mem_mb as f64 / self.limits.mb_per_vcpu).min(self.limits.max_vcpus)
+    }
+
+    /// Per-function network bandwidth (bytes/s) at `mem_mb`.
+    pub fn net_bw_bps(&self, mem_mb: u32) -> f64 {
+        let frac = (mem_mb as f64 / self.limits.mem_max_mb as f64).min(1.0);
+        // bandwidth ramps with memory but has a floor (~35 Mbps at 128 MB)
+        (self.limits.net_bw_max_bps * frac).max(35e6 / 8.0)
+    }
+
+    /// Simulate launching `n` workers under `mode`; returns per-worker
+    /// invocation records (startup delays reflect cold starts, anomalies
+    /// and concurrency throttling).
+    pub fn invoke_workers(&mut self, n: u32, mode: InvokeMode) -> Vec<Invocation> {
+        let mut out = Vec::with_capacity(n as usize);
+        for i in 0..n {
+            self.total_invocations += 1;
+            let mut delay = self.cold_start_s();
+            let mut throttled = false;
+
+            match mode {
+                InvokeMode::DirectTracked => {}
+                InvokeMode::AsyncChained => {
+                    if self.rng.next_f64() < self.limits.async_anomaly_prob {
+                        delay += self.rng.uniform(0.5, 1.0) * self.limits.async_anomaly_s;
+                    }
+                }
+                InvokeMode::StepFunctionsMap => {
+                    let cap = self.limits.stepfn_map_concurrency;
+                    if i >= cap {
+                        // queued behind the hidden Map concurrency window;
+                        // batches of `cap` launch ~0.8 s apart
+                        delay += 0.8 * (i / cap) as f64;
+                        throttled = true;
+                    }
+                }
+            }
+            if self.running + i >= self.limits.concurrency_limit {
+                delay += 1.0; // account-level throttle retry
+                throttled = true;
+            }
+            if throttled {
+                self.total_throttled += 1;
+            }
+            out.push(Invocation { startup_delay_s: delay, throttled });
+        }
+        self.running += n.min(self.limits.concurrency_limit);
+        out
+    }
+
+    /// Workers finished; release concurrency.
+    pub fn release_workers(&mut self, n: u32) {
+        self.running = self.running.saturating_sub(n);
+    }
+
+    /// One cold-start sample (lognormal around the median).
+    pub fn cold_start_s(&mut self) -> f64 {
+        let mu = self.limits.cold_start_median_s.ln();
+        self.rng.lognormal(mu, self.limits.cold_start_sigma)
+    }
+
+    /// How much of `work_s` of function time fits before the duration cap
+    /// forces a restart: returns the number of full invocations needed for
+    /// `work_s` seconds of useful work when each invocation also pays
+    /// `init_s` of initialization.
+    pub fn invocations_needed(&self, work_s: f64, init_s: f64) -> u32 {
+        let useful = (self.limits.duration_limit_s - init_s).max(1.0);
+        (work_s / useful).ceil().max(1.0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_scaling_monotone() {
+        let p = FaasPlatform::with_seed(1);
+        assert!(p.vcpus(1769) > 0.99 && p.vcpus(1769) < 1.01);
+        assert!(p.vcpus(10_240) <= p.limits.max_vcpus + 1e-9);
+        assert!(p.net_bw_bps(10_240) > p.net_bw_bps(1024));
+        assert!(p.net_bw_bps(128) >= 35e6 / 8.0);
+    }
+
+    #[test]
+    fn clamp_mem_bounds() {
+        let p = FaasPlatform::with_seed(1);
+        assert_eq!(p.clamp_mem(1), 128);
+        assert_eq!(p.clamp_mem(50_000), 10_240);
+        assert_eq!(p.clamp_mem(3072), 3072);
+    }
+
+    #[test]
+    fn cold_start_positive_and_reasonable() {
+        let mut p = FaasPlatform::with_seed(2);
+        for _ in 0..1000 {
+            let c = p.cold_start_s();
+            assert!(c > 0.0 && c < 20.0, "cold start {c}");
+        }
+    }
+
+    #[test]
+    fn async_mode_sees_anomalies() {
+        let mut p = FaasPlatform::with_seed(3);
+        let direct = p.invoke_workers(500, InvokeMode::DirectTracked);
+        let mut p2 = FaasPlatform::with_seed(3);
+        let asyncd = p2.invoke_workers(500, InvokeMode::AsyncChained);
+        let sum = |v: &[Invocation]| v.iter().map(|i| i.startup_delay_s).sum::<f64>();
+        assert!(
+            sum(&asyncd) > sum(&direct) + 10.0,
+            "async chained invocations must pay the anomaly tax"
+        );
+    }
+
+    #[test]
+    fn stepfn_map_throttles_beyond_window() {
+        let mut p = FaasPlatform::with_seed(4);
+        let inv = p.invoke_workers(100, InvokeMode::StepFunctionsMap);
+        let cap = p.limits.stepfn_map_concurrency as usize;
+        assert!(inv[..cap].iter().all(|i| !i.throttled));
+        assert!(inv[cap..].iter().all(|i| i.throttled));
+        // later batches launch later
+        assert!(inv[99].startup_delay_s > inv[0].startup_delay_s);
+    }
+
+    #[test]
+    fn duration_cap_forces_restarts() {
+        let p = FaasPlatform::with_seed(5);
+        // 1 hour of work, 4 s init, 900 s cap => 5 invocations
+        assert_eq!(p.invocations_needed(3600.0, 4.0), 5);
+        assert_eq!(p.invocations_needed(10.0, 4.0), 1);
+    }
+
+    #[test]
+    fn concurrency_accounting() {
+        let mut p = FaasPlatform::with_seed(6);
+        p.limits.concurrency_limit = 10;
+        let inv = p.invoke_workers(15, InvokeMode::DirectTracked);
+        assert!(inv.iter().filter(|i| i.throttled).count() >= 5);
+        p.release_workers(15);
+        assert_eq!(p.running, 0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # SMLT — Serverless Machine Learning Training (paper reproduction)
+//!
+//! A serverless framework for scalable and adaptive ML design and training
+//! (Ali et al., CS.DC 2022), rebuilt as a three-layer Rust + JAX + Pallas
+//! stack: the Rust coordinator here is Layer 3; the model and kernels are
+//! AOT-compiled from Python (Layers 2/1) and executed through PJRT.
+//!
+//! Top-level map (see DESIGN.md for the full inventory):
+//! - [`runtime`] — PJRT engine: loads `artifacts/*.hlo.txt`, runs
+//!   grad-step / optimizer-update / aggregation executables.
+//! - [`simclock`] — discrete-event simulation core (virtual time).
+//! - [`faas`] — serverless-platform substrate (Lambda-like semantics).
+//! - [`storage`] — hybrid storage: object store + parameter store.
+//! - [`sync`] — model-synchronization schemes (hierarchical ScatterReduce
+//!   and the baselines' centralized variants).
+//! - [`perfmodel`] — calibrated per-iteration time model for the paper's
+//!   five benchmark models.
+//! - [`costmodel`] — cloud pricing (Lambda / S3 / ECS / EC2).
+//! - [`optimizer`] — Gaussian-process Bayesian optimizer + RL baseline.
+//! - [`scheduler`] — task scheduler: monitoring, checkpoint/restart,
+//!   duration-limit rotation, re-optimization triggers.
+//! - [`worker`] — serverless worker: data iterator, minibatch buffer,
+//!   trainer, hierarchical aggregator.
+//! - [`coordinator`] — end client: artifact/resource managers, workloads
+//!   (static / dynamic batching / online learning / NAS).
+//! - [`baselines`] — Siren, Cirrus, LambdaML, MLCD, IaaS comparators.
+//! - [`metrics`] — run recorders and CSV emission.
+//! - [`util`] — PRNG, JSON, CLI, stats (offline-registry substitutes).
+
+pub mod baselines;
+pub mod coordinator;
+pub mod costmodel;
+pub mod faas;
+pub mod metrics;
+pub mod optimizer;
+pub mod perfmodel;
+pub mod runtime;
+pub mod scheduler;
+pub mod simclock;
+pub mod storage;
+pub mod sync;
+pub mod util;
+pub mod worker;

@@ -1,0 +1,242 @@
+//! `smlt` — command-line launcher for the SMLT framework.
+//!
+//! Subcommands:
+//!   train     real-mode training over the AOT artifacts (PJRT)
+//!   simulate  run a workload x system on the calibrated simulator
+//!   optimize  one-shot Bayesian deployment search for a model/goal
+//!   info      show staged artifacts and platform facts
+//!
+//! Examples:
+//!   smlt train --model small --workers 4 --steps 200
+//!   smlt simulate --workload dynamic-batching --system smlt
+//!   smlt simulate --workload online --system iaas --hours 24
+//!   smlt optimize --model bert-medium --goal deadline --limit 4500
+//!   smlt info
+
+use anyhow::{anyhow, Result};
+use smlt::baselines::SystemKind;
+use smlt::coordinator::simrun::IterModel;
+use smlt::coordinator::{simulate, EndClient, Goal, SimJob, Workloads};
+use smlt::costmodel::Pricing;
+use smlt::faas::FaasPlatform;
+use smlt::optimizer::{BayesOpt, BoParams, ConfigSpace};
+use smlt::perfmodel::{Calibration, ModelProfile};
+use smlt::util::cli::Args;
+
+fn parse_system(name: &str) -> Result<SystemKind> {
+    SystemKind::all()
+        .into_iter()
+        .find(|s| s.name().eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow!("unknown system '{name}' (smlt|siren|cirrus|lambdaml|mlcd|iaas)"))
+}
+
+fn parse_profile(name: &str) -> Result<ModelProfile> {
+    ModelProfile::all()
+        .into_iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| {
+            anyhow!("unknown model '{name}' (resnet-18|resnet-50|bert-small|bert-medium|atari-rl)")
+        })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "small").to_string();
+    let workers = args.get_usize("workers", 4) as u32;
+    let steps = args.get_usize("steps", 100) as u64;
+    let lr = args.get_f64("lr", 3e-3);
+    let per_inv = args.get_usize("iters-per-invocation", 100) as u64;
+    let mut client = EndClient::new(None, workers)?;
+    println!("training {model} with {workers} workers for {steps} steps...");
+    let res = client.train(&model, steps, lr, per_inv, args.get_usize("seed", 42) as u64)?;
+    for (i, l) in res.losses.iter().step_by((steps as usize / 20).max(1)) {
+        println!("  step {i:>6}  loss {l:.4}");
+    }
+    println!(
+        "done: final loss {:.4}, {} re-invocations",
+        res.losses.last().map(|x| x.1).unwrap_or(f32::NAN),
+        res.restarts
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let system = parse_system(args.get_or("system", "smlt"))?;
+    let profile = parse_profile(args.get_or("model", "resnet-50"))?;
+    let workload = args.get_or("workload", "static");
+    let phases = match workload {
+        "static" => Workloads::static_run(
+            profile,
+            args.get_usize("iters", 100) as u64,
+            args.get_usize("batch", 256) as u32,
+        ),
+        "dynamic-batching" => Workloads::fig12_schedule(profile),
+        "online" => Workloads::online_learning(
+            profile,
+            args.get_usize("hours", 24) as u32,
+            args.get_usize("seed", 5) as u64,
+        ),
+        "nas" => Workloads::nas_enas(
+            profile,
+            args.get_usize("trials", 16) as u32,
+            args.get_usize("iters-per-trial", 60) as u64,
+            args.get_usize("seed", 9) as u64,
+        ),
+        other => return Err(anyhow!("unknown workload '{other}'")),
+    };
+    let mut job = SimJob::new(system, phases);
+    job.hazard_per_s = args.get_f64("hazard", 0.0);
+    if let Some(d) = args.get("deadline") {
+        job.goal = Goal::Deadline { t_max_s: d.parse()? };
+    } else if let Some(b) = args.get("budget") {
+        job.goal = Goal::Budget { s_max: b.parse()? };
+    } else if args.has_flag("fastest") {
+        job.goal = Goal::Fastest;
+    }
+    let out = simulate(&job);
+    println!("system      : {}", system.name());
+    println!("workload    : {workload} ({} iterations)", out.iters_done);
+    println!(
+        "total time  : {:.0} s (profiling {:.0} s)",
+        out.total_time_s, out.profiling_time_s
+    );
+    println!(
+        "total cost  : ${:.2} (profiling ${:.2})",
+        out.total_cost(),
+        out.profiling_cost()
+    );
+    println!("throughput  : {:.1} samples/s", out.avg_throughput());
+    println!(
+        "restarts    : {} (failures detected {})",
+        out.metrics.restarts, out.metrics.failures_detected
+    );
+    println!(
+        "deployments : {:?}",
+        out.config_trace
+            .iter()
+            .map(|(i, c)| (*i, c.workers, c.mem_mb))
+            .collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let profile = parse_profile(args.get_or("model", "bert-medium"))?;
+    let batch = args.get_usize("batch", 256) as u32;
+    let iters = args.get_usize("iters", 100) as u64;
+    let goal = match args.get_or("goal", "efficiency") {
+        "efficiency" => Goal::None,
+        "fastest" => Goal::Fastest,
+        "deadline" => Goal::Deadline { t_max_s: args.get_f64("limit", 3600.0) },
+        "budget" => Goal::Budget { s_max: args.get_f64("limit", 50.0) },
+        other => return Err(anyhow!("unknown goal '{other}'")),
+    };
+    let pricing = Pricing::default();
+    let cal = Calibration::default();
+    let platform = FaasPlatform::with_seed(args.get_usize("seed", 7) as u64);
+
+    struct Obj<'a> {
+        m: IterModel<'a>,
+        goal: Goal,
+        iters: u64,
+    }
+    impl smlt::optimizer::Objective for Obj<'_> {
+        fn eval(&mut self, c: smlt::optimizer::Config) -> f64 {
+            let (a, b) = self.m.iter_time(c);
+            let t = a + b;
+            let cost = self.m.iter_cost(c) * self.iters as f64;
+            match self.goal {
+                Goal::None => t * self.m.iter_cost(c),
+                Goal::Fastest => t,
+                Goal::Deadline { t_max_s } => {
+                    cost + 1e4 * ((t * self.iters as f64 - 0.78 * t_max_s).max(0.0) / t_max_s)
+                }
+                Goal::Budget { s_max } => {
+                    t * self.iters as f64 + 1e6 * ((cost - 0.92 * s_max).max(0.0) / s_max)
+                }
+            }
+        }
+        fn eval_cost_s(&self, c: smlt::optimizer::Config) -> f64 {
+            let (a, b) = self.m.iter_time(c);
+            2.0 * (a + b).min(10.0) + 1.0
+        }
+    }
+    let mut obj = Obj {
+        m: IterModel {
+            system: SystemKind::Smlt,
+            profile: &profile,
+            global_batch: batch,
+            platform: &platform,
+            cal: &cal,
+            pricing: &pricing,
+        },
+        goal,
+        iters,
+    };
+    let bo = BayesOpt::new(ConfigSpace::default(), BoParams::default());
+    let res = bo.run(&mut obj);
+    let (comp, comm) = obj.m.iter_time(res.best);
+    println!("model       : {} ({} params)", profile.name, profile.params);
+    println!("goal        : {goal:?}");
+    println!("best config : {} workers x {} MB", res.best.workers, res.best.mem_mb);
+    println!(
+        "per-iter    : {comp:.2} s compute + {comm:.2} s comm = {:.2} s",
+        comp + comm
+    );
+    println!(
+        "run estimate: {:.0} s, ${:.2}",
+        (comp + comm) * iters as f64,
+        obj.m.iter_cost(res.best) * iters as f64
+    );
+    println!("profiling   : {} evals, {:.0} s", res.evaluations, res.profiling_s);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    use smlt::runtime::Manifest;
+    let root = Manifest::default_root();
+    println!("artifacts root: {root:?}");
+    match Manifest::load(&root) {
+        Ok(m) => {
+            for (name, v) in &m.variants {
+                println!(
+                    "  variant {name:>6}: {:>10} params  d={} L={} H={} ff={} S={} B={}",
+                    v.n_params, v.d_model, v.n_layers, v.n_heads, v.d_ff, v.seq_len, v.batch
+                );
+            }
+            println!("  aggregators: {}", m.aggregators.len());
+            println!(
+                "  smoke: variant={} expected_loss={:.4}",
+                m.smoke.variant, m.smoke.expected_loss
+            );
+        }
+        Err(e) => println!("  (no artifacts: {e}; run `make artifacts`)"),
+    }
+    let pf = FaasPlatform::with_seed(0);
+    println!(
+        "faas model: mem {}-{} MB, {:.0} s cap, {:.2} vCPU/GB, net up to {:.0} Mbps",
+        pf.limits.mem_min_mb,
+        pf.limits.mem_max_mb,
+        pf.limits.duration_limit_s,
+        1024.0 / pf.limits.mb_per_vcpu,
+        pf.limits.net_bw_max_bps * 8.0 / 1e6
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!(
+                "smlt — serverless ML training (paper reproduction)\n\n\
+                 usage: smlt <train|simulate|optimize|info> [--options]\n\
+                 see README.md for examples"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Run metrics: per-iteration records + aggregation for EXPERIMENTS.md.
+
+use crate::util::stats::{summarize, Summary};
+use std::io::Write;
+use std::path::Path;
+
+/// One training-iteration record (virtual or wall time, seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterRecord {
+    pub iter: u64,
+    pub t_start: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub loss: f32,
+    pub workers: u32,
+    pub mem_mb: u32,
+    pub batch_global: u32,
+    pub restarted_workers: u32,
+}
+
+impl IterRecord {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s
+    }
+}
+
+/// Collector for a whole training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub records: Vec<IterRecord>,
+    pub restarts: u64,
+    pub failures_detected: u64,
+    pub reconfigurations: u64,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, r: IterRecord) {
+        self.restarts += r.restarted_workers as u64;
+        self.records.push(r);
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.records.iter().map(|r| r.total_s()).sum()
+    }
+
+    pub fn compute_summary(&self) -> Summary {
+        summarize(&self.records.iter().map(|r| r.compute_s).collect::<Vec<_>>())
+    }
+
+    pub fn comm_summary(&self) -> Summary {
+        summarize(&self.records.iter().map(|r| r.comm_s).collect::<Vec<_>>())
+    }
+
+    /// Throughput (samples/s) over a trailing window ending at `iter`.
+    pub fn throughput_at(&self, idx: usize, window: usize) -> f64 {
+        let lo = idx.saturating_sub(window.saturating_sub(1));
+        let slice = &self.records[lo..=idx.min(self.records.len() - 1)];
+        let samples: f64 = slice.iter().map(|r| r.batch_global as f64).sum();
+        let time: f64 = slice.iter().map(|r| r.total_s()).sum();
+        if time > 0.0 {
+            samples / time
+        } else {
+            0.0
+        }
+    }
+
+    /// Dump per-iteration CSV (loss curves, throughput traces).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "iter,t_start,compute_s,comm_s,loss,workers,mem_mb,batch_global,restarts")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.4},{:.4},{:.4},{:.5},{},{},{},{}",
+                r.iter, r.t_start, r.compute_s, r.comm_s, r.loss, r.workers,
+                r.mem_mb, r.batch_global, r.restarted_workers
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: u64, comp: f64, comm: f64, batch: u32) -> IterRecord {
+        IterRecord {
+            iter,
+            compute_s: comp,
+            comm_s: comm,
+            batch_global: batch,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn accumulates_and_summarizes() {
+        let mut m = RunMetrics::default();
+        for i in 0..10 {
+            m.push(rec(i, 1.0, 0.5, 64));
+        }
+        assert!((m.total_time_s() - 15.0).abs() < 1e-12);
+        assert!((m.compute_summary().mean - 1.0).abs() < 1e-12);
+        assert!((m.comm_summary().p50 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_windows() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 1.0, 0.0, 100));
+        m.push(rec(1, 1.0, 0.0, 300));
+        assert!((m.throughput_at(1, 1) - 300.0).abs() < 1e-9);
+        assert!((m.throughput_at(1, 2) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restart_counting() {
+        let mut m = RunMetrics::default();
+        m.push(IterRecord { restarted_workers: 3, ..Default::default() });
+        m.push(IterRecord { restarted_workers: 1, ..Default::default() });
+        assert_eq!(m.restarts, 4);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 1.0, 0.5, 8));
+        let p = std::env::temp_dir().join("smlt_metrics_test.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("iter,"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Gaussian-process regression (squared-exponential kernel, Cholesky
+//! solve) — the posterior model behind SMLT's Bayesian optimizer (§3.2).
+//!
+//! Inputs live in [0,1]^d (the ConfigSpace normalizes); targets are
+//! standardized internally. Posterior updates are incremental-friendly:
+//! refitting at n ≤ a few dozen profiling points is O(n^3) with a tiny
+//! constant, far below one profiling run's cost (§Perf L3 notes).
+
+/// Squared-exponential GP with fixed hyperparameters.
+#[derive(Clone, Debug)]
+pub struct Gp {
+    pub length_scale: f64,
+    pub signal_var: f64,
+    pub noise_var: f64,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    y_mean: f64,
+    y_std: f64,
+    /// Cholesky factor of K + noise*I (lower triangular, row-major)
+    chol: Vec<f64>,
+    /// alpha = (K + noise I)^-1 (y - mean)
+    alpha: Vec<f64>,
+}
+
+impl Default for Gp {
+    fn default() -> Self {
+        Gp::new(0.25, 1.0, 1e-4)
+    }
+}
+
+impl Gp {
+    pub fn new(length_scale: f64, signal_var: f64, noise_var: f64) -> Gp {
+        Gp {
+            length_scale,
+            signal_var,
+            noise_var,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            y_mean: 0.0,
+            y_std: 1.0,
+            chol: Vec::new(),
+            alpha: Vec::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn kernel(&self, a: &[f64], b: &[f64]) -> f64 {
+        let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum();
+        self.signal_var * (-0.5 * d2 / (self.length_scale * self.length_scale)).exp()
+    }
+
+    /// Add one observation and refit.
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+        self.refit();
+    }
+
+    fn refit(&mut self) {
+        let n = self.xs.len();
+        self.y_mean = self.ys.iter().sum::<f64>() / n as f64;
+        let var = self
+            .ys
+            .iter()
+            .map(|y| (y - self.y_mean).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        self.y_std = var.sqrt().max(1e-9);
+
+        // K + noise I
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&self.xs[i], &self.xs[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += self.noise_var;
+        }
+        self.chol = cholesky(&k, n).expect("GP kernel matrix not PD");
+        // alpha = K^-1 y_standardized
+        let ystd: Vec<f64> = self
+            .ys
+            .iter()
+            .map(|y| (y - self.y_mean) / self.y_std)
+            .collect();
+        self.alpha = chol_solve(&self.chol, n, &ystd);
+    }
+
+    /// Posterior (mean, std) at `x` in the original target units.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        if n == 0 {
+            return (0.0, self.signal_var.sqrt());
+        }
+        let kstar: Vec<f64> = self.xs.iter().map(|xi| self.kernel(xi, x)).collect();
+        let mean_std = kstar.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>();
+        // v = L^-1 k*
+        let v = forward_sub(&self.chol, n, &kstar);
+        let var = (self.kernel(x, x) - v.iter().map(|z| z * z).sum::<f64>()).max(1e-12);
+        (
+            mean_std * self.y_std + self.y_mean,
+            var.sqrt() * self.y_std,
+        )
+    }
+
+    /// Current best (lowest) observed value, original units.
+    pub fn best_observed(&self) -> Option<(usize, f64)> {
+        self.ys
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, y)| (i, *y))
+    }
+
+    pub fn observed_x(&self, i: usize) -> &[f64] {
+        &self.xs[i]
+    }
+}
+
+/// Dense lower Cholesky of an n x n SPD matrix (row-major).
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L z = b (forward substitution).
+fn forward_sub(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    z
+}
+
+/// Solve (L L^T) x = b.
+fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let z = forward_sub(l, n, b);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_known_matrix() {
+        // A = [[4,2],[2,3]] => L = [[2,0],[1,sqrt(2)]]
+        let l = cholesky(&[4.0, 2.0, 2.0, 3.0], 2).unwrap();
+        assert!((l[0] - 2.0).abs() < 1e-12);
+        assert!((l[2] - 1.0).abs() < 1e-12);
+        assert!((l[3] - 2f64.sqrt()).abs() < 1e-12);
+        assert!(cholesky(&[1.0, 2.0, 2.0, 1.0], 2).is_none(), "not PD");
+    }
+
+    #[test]
+    fn solve_roundtrip() {
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2).unwrap();
+        let x = chol_solve(&l, 2, &[1.0, 2.0]);
+        // check A x = b
+        let b0 = a[0] * x[0] + a[1] * x[1];
+        let b1 = a[2] * x[0] + a[3] * x[1];
+        assert!((b0 - 1.0).abs() < 1e-10 && (b1 - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gp_interpolates_observations() {
+        let mut gp = Gp::new(0.3, 1.0, 1e-6);
+        let f = |x: f64| (3.0 * x).sin() + 5.0;
+        for i in 0..8 {
+            let x = i as f64 / 7.0;
+            gp.observe(vec![x], f(x));
+        }
+        for i in 0..8 {
+            let x = i as f64 / 7.0;
+            let (m, s) = gp.predict(&[x]);
+            assert!((m - f(x)).abs() < 1e-2, "at {x}: {m} vs {}", f(x));
+            assert!(s < 0.05);
+        }
+        // between points: reasonable, higher uncertainty than at points
+        let (m, s_mid) = gp.predict(&[0.5 / 7.0 + 0.5 / 7.0]);
+        assert!((m - 5.0).abs() < 2.0);
+        let (_, s_at) = gp.predict(&[0.0]);
+        assert!(s_mid >= s_at * 0.5);
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let mut gp = Gp::default();
+        gp.observe(vec![0.0, 0.0], 1.0);
+        gp.observe(vec![0.1, 0.1], 1.2);
+        let (_, s_near) = gp.predict(&[0.05, 0.05]);
+        let (_, s_far) = gp.predict(&[1.0, 1.0]);
+        assert!(s_far > s_near * 2.0, "{s_far} vs {s_near}");
+    }
+
+    #[test]
+    fn best_observed_tracks_minimum() {
+        let mut gp = Gp::default();
+        gp.observe(vec![0.1], 5.0);
+        gp.observe(vec![0.5], 2.0);
+        gp.observe(vec![0.9], 7.0);
+        let (i, y) = gp.best_observed().unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(y, 2.0);
+        assert_eq!(gp.observed_x(1), &[0.5]);
+    }
+}

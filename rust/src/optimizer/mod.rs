@@ -1,0 +1,29 @@
+//! Deployment-configuration optimizers (§3.2, Fig 4).
+//!
+//! SMLT's optimizer is a Gaussian-process Bayesian optimizer with the
+//! Expected-Improvement acquisition over the 2-D space
+//! ⟨number of workers, memory per worker⟩. The RL (tabular Q-learning)
+//! optimizer reproduces the paper's Fig 4 comparison — same accuracy at
+//! ~3x the profiling overhead — and grid/random searches serve as
+//! ablation baselines.
+
+pub mod bayesian;
+pub mod gp;
+pub mod rl;
+pub mod search;
+
+pub use bayesian::{BayesOpt, BoParams};
+pub use gp::Gp;
+pub use search::{Config, ConfigSpace, GridSearch, RandomSearch};
+
+/// A black-box objective over deployment configurations. Implementations
+/// wrap either the perf-model simulator (benches) or live profiling runs
+/// (the resource manager during training).
+pub trait Objective {
+    /// Observed objective value (lower is better, e.g. $ or seconds,
+    /// possibly penalty-augmented for constraint violations).
+    fn eval(&mut self, cfg: Config) -> f64;
+    /// Cost of one profiling evaluation (seconds of profiling time);
+    /// used for the Fig 4 overhead comparison.
+    fn eval_cost_s(&self, cfg: Config) -> f64;
+}

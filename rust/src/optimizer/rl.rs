@@ -1,0 +1,157 @@
+//! Reinforcement-learning optimizer baseline (Fig 4; Siren's approach).
+//!
+//! Tabular Q-learning over the discretized configuration grid with
+//! move/stay actions. It reaches accuracy comparable to the Bayesian
+//! optimizer but needs episodes of environment interaction — i.e. ~3x the
+//! profiling evaluations — which is exactly the overhead gap the paper
+//! reports and why SMLT chose BO.
+
+use super::search::{Config, ConfigSpace};
+use super::Objective;
+use crate::util::rng::Pcg;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct RlParams {
+    pub episodes: u32,
+    pub steps_per_episode: u32,
+    pub alpha: f64,
+    pub gamma: f64,
+    pub epsilon: f64,
+    pub seed: u64,
+}
+
+impl Default for RlParams {
+    fn default() -> Self {
+        RlParams { episodes: 9, steps_per_episode: 12, alpha: 0.5, gamma: 0.9, epsilon: 0.3, seed: 11 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RlResult {
+    pub best: Config,
+    pub best_value: f64,
+    pub evaluations: u32,
+    pub profiling_s: f64,
+}
+
+const ACTIONS: [(i32, i32); 5] = [(0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)];
+
+pub struct QLearner {
+    pub params: RlParams,
+    pub space: ConfigSpace,
+}
+
+impl QLearner {
+    pub fn new(space: ConfigSpace, params: RlParams) -> Self {
+        QLearner { params, space }
+    }
+
+    fn apply(&self, c: Config, a: (i32, i32)) -> Config {
+        self.space.clamp(Config {
+            workers: (c.workers as i64 + a.0 as i64 * self.space.worker_step as i64 * 4)
+                .max(self.space.min_workers as i64) as u32,
+            mem_mb: (c.mem_mb as i64 + a.1 as i64 * self.space.mem_step_mb as i64 * 4)
+                .max(self.space.min_mem_mb as i64) as u32,
+        })
+    }
+
+    pub fn run(&self, obj: &mut dyn Objective) -> RlResult {
+        let mut rng = Pcg::new(self.params.seed);
+        let mut q: HashMap<(Config, usize), f64> = HashMap::new();
+        let mut cache: HashMap<Config, f64> = HashMap::new();
+        let mut evals = 0u32;
+        let mut profiling_s = 0.0;
+        let mut best = (Config { workers: 0, mem_mb: 0 }, f64::INFINITY);
+
+        for _ep in 0..self.params.episodes {
+            let mut state = self.space.sample(&mut rng);
+            for _step in 0..self.params.steps_per_episode {
+                // epsilon-greedy
+                let a_idx = if rng.next_f64() < self.params.epsilon {
+                    rng.below(ACTIONS.len() as u64) as usize
+                } else {
+                    (0..ACTIONS.len())
+                        .max_by(|&a, &b| {
+                            let qa = q.get(&(state, a)).copied().unwrap_or(0.0);
+                            let qb = q.get(&(state, b)).copied().unwrap_or(0.0);
+                            qa.partial_cmp(&qb).unwrap()
+                        })
+                        .unwrap()
+                };
+                let next = self.apply(state, ACTIONS[a_idx]);
+                // every *new* state visit costs a profiling run — this is
+                // the structural overhead vs BO
+                let y = *cache.entry(next).or_insert_with(|| {
+                    evals += 1;
+                    profiling_s += obj.eval_cost_s(next);
+                    obj.eval(next)
+                });
+                if y < best.1 {
+                    best = (next, y);
+                }
+                let reward = -y;
+                let max_next = (0..ACTIONS.len())
+                    .map(|a| q.get(&(next, a)).copied().unwrap_or(0.0))
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let entry = q.entry((state, a_idx)).or_insert(0.0);
+                *entry += self.params.alpha
+                    * (reward + self.params.gamma * max_next - *entry);
+                state = next;
+            }
+        }
+        RlResult { best: best.0, best_value: best.1, evaluations: evals, profiling_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::{BayesOpt, BoParams};
+
+    struct Bowl;
+    impl Objective for Bowl {
+        fn eval(&mut self, c: Config) -> f64 {
+            let w = c.workers as f64 / 100.0;
+            let m = c.mem_mb as f64 / 10_240.0;
+            10.0 * (w - 0.6).powi(2) + 8.0 * (m - 0.4).powi(2) + 1.0
+        }
+        fn eval_cost_s(&self, _c: Config) -> f64 {
+            30.0
+        }
+    }
+
+    #[test]
+    fn rl_finds_decent_config() {
+        let rl = QLearner::new(ConfigSpace::default(), RlParams::default());
+        let res = rl.run(&mut Bowl);
+        assert!(res.best_value < 2.5, "{:?} -> {}", res.best, res.best_value);
+    }
+
+    #[test]
+    fn rl_costs_about_3x_bo_profiling() {
+        // the Fig 4 structural result; exact ratio depends on params but
+        // RL must be materially more expensive for similar quality
+        let bo = BayesOpt::new(ConfigSpace::default(), BoParams::default());
+        let bo_res = bo.run(&mut Bowl);
+        let rl = QLearner::new(ConfigSpace::default(), RlParams::default());
+        let rl_res = rl.run(&mut Bowl);
+        assert!(
+            rl_res.profiling_s > 2.0 * bo_res.profiling_s,
+            "rl {} vs bo {}",
+            rl_res.profiling_s,
+            bo_res.profiling_s
+        );
+        // quality within the same ballpark
+        assert!(rl_res.best_value < bo_res.best_value * 2.0 + 0.5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let rl = QLearner::new(ConfigSpace::default(), RlParams::default());
+        let a = rl.run(&mut Bowl);
+        let b = rl.run(&mut Bowl);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.evaluations, b.evaluations);
+    }
+}

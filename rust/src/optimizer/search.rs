@@ -1,0 +1,162 @@
+//! Configuration space + exhaustive/random search baselines.
+
+use crate::util::rng::Pcg;
+
+/// One deployment configuration c_i = ⟨workers, memory⟩ (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub workers: u32,
+    pub mem_mb: u32,
+}
+
+/// Discrete 2-D search space. The paper searches memory 128 MB – 10 GB at
+/// 1 MB granularity and workers per model size; we keep the same bounds
+/// with a configurable memory step (the GP interpolates between steps, so
+/// a coarser profiling grid loses nothing).
+#[derive(Clone, Debug)]
+pub struct ConfigSpace {
+    pub min_workers: u32,
+    pub max_workers: u32,
+    pub worker_step: u32,
+    pub min_mem_mb: u32,
+    pub max_mem_mb: u32,
+    pub mem_step_mb: u32,
+}
+
+impl Default for ConfigSpace {
+    fn default() -> Self {
+        ConfigSpace {
+            min_workers: 2,
+            max_workers: 200,
+            worker_step: 2,
+            min_mem_mb: 128,
+            max_mem_mb: 10_240,
+            mem_step_mb: 128,
+        }
+    }
+}
+
+impl ConfigSpace {
+    pub fn clamp(&self, c: Config) -> Config {
+        Config {
+            workers: c.workers.clamp(self.min_workers, self.max_workers),
+            mem_mb: c.mem_mb.clamp(self.min_mem_mb, self.max_mem_mb),
+        }
+    }
+
+    pub fn all(&self) -> Vec<Config> {
+        let mut out = Vec::new();
+        let mut w = self.min_workers;
+        while w <= self.max_workers {
+            let mut m = self.min_mem_mb;
+            while m <= self.max_mem_mb {
+                out.push(Config { workers: w, mem_mb: m });
+                m += self.mem_step_mb;
+            }
+            w += self.worker_step;
+        }
+        out
+    }
+
+    pub fn sample(&self, rng: &mut Pcg) -> Config {
+        let nw = (self.max_workers - self.min_workers) / self.worker_step + 1;
+        let nm = (self.max_mem_mb - self.min_mem_mb) / self.mem_step_mb + 1;
+        Config {
+            workers: self.min_workers + self.worker_step * rng.below(nw as u64) as u32,
+            mem_mb: self.min_mem_mb + self.mem_step_mb * rng.below(nm as u64) as u32,
+        }
+    }
+
+    /// Normalize to [0,1]^2 for GP length-scale stability.
+    pub fn normalize(&self, c: Config) -> [f64; 2] {
+        [
+            (c.workers - self.min_workers) as f64
+                / (self.max_workers - self.min_workers).max(1) as f64,
+            (c.mem_mb - self.min_mem_mb) as f64
+                / (self.max_mem_mb - self.min_mem_mb).max(1) as f64,
+        ]
+    }
+}
+
+/// Exhaustive search: the "prohibitively expensive" strawman of §3.2.
+pub struct GridSearch;
+
+impl GridSearch {
+    /// Evaluate everything; returns (best config, best value, evals used).
+    pub fn run(obj: &mut dyn super::Objective, space: &ConfigSpace) -> (Config, f64, u32) {
+        let mut best = (Config { workers: 0, mem_mb: 0 }, f64::INFINITY);
+        let mut evals = 0;
+        for c in space.all() {
+            let y = obj.eval(c);
+            evals += 1;
+            if y < best.1 {
+                best = (c, y);
+            }
+        }
+        (best.0, best.1, evals)
+    }
+}
+
+/// Random search with a fixed budget.
+pub struct RandomSearch;
+
+impl RandomSearch {
+    pub fn run(
+        obj: &mut dyn super::Objective,
+        space: &ConfigSpace,
+        budget: u32,
+        seed: u64,
+    ) -> (Config, f64, u32) {
+        let mut rng = Pcg::new(seed);
+        let mut best = (Config { workers: 0, mem_mb: 0 }, f64::INFINITY);
+        for _ in 0..budget {
+            let c = space.sample(&mut rng);
+            let y = obj.eval(c);
+            if y < best.1 {
+                best = (c, y);
+            }
+        }
+        (best.0, best.1, budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_enumeration_and_bounds() {
+        let s = ConfigSpace {
+            min_workers: 2,
+            max_workers: 6,
+            worker_step: 2,
+            min_mem_mb: 128,
+            max_mem_mb: 384,
+            mem_step_mb: 128,
+        };
+        let all = s.all();
+        assert_eq!(all.len(), 3 * 3);
+        assert!(all.iter().all(|c| c.workers >= 2 && c.workers <= 6));
+    }
+
+    #[test]
+    fn normalize_unit_square() {
+        let s = ConfigSpace::default();
+        let lo = s.normalize(Config { workers: s.min_workers, mem_mb: s.min_mem_mb });
+        let hi = s.normalize(Config { workers: s.max_workers, mem_mb: s.max_mem_mb });
+        assert_eq!(lo, [0.0, 0.0]);
+        assert_eq!(hi, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn sample_respects_grid() {
+        let s = ConfigSpace::default();
+        let mut rng = Pcg::new(1);
+        for _ in 0..200 {
+            let c = s.sample(&mut rng);
+            assert_eq!((c.workers - s.min_workers) % s.worker_step, 0);
+            assert_eq!((c.mem_mb - s.min_mem_mb) % s.mem_step_mb, 0);
+            assert!(c.workers <= s.max_workers && c.mem_mb <= s.max_mem_mb);
+        }
+    }
+}

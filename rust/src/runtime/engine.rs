@@ -1,0 +1,223 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts and runs them.
+//!
+//! The pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled once and cached.
+//!
+//! Threading: the `xla` crate's `PjRtClient` is `Rc`-based and clones the
+//! Rc inside `execute` (output buffers hold client handles), so concurrent
+//! use from multiple threads is unsound. `SharedEngine` therefore wraps the
+//! whole engine in a `Mutex`; worker threads serialize their PJRT calls and
+//! XLA's own intra-op thread pool parallelizes *within* each call. This
+//! mirrors a fleet of single-core-ish Lambda workers multiplexed onto one
+//! host (see DESIGN.md §3) — per-worker *virtual* time is tracked by the
+//! FaaS simulator, not by wall-clock contention here.
+
+use super::manifest::{Manifest, VariantSpec};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Output of one gradient step.
+pub struct GradStepOut {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+/// Output of one optimizer application.
+pub struct ApplyOut {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative PJRT execute calls (metrics)
+    pub n_executions: u64,
+}
+
+// SAFETY: Engine is only ever used behind `SharedEngine`'s Mutex; the inner
+// Rc refcounts are never touched concurrently. Moving the whole engine
+// between threads is fine because all contained pointers target PJRT
+// objects that are not thread-affine.
+unsafe impl Send for Engine {}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, executables: HashMap::new(), n_executions: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, key: String, path: &Path) -> Result<()> {
+        if self.executables.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        self.executables.insert(key, exe);
+        Ok(())
+    }
+
+    /// Ensure a variant's executables are compiled (amortizes cold start).
+    pub fn warm(&mut self, variant: &str) -> Result<()> {
+        let spec = self.manifest.variant(variant)?.clone();
+        self.compile(format!("{variant}/grad_step"), &spec.grad_step_path)?;
+        self.compile(format!("{variant}/apply_update"), &spec.apply_update_path)?;
+        Ok(())
+    }
+
+    fn exec(&mut self, key: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(key)
+            .ok_or_else(|| anyhow!("executable {key} not compiled — call warm()"))?;
+        // IMPORTANT: go through explicit PjRtBuffers + execute_b. The
+        // crate's `execute(Literal...)` path leaks its internal
+        // host-literal -> device-buffer conversions (~one input-set per
+        // call; ~80 MB/step on the `small` variant — measured in
+        // EXPERIMENTS.md §Perf L3 iteration 7). Buffers we create have a
+        // correct Drop.
+        let bufs = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<Result<Vec<_>, _>>()?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+        self.n_executions += 1;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// One gradient step: (flat_params, tokens) -> (loss, flat_grads).
+    pub fn grad_step(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        tokens: &[i32],
+    ) -> Result<GradStepOut> {
+        let spec = self.manifest.variant(variant)?.clone();
+        self.check_shapes(&spec, params.len(), Some(tokens.len()))?;
+        self.warm(variant)?;
+        let p = xla::Literal::vec1(params);
+        let t = xla::Literal::vec1(tokens)
+            .reshape(&[spec.batch as i64, spec.seq_len as i64 + 1])?;
+        let outs = self.exec(&format!("{variant}/grad_step"), &[p, t])?;
+        if outs.len() != 2 {
+            return Err(anyhow!("grad_step returned {} outputs", outs.len()));
+        }
+        let loss = outs[0].get_first_element::<f32>()?;
+        let grads = outs[1].to_vec::<f32>()?;
+        Ok(GradStepOut { loss, grads })
+    }
+
+    /// One fused-Adam application over the flat parameter vector.
+    /// `lr_t` is the bias-corrected step size (see kernels/adam.py).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_update(
+        &mut self,
+        variant: &str,
+        params: &[f32],
+        m: &[f32],
+        v: &[f32],
+        grads: &[f32],
+        lr_t: f32,
+    ) -> Result<ApplyOut> {
+        let spec = self.manifest.variant(variant)?.clone();
+        self.check_shapes(&spec, params.len(), None)?;
+        self.warm(variant)?;
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(m),
+            xla::Literal::vec1(v),
+            xla::Literal::vec1(grads),
+            xla::Literal::vec1(&[lr_t]).reshape(&[1, 1])?,
+        ];
+        let outs = self.exec(&format!("{variant}/apply_update"), &args)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("apply_update returned {} outputs", outs.len()));
+        }
+        Ok(ApplyOut {
+            params: outs[0].to_vec::<f32>()?,
+            m: outs[1].to_vec::<f32>()?,
+            v: outs[2].to_vec::<f32>()?,
+        })
+    }
+
+    /// XLA-path shard aggregation: mean over the worker axis of
+    /// `stacked` (n_workers x shard_len, row-major). Used by the
+    /// `--agg xla` ablation; the default hot path is the native SIMD mean
+    /// in `sync::aggregate_mean`.
+    pub fn shard_mean(&mut self, n_workers: usize, shard_len: usize, stacked: &[f32])
+        -> Result<Vec<f32>> {
+        if stacked.len() != n_workers * shard_len {
+            return Err(anyhow!(
+                "shard_mean: {} elements != {n_workers}x{shard_len}", stacked.len()));
+        }
+        let spec = self
+            .manifest
+            .aggregators
+            .iter()
+            .find(|a| a.n_workers == n_workers && a.shard_len == shard_len)
+            .ok_or_else(|| anyhow!("no aggregator artifact for w{n_workers} l{shard_len}"))?
+            .clone();
+        let key = format!("agg/w{n_workers}_l{shard_len}");
+        self.compile(key.clone(), &spec.path)?;
+        let s = xla::Literal::vec1(stacked)
+            .reshape(&[n_workers as i64, shard_len as i64])?;
+        let outs = self.exec(&key, &[s])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    fn check_shapes(
+        &self,
+        spec: &VariantSpec,
+        n_params: usize,
+        n_tokens: Option<usize>,
+    ) -> Result<()> {
+        if n_params != spec.n_params {
+            return Err(anyhow!(
+                "param vector has {n_params} elements, artifact compiled for {}",
+                spec.n_params
+            ));
+        }
+        if let Some(nt) = n_tokens {
+            let want = spec.batch * (spec.seq_len + 1);
+            if nt != want {
+                return Err(anyhow!("token block has {nt} elements, want {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Thread-shareable engine handle (see module docs for the Mutex rationale).
+#[derive(Clone)]
+pub struct SharedEngine(Arc<Mutex<Engine>>);
+
+impl SharedEngine {
+    pub fn new(manifest: Manifest) -> Result<SharedEngine> {
+        Ok(SharedEngine(Arc::new(Mutex::new(Engine::new(manifest)?))))
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(&mut Engine) -> R) -> R {
+        let mut guard = self.0.lock().expect("engine mutex poisoned");
+        f(&mut guard)
+    }
+}

@@ -1,0 +1,217 @@
+//! Parsed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor in the flat parameter layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String, // "normal:<std>" | "zeros" | "ones"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled model variant.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    pub name: String,
+    pub n_params: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub grad_step_path: PathBuf,
+    pub apply_update_path: PathBuf,
+    pub param_spec: Vec<TensorSpec>,
+}
+
+/// One AOT-compiled shard-mean aggregator.
+#[derive(Clone, Debug)]
+pub struct AggregatorSpec {
+    pub n_workers: usize,
+    pub shard_len: usize,
+    pub path: PathBuf,
+}
+
+/// Ground-truth numbers from the python side for cross-language checks.
+#[derive(Clone, Debug, Default)]
+pub struct SmokeRecord {
+    pub variant: String,
+    pub seed: u64,
+    pub expected_loss: f64,
+    pub grads_l2: f64,
+    pub params_l2_after_update: f64,
+    pub params_head: Vec<f64>,
+    pub tokens_head: Vec<i64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub variants: BTreeMap<String, VariantSpec>,
+    pub aggregators: Vec<AggregatorSpec>,
+    pub smoke: SmokeRecord,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest: missing key '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("manifest: '{key}' not a number"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: '{key}' not a string"))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`. `root` is typically `artifacts/`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut variants = BTreeMap::new();
+        for (name, v) in req(&j, "variants")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("variants not an object"))?
+        {
+            let param_spec = req(v, "param_spec")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("param_spec not an array"))?
+                .iter()
+                .map(|e| {
+                    Ok(TensorSpec {
+                        name: req_str(e, "name")?,
+                        shape: req(e, "shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("shape not an array"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        init: req_str(e, "init")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let spec = VariantSpec {
+                name: name.clone(),
+                n_params: req_usize(v, "n_params")?,
+                vocab: req_usize(v, "vocab")?,
+                d_model: req_usize(v, "d_model")?,
+                n_layers: req_usize(v, "n_layers")?,
+                n_heads: req_usize(v, "n_heads")?,
+                d_ff: req_usize(v, "d_ff")?,
+                seq_len: req_usize(v, "seq_len")?,
+                batch: req_usize(v, "batch")?,
+                grad_step_path: root.join(req_str(v, "grad_step")?),
+                apply_update_path: root.join(req_str(v, "apply_update")?),
+                param_spec,
+            };
+            let spec_total: usize = spec.param_spec.iter().map(|t| t.numel()).sum();
+            if spec_total != spec.n_params {
+                return Err(anyhow!(
+                    "variant {name}: param_spec totals {spec_total} != n_params {}",
+                    spec.n_params
+                ));
+            }
+            variants.insert(name.clone(), spec);
+        }
+
+        let mut aggregators = Vec::new();
+        for (_k, a) in req(&j, "aggregators")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("aggregators not an object"))?
+        {
+            aggregators.push(AggregatorSpec {
+                n_workers: req_usize(a, "n_workers")?,
+                shard_len: req_usize(a, "shard_len")?,
+                path: root.join(req_str(a, "path")?),
+            });
+        }
+
+        let s = req(&j, "smoke")?;
+        let smoke = SmokeRecord {
+            variant: req_str(s, "variant")?,
+            seed: req_usize(s, "seed")? as u64,
+            expected_loss: req(s, "expected_loss")?.as_f64().unwrap_or(f64::NAN),
+            grads_l2: req(s, "grads_l2")?.as_f64().unwrap_or(f64::NAN),
+            params_l2_after_update: req(s, "params_l2_after_update")?
+                .as_f64()
+                .unwrap_or(f64::NAN),
+            params_head: req(s, "params_head")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .collect(),
+            tokens_head: req(s, "tokens_head")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64().map(|f| f as i64))
+                .collect(),
+        };
+
+        Ok(Manifest { root, variants, aggregators, smoke })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model variant '{name}' (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()))
+    }
+
+    /// Default artifacts root: `$SMLT_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("SMLT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let root = Manifest::default_root();
+        if !root.join("manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.variants.contains_key("tiny"));
+        let tiny = m.variant("tiny").unwrap();
+        assert_eq!(tiny.param_spec[0].name, "tok_emb");
+        assert!(tiny.grad_step_path.exists());
+        assert!(tiny.apply_update_path.exists());
+        assert!(!m.aggregators.is_empty());
+        assert_eq!(m.smoke.variant, "tiny");
+        assert!(m.smoke.expected_loss > 0.0);
+    }
+
+    #[test]
+    fn rejects_missing_root() {
+        assert!(Manifest::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: the AOT-artifact loading/execution layer.
+//!
+//! Python lowers the L2/L1 computation once (`make artifacts`); everything
+//! here is pure Rust + the `xla` crate (PJRT C API) — no Python on the
+//! training path.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{ApplyOut, Engine, GradStepOut, SharedEngine};
+pub use manifest::{AggregatorSpec, Manifest, SmokeRecord, TensorSpec, VariantSpec};

@@ -1,0 +1,196 @@
+//! Deterministic parameter / token initialization shared with python.
+//!
+//! Mirrors `python/compile/model.py::{lcg_init, lcg_tokens}` bit-for-bit so
+//! the Rust-initialized model reproduces the AOT smoke record exactly.
+
+use super::manifest::VariantSpec;
+use crate::util::rng::{fnv1a, Lcg, LCG_ADD, LCG_MUL};
+
+/// Flat f32 parameter vector for a variant, from the shared LCG scheme.
+pub fn init_params(spec: &VariantSpec, seed: u64) -> Vec<f32> {
+    let mut out = Vec::with_capacity(spec.n_params);
+    for t in &spec.param_spec {
+        let n = t.numel();
+        match t.init.as_str() {
+            "zeros" => out.extend(std::iter::repeat(0.0f32).take(n)),
+            "ones" => out.extend(std::iter::repeat(1.0f32).take(n)),
+            init => {
+                let std: f32 = init
+                    .strip_prefix("normal:")
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0.02);
+                // seed is diffused before the xor so that seed=1 does not
+                // collide with the `| 1` parity bit (mirrored in python)
+                let diffused = seed.wrapping_mul(0x9E3779B97F4A7C15);
+                let mut lcg = Lcg((fnv1a(&t.name) ^ diffused) | 1);
+                out.extend((0..n).map(|_| lcg.uniform_f32() * std));
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), spec.n_params);
+    out
+}
+
+/// Deterministic (batch, seq_len+1) token block; mirrors `lcg_tokens`.
+pub fn gen_tokens(spec: &VariantSpec, seed: u64) -> Vec<i32> {
+    let n = spec.batch * (spec.seq_len + 1);
+    let mut x: u64 = seed.wrapping_mul(2).wrapping_add(12345);
+    (0..n)
+        .map(|_| {
+            x = x.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD);
+            ((x >> 33) % spec.vocab as u64) as i32
+        })
+        .collect()
+}
+
+/// Synthetic learnable corpus: order-1 Markov chain over the vocab with a
+/// deterministic transition structure plus noise. Gives the e2e example a
+/// loss curve that actually *decreases* (unlike uniform-random tokens whose
+/// optimal loss is ln(vocab)).
+pub struct MarkovCorpus {
+    vocab: usize,
+    /// per-state preferred successor
+    succ: Vec<u32>,
+    noise_pct: u64, // percentage of transitions drawn uniformly
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64, noise_pct: u64) -> Self {
+        // Successor table from a splittable hash: succ(s) = h(s) % vocab.
+        let succ = (0..vocab as u64)
+            .map(|s| {
+                let mut x = s
+                    .wrapping_add(seed.wrapping_mul(0x9E3779B97F4A7C15))
+                    .wrapping_mul(0xBF58476D1CE4E5B9);
+                x ^= x >> 27;
+                x = x.wrapping_mul(0x94D049BB133111EB);
+                (x % vocab as u64) as u32
+            })
+            .collect();
+        MarkovCorpus { vocab, succ, noise_pct }
+    }
+
+    /// Fill a (batch, seq_len+1) token block for training step `step` on
+    /// worker `worker` — each (worker, step) pair gets distinct data.
+    pub fn batch(&self, spec: &VariantSpec, worker: u64, step: u64) -> Vec<i32> {
+        let rows = spec.batch;
+        let cols = spec.seq_len + 1;
+        let mut out = Vec::with_capacity(rows * cols);
+        for r in 0..rows as u64 {
+            let mut lcg = Lcg(
+                (worker << 40) ^ (step << 20) ^ r ^ 0x5851F42D4C957F2D,
+            );
+            let mut tok = (lcg.step() % self.vocab as u64) as u32;
+            out.push(tok as i32);
+            for _ in 0..cols - 1 {
+                let roll = lcg.step() % 100;
+                tok = if roll < self.noise_pct {
+                    (lcg.step() % self.vocab as u64) as u32
+                } else {
+                    self.succ[tok as usize]
+                };
+                out.push(tok as i32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Manifest, TensorSpec};
+
+    fn fake_variant() -> VariantSpec {
+        VariantSpec {
+            name: "fake".into(),
+            n_params: 10,
+            vocab: 16,
+            d_model: 2,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 2,
+            seq_len: 3,
+            batch: 2,
+            grad_step_path: "/dev/null".into(),
+            apply_update_path: "/dev/null".into(),
+            param_spec: vec![
+                TensorSpec { name: "a".into(), shape: vec![2, 2], init: "normal:0.02".into() },
+                TensorSpec { name: "g".into(), shape: vec![3], init: "ones".into() },
+                TensorSpec { name: "b".into(), shape: vec![3], init: "zeros".into() },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_layout_and_kinds() {
+        let v = fake_variant();
+        let p = init_params(&v, 0);
+        assert_eq!(p.len(), 10);
+        assert!(p[0..4].iter().all(|x| x.abs() <= 0.02 && *x != 0.0));
+        assert_eq!(&p[4..7], &[1.0, 1.0, 1.0]);
+        assert_eq!(&p[7..10], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let v = fake_variant();
+        assert_eq!(init_params(&v, 0), init_params(&v, 0));
+        assert_ne!(init_params(&v, 0), init_params(&v, 1));
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let v = fake_variant();
+        let t = gen_tokens(&v, 0);
+        assert_eq!(t.len(), v.batch * (v.seq_len + 1));
+        assert!(t.iter().all(|&x| x >= 0 && (x as usize) < v.vocab));
+    }
+
+    #[test]
+    fn matches_python_smoke_record() {
+        // Cross-language determinism: the first 8 params and tokens written
+        // by aot.py must be reproduced exactly.
+        let root = Manifest::default_root();
+        if !root.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        let spec = m.variant(&m.smoke.variant).unwrap();
+        let p = init_params(spec, m.smoke.seed);
+        for (i, expect) in m.smoke.params_head.iter().enumerate() {
+            assert!(
+                (p[i] as f64 - expect).abs() < 1e-9,
+                "param[{i}]: rust={} python={expect}",
+                p[i]
+            );
+        }
+        let t = gen_tokens(spec, m.smoke.seed);
+        for (i, expect) in m.smoke.tokens_head.iter().enumerate() {
+            assert_eq!(t[i] as i64, *expect, "token[{i}]");
+        }
+    }
+
+    #[test]
+    fn markov_corpus_is_learnable_structure() {
+        let v = fake_variant();
+        let c = MarkovCorpus::new(16, 7, 10);
+        let b1 = c.batch(&v, 0, 0);
+        let b2 = c.batch(&v, 0, 1);
+        assert_ne!(b1, b2, "steps must differ");
+        assert_eq!(b1, c.batch(&v, 0, 0), "deterministic");
+        // with 10% noise, most transitions follow succ[]
+        let mut follow = 0;
+        let mut total = 0;
+        for r in 0..v.batch {
+            let row = &b1[r * (v.seq_len + 1)..(r + 1) * (v.seq_len + 1)];
+            for w in row.windows(2) {
+                total += 1;
+                if c.succ[w[0] as usize] as i32 == w[1] {
+                    follow += 1;
+                }
+            }
+        }
+        assert!(follow * 2 > total, "{follow}/{total} transitions follow chain");
+    }
+}

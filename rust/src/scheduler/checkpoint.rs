@@ -1,0 +1,106 @@
+//! Checkpoint store: lets a restarted worker resume from the last
+//! completed iteration (§4.1 — "the task scheduler ensures that a new one
+//! is started and continues from the last iteration checkpoint").
+//!
+//! Real mode keeps checkpoints in memory (standing in for S3 PUTs of the
+//! optimizer state); the data iterator's epoch cursor is part of the
+//! checkpoint so resumed workers skip already-processed samples (§4.2).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// A resumable training position.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub iter: u64,
+    pub params: Vec<f32>,
+    pub opt_m: Vec<f32>,
+    pub opt_v: Vec<f32>,
+    /// per-worker cursor into the current epoch's data shard
+    pub data_cursor: u64,
+}
+
+/// Thread-safe checkpoint store keyed by job id.
+#[derive(Clone, Default)]
+pub struct CheckpointStore {
+    inner: Arc<Mutex<HashMap<String, Checkpoint>>>,
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Persist a checkpoint if it is newer than the stored one (workers
+    /// race benignly; the highest iteration wins).
+    pub fn save(&self, job: &str, ckpt: Checkpoint) {
+        let mut m = self.inner.lock().unwrap();
+        match m.get(job) {
+            Some(old) if old.iter >= ckpt.iter => {}
+            _ => {
+                m.insert(job.to_string(), ckpt);
+            }
+        }
+    }
+
+    pub fn load(&self, job: &str) -> Option<Checkpoint> {
+        self.inner.lock().unwrap().get(job).cloned()
+    }
+
+    pub fn clear(&self, job: &str) {
+        self.inner.lock().unwrap().remove(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt(iter: u64) -> Checkpoint {
+        Checkpoint { iter, params: vec![iter as f32], ..Default::default() }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let st = CheckpointStore::new();
+        assert!(st.load("job").is_none());
+        st.save("job", ckpt(3));
+        assert_eq!(st.load("job").unwrap().iter, 3);
+    }
+
+    #[test]
+    fn highest_iteration_wins() {
+        let st = CheckpointStore::new();
+        st.save("job", ckpt(5));
+        st.save("job", ckpt(2)); // stale writer loses
+        assert_eq!(st.load("job").unwrap().iter, 5);
+        st.save("job", ckpt(9));
+        assert_eq!(st.load("job").unwrap().iter, 9);
+    }
+
+    #[test]
+    fn jobs_are_isolated() {
+        let st = CheckpointStore::new();
+        st.save("a", ckpt(1));
+        st.save("b", ckpt(2));
+        assert_eq!(st.load("a").unwrap().iter, 1);
+        st.clear("a");
+        assert!(st.load("a").is_none());
+        assert!(st.load("b").is_some());
+    }
+
+    #[test]
+    fn concurrent_savers_converge() {
+        let st = CheckpointStore::new();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let st = st.clone();
+                std::thread::spawn(move || st.save("job", ckpt(i)))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(st.load("job").unwrap().iter, 7);
+    }
+}

@@ -1,0 +1,13 @@
+//! Task scheduler (§4.1): the overarching-view component.
+//!
+//! Tracks every worker's progress across stateless invocations, rotates
+//! workers ahead of the platform's execution-duration cap (amortizing
+//! framework init), detects failures via the gradient-flag protocol, and
+//! raises re-optimization triggers when the training configuration
+//! changes (batch size, model size) — the paper's §3.1 adaptation loop.
+
+pub mod checkpoint;
+pub mod tracker;
+
+pub use checkpoint::CheckpointStore;
+pub use tracker::{ReoptTrigger, TaskScheduler, WorkerReport};

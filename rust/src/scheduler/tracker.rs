@@ -1,0 +1,249 @@
+//! Worker-progress tracking, rotation planning and failure detection.
+
+use crate::faas::{FailureInjector, FaasPlatform};
+
+/// What a worker reports after each iteration (the paper's §4.1 output
+/// protocol: a *flag* set on successful gradient upload; its absence
+/// signals failure).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerReport {
+    pub worker: u32,
+    pub iter: u64,
+    /// gradient-upload-success flag; false (or a missing report) = failure
+    pub grads_uploaded: bool,
+    pub iter_time_s: f64,
+    /// training configuration echoed back (change detection input)
+    pub batch_size: u32,
+    pub model_params: u64,
+}
+
+/// Why the scheduler wants the resource manager to re-optimize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReoptTrigger {
+    BatchSizeChanged { from: u32, to: u32 },
+    ModelSizeChanged { from: u64, to: u64 },
+}
+
+/// Per-worker lifecycle state.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerState {
+    /// accumulated function-execution time since the last (re)start
+    elapsed_in_function_s: f64,
+    restarts: u32,
+    last_iter: u64,
+}
+
+/// The task scheduler: one per training job.
+pub struct TaskScheduler {
+    workers: Vec<WorkerState>,
+    /// margin before the hard duration cap at which we proactively rotate
+    pub rotation_margin_s: f64,
+    /// last seen training configuration (change detection)
+    last_batch: Option<u32>,
+    last_model_params: Option<u64>,
+    pub total_restarts: u64,
+    pub failures_detected: u64,
+}
+
+impl TaskScheduler {
+    pub fn new(n_workers: u32) -> TaskScheduler {
+        TaskScheduler {
+            workers: vec![WorkerState::default(); n_workers as usize],
+            rotation_margin_s: 30.0,
+            last_batch: None,
+            last_model_params: None,
+            total_restarts: 0,
+            failures_detected: 0,
+        }
+    }
+
+    pub fn n_workers(&self) -> u32 {
+        self.workers.len() as u32
+    }
+
+    /// Rescale the fleet (after a re-optimization). Existing progress
+    /// carries over for surviving workers; new workers start cold.
+    pub fn resize(&mut self, n_workers: u32) {
+        self.workers.resize(n_workers as usize, WorkerState::default());
+    }
+
+    /// Ingest one worker report. Returns a re-optimization trigger when
+    /// the training configuration changed (§3.1 "monitors for changes in
+    /// training information ... activates an optimizer").
+    pub fn ingest(&mut self, report: WorkerReport) -> Option<ReoptTrigger> {
+        if let Some(w) = self.workers.get_mut(report.worker as usize) {
+            w.elapsed_in_function_s += report.iter_time_s;
+            w.last_iter = report.iter;
+        }
+        if !report.grads_uploaded {
+            self.failures_detected += 1;
+        }
+        let mut trigger = None;
+        if let Some(prev) = self.last_batch {
+            if prev != report.batch_size {
+                trigger = Some(ReoptTrigger::BatchSizeChanged { from: prev, to: report.batch_size });
+            }
+        }
+        if trigger.is_none() {
+            if let Some(prev) = self.last_model_params {
+                if prev != report.model_params {
+                    trigger =
+                        Some(ReoptTrigger::ModelSizeChanged { from: prev, to: report.model_params });
+                }
+            }
+        }
+        self.last_batch = Some(report.batch_size);
+        self.last_model_params = Some(report.model_params);
+        trigger
+    }
+
+    /// Simulate the lifecycle management for one iteration across the
+    /// fleet: proactive rotation near the duration cap + injected
+    /// failures. Returns (workers restarted this iteration, added makespan
+    /// seconds from the slowest restarted worker's re-init).
+    pub fn lifecycle_step(
+        &mut self,
+        platform: &mut FaasPlatform,
+        injector: &mut FailureInjector,
+        iter_time_s: f64,
+        init_time_s: f64,
+    ) -> (u32, f64) {
+        let cap = platform.limits.duration_limit_s - self.rotation_margin_s;
+        let mut restarted = 0;
+        let mut added = 0.0f64;
+        for w in self.workers.iter_mut() {
+            let crashed = injector.fails_within(iter_time_s);
+            let rotate = w.elapsed_in_function_s + iter_time_s > cap;
+            if crashed || rotate {
+                if crashed {
+                    self.failures_detected += 1;
+                }
+                w.elapsed_in_function_s = 0.0;
+                w.restarts += 1;
+                restarted += 1;
+                self.total_restarts += 1;
+                // re-init happens off the critical path for proactive
+                // rotation (the replacement warms up while others compute),
+                // but a crash loses the iteration => full init + redo
+                let penalty = if crashed {
+                    init_time_s + platform.cold_start_s() + iter_time_s
+                } else {
+                    platform.cold_start_s().min(init_time_s * 0.25)
+                };
+                added = added.max(penalty);
+            } else {
+                w.elapsed_in_function_s += iter_time_s;
+            }
+        }
+        (restarted, added)
+    }
+
+    /// Without an external scheduler (the LambdaML/async pattern), every
+    /// duration-cap restart pays the full re-initialization on the
+    /// critical path. Used by baselines for the init-amortization ablation.
+    pub fn naive_restart_penalty(
+        platform: &FaasPlatform,
+        total_work_s: f64,
+        init_time_s: f64,
+    ) -> f64 {
+        let n = platform.invocations_needed(total_work_s, init_time_s);
+        n as f64 * init_time_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::{FaasPlatform, FailureInjector};
+
+    fn report(worker: u32, batch: u32, model: u64) -> WorkerReport {
+        WorkerReport {
+            worker,
+            iter: 0,
+            grads_uploaded: true,
+            iter_time_s: 1.0,
+            batch_size: batch,
+            model_params: model,
+        }
+    }
+
+    #[test]
+    fn detects_batch_size_change() {
+        let mut ts = TaskScheduler::new(4);
+        assert!(ts.ingest(report(0, 64, 1000)).is_none());
+        assert!(ts.ingest(report(1, 64, 1000)).is_none());
+        let trig = ts.ingest(report(2, 128, 1000)).unwrap();
+        assert_eq!(trig, ReoptTrigger::BatchSizeChanged { from: 64, to: 128 });
+    }
+
+    #[test]
+    fn detects_model_size_change_nas() {
+        let mut ts = TaskScheduler::new(2);
+        ts.ingest(report(0, 64, 1_000_000));
+        let trig = ts.ingest(report(1, 64, 2_000_000)).unwrap();
+        assert!(matches!(trig, ReoptTrigger::ModelSizeChanged { .. }));
+    }
+
+    #[test]
+    fn missing_flag_counts_as_failure() {
+        let mut ts = TaskScheduler::new(1);
+        let mut r = report(0, 8, 10);
+        r.grads_uploaded = false;
+        ts.ingest(r);
+        assert_eq!(ts.failures_detected, 1);
+    }
+
+    #[test]
+    fn rotation_happens_before_duration_cap() {
+        let mut ts = TaskScheduler::new(1);
+        let mut pf = FaasPlatform::with_seed(1);
+        let mut inj = FailureInjector::none();
+        // 100 s iterations against a 900 s cap with 30 s margin:
+        // rotation at iteration 9 (8*100 + 100 > 870)
+        let mut restarts = 0;
+        for _ in 0..9 {
+            let (r, _) = ts.lifecycle_step(&mut pf, &mut inj, 100.0, 5.0);
+            restarts += r;
+        }
+        assert_eq!(restarts, 1, "exactly one proactive rotation");
+        assert_eq!(ts.total_restarts, 1);
+    }
+
+    #[test]
+    fn crashes_cost_more_than_rotations() {
+        let mut pf = FaasPlatform::with_seed(2);
+        // crash path
+        let mut ts1 = TaskScheduler::new(8);
+        let mut always_fail = FailureInjector::new(1e9, 3); // p ~ 1
+        let (_, crash_penalty) = ts1.lifecycle_step(&mut pf, &mut always_fail, 10.0, 5.0);
+        // rotation path
+        let mut ts2 = TaskScheduler::new(8);
+        let mut no_fail = FailureInjector::none();
+        for _ in 0..87 {
+            ts2.lifecycle_step(&mut pf, &mut no_fail, 10.0, 5.0);
+        }
+        let (r, rotate_penalty) = ts2.lifecycle_step(&mut pf, &mut no_fail, 10.0, 5.0);
+        assert!(r > 0);
+        assert!(crash_penalty > rotate_penalty, "{crash_penalty} vs {rotate_penalty}");
+        assert!(crash_penalty >= 15.0, "crash redoes the iteration");
+    }
+
+    #[test]
+    fn resize_preserves_scheduler() {
+        let mut ts = TaskScheduler::new(4);
+        ts.ingest(report(0, 64, 10));
+        ts.resize(8);
+        assert_eq!(ts.n_workers(), 8);
+        ts.resize(2);
+        assert_eq!(ts.n_workers(), 2);
+        // change detection state survives resizes
+        assert!(ts.ingest(report(0, 128, 10)).is_some());
+    }
+
+    #[test]
+    fn naive_restart_pays_full_init_each_time() {
+        let pf = FaasPlatform::with_seed(3);
+        let naive = TaskScheduler::naive_restart_penalty(&pf, 3600.0, 10.0);
+        assert!((naive - 50.0).abs() < 1e-9, "5 invocations x 10 s init");
+    }
+}

@@ -1,0 +1,197 @@
+//! Real in-process parameter store for real-mode training.
+//!
+//! Implements the put/get/wait interface the paper serves with Redis:
+//! stateless workers rendezvous through it during hierarchical model
+//! synchronization. Keys are sharded across independent mutexes (like a
+//! Redis cluster) so concurrent workers don't serialize on one lock, and a
+//! condvar per shard provides the blocking `wait_get` the aggregation
+//! barrier needs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+const N_SHARDS: usize = 16;
+
+#[derive(Default)]
+struct Shard {
+    map: Mutex<HashMap<String, Arc<Vec<f32>>>>,
+    cv: Condvar,
+}
+
+/// Sharded blocking KV store. Values are `Arc`'d so concurrent readers of
+/// the same gradient shard don't copy.
+#[derive(Clone)]
+pub struct ParamStore {
+    shards: Arc<Vec<Shard>>,
+    /// metrics: total puts/gets and bytes moved (for EXPERIMENTS.md)
+    counters: Arc<Mutex<Counters>>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counters {
+    pub puts: u64,
+    pub gets: u64,
+    pub bytes_put: u64,
+    pub bytes_get: u64,
+}
+
+impl Default for ParamStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ParamStore {
+    pub fn new() -> ParamStore {
+        ParamStore {
+            shards: Arc::new((0..N_SHARDS).map(|_| Shard::default()).collect()),
+            counters: Arc::new(Mutex::new(Counters::default())),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Shard {
+        &self.shards[crate::util::rng::fnv1a(key) as usize % N_SHARDS]
+    }
+
+    pub fn put(&self, key: &str, value: Vec<f32>) {
+        let sh = self.shard(key);
+        {
+            let mut c = self.counters.lock().unwrap();
+            c.puts += 1;
+            c.bytes_put += (value.len() * 4) as u64;
+        }
+        let mut map = sh.map.lock().unwrap();
+        map.insert(key.to_string(), Arc::new(value));
+        sh.cv.notify_all();
+    }
+
+    /// Non-blocking get.
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<f32>>> {
+        let sh = self.shard(key);
+        let map = sh.map.lock().unwrap();
+        let v = map.get(key).cloned();
+        if let Some(ref val) = v {
+            let mut c = self.counters.lock().unwrap();
+            c.gets += 1;
+            c.bytes_get += (val.len() * 4) as u64;
+        }
+        v
+    }
+
+    /// Blocking get with timeout — the aggregation rendezvous primitive.
+    pub fn wait_get(&self, key: &str, timeout: Duration) -> Option<Arc<Vec<f32>>> {
+        let sh = self.shard(key);
+        let deadline = std::time::Instant::now() + timeout;
+        let mut map = sh.map.lock().unwrap();
+        loop {
+            if let Some(v) = map.get(key).cloned() {
+                let mut c = self.counters.lock().unwrap();
+                c.gets += 1;
+                c.bytes_get += (v.len() * 4) as u64;
+                return Some(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = sh.cv.wait_timeout(map, deadline - now).unwrap();
+            map = guard;
+            if res.timed_out() && map.get(key).is_none() {
+                return None;
+            }
+        }
+    }
+
+    pub fn delete(&self, key: &str) {
+        self.shard(key).map.lock().unwrap().remove(key);
+    }
+
+    /// Drop all keys with the given prefix (end-of-iteration cleanup).
+    pub fn delete_prefix(&self, prefix: &str) {
+        for sh in self.shards.iter() {
+            sh.map.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.map.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn counters(&self) -> Counters {
+        *self.counters.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let kv = ParamStore::new();
+        kv.put("a", vec![1.0, 2.0]);
+        assert_eq!(kv.get("a").unwrap().as_slice(), &[1.0, 2.0]);
+        assert!(kv.get("b").is_none());
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn wait_get_blocks_until_put() {
+        let kv = ParamStore::new();
+        let kv2 = kv.clone();
+        let h = thread::spawn(move || {
+            kv2.wait_get("late", Duration::from_secs(5)).map(|v| v[0])
+        });
+        thread::sleep(Duration::from_millis(50));
+        kv.put("late", vec![7.5]);
+        assert_eq!(h.join().unwrap(), Some(7.5));
+    }
+
+    #[test]
+    fn wait_get_times_out() {
+        let kv = ParamStore::new();
+        let t0 = std::time::Instant::now();
+        assert!(kv.wait_get("never", Duration::from_millis(80)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(75));
+    }
+
+    #[test]
+    fn delete_prefix_cleans_iteration_keys() {
+        let kv = ParamStore::new();
+        for w in 0..8 {
+            kv.put(&format!("iter3/shard{w}"), vec![0.0]);
+        }
+        kv.put("iter4/shard0", vec![1.0]);
+        kv.delete_prefix("iter3/");
+        assert_eq!(kv.len(), 1);
+        assert!(kv.get("iter4/shard0").is_some());
+    }
+
+    #[test]
+    fn concurrent_workers_dont_lose_writes() {
+        let kv = ParamStore::new();
+        let handles: Vec<_> = (0..16)
+            .map(|w| {
+                let kv = kv.clone();
+                thread::spawn(move || {
+                    for i in 0..50 {
+                        kv.put(&format!("w{w}/i{i}"), vec![w as f32, i as f32]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kv.len(), 16 * 50);
+        let c = kv.counters();
+        assert_eq!(c.puts, 800);
+        assert_eq!(c.bytes_put, 800 * 8);
+    }
+}

@@ -1,0 +1,15 @@
+//! Hybrid storage substrate (§4.3): object store + parameter store.
+//!
+//! Two faces:
+//! - **Latency/bandwidth models** ([`StoreModel`]) used by the simulator to
+//!   time every upload/download in the sync schemes (Figs 1/2/7/8).
+//! - A **real in-process parameter store** ([`kv::ParamStore`]) that the
+//!   real-mode workers push actual gradient bytes through (the e2e
+//!   example), implementing the same put/get/wait interface Redis serves
+//!   in the paper.
+
+pub mod kv;
+pub mod model;
+
+pub use kv::ParamStore;
+pub use model::{StoreKind, StoreModel, TransferPlan};

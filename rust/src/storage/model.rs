@@ -1,0 +1,154 @@
+//! Analytic storage-service models: request latency + bandwidth + pricing.
+//!
+//! Parameters follow public measurements of the services the paper uses
+//! (S3, Redis-on-ECS); the *shape* of every communication figure depends
+//! only on these constants, all of which are ablatable from benches.
+
+/// Which service a model instance describes (drives pricing + defaults).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    /// cloud object store (AWS S3-like): high latency, cheap at rest,
+    /// per-request pricing
+    ObjectStore,
+    /// in-memory KV (Redis on ECS/Fargate): sub-ms latency, paid per
+    /// container-hour while alive
+    ParamStore,
+}
+
+/// Latency/bandwidth model of one storage service.
+#[derive(Clone, Debug)]
+pub struct StoreModel {
+    pub kind: StoreKind,
+    /// time to first byte for one request (s)
+    pub first_byte_s: f64,
+    /// per-stream sustained bandwidth (bytes/s)
+    pub stream_bw_bps: f64,
+    /// service-side aggregate bandwidth cap across all clients (bytes/s)
+    pub aggregate_bw_bps: f64,
+    /// number of service-side shards/partitions; requests spread across
+    /// them (Redis cluster nodes / S3 prefixes)
+    pub shards: u32,
+    /// mean extra delay when *waiting* for a key produced by a peer: S3
+    /// has no notification primitive, so rendezvous is poll-based
+    /// (LambdaML polls GETs in a retry loop); Redis blocks sub-ms.
+    pub poll_interval_s: f64,
+}
+
+impl StoreModel {
+    /// AWS-S3-like object store: ~25 ms TTFB, ~90 MB/s per stream, wide
+    /// aggregate (per-prefix scaling), effectively unlimited shards.
+    pub fn s3_like() -> StoreModel {
+        StoreModel {
+            kind: StoreKind::ObjectStore,
+            first_byte_s: 0.025,
+            stream_bw_bps: 90e6,
+            aggregate_bw_bps: 6.4e9, // ~51 Gbps per-bucket burst
+            shards: 64,
+            poll_interval_s: 0.25,
+        }
+    }
+
+    /// Redis-on-ECS-like parameter store: ~0.8 ms RTT, ~1.2 GB/s single
+    /// stream, aggregate bounded by the container NIC (~10 Gbps each).
+    pub fn redis_like(containers: u32) -> StoreModel {
+        StoreModel {
+            kind: StoreKind::ParamStore,
+            first_byte_s: 0.0008,
+            stream_bw_bps: 1.2e9,
+            aggregate_bw_bps: containers as f64 * 10e9 / 8.0,
+            shards: containers.max(1),
+            poll_interval_s: 0.001,
+        }
+    }
+
+    /// Time for one client to transfer `bytes` while `concurrent` clients
+    /// hit the service simultaneously and the client NIC allows
+    /// `client_bw_bps`. The effective rate is the min of: the stream cap,
+    /// the client NIC, and a fair share of the aggregate cap.
+    pub fn transfer_s(&self, bytes: u64, concurrent: u32, client_bw_bps: f64) -> f64 {
+        let fair_share = self.aggregate_bw_bps / concurrent.max(1) as f64;
+        let rate = self
+            .stream_bw_bps
+            .min(client_bw_bps)
+            .min(fair_share)
+            .max(1.0);
+        self.first_byte_s + bytes as f64 / rate
+    }
+
+    /// Convenience: a full fan-in/fan-out plan (n clients each moving
+    /// `bytes`), returning the *makespan* assuming simultaneous start.
+    pub fn plan(&self, bytes_per_client: u64, clients: u32, client_bw_bps: f64) -> TransferPlan {
+        let per = self.transfer_s(bytes_per_client, clients, client_bw_bps);
+        TransferPlan {
+            per_client_s: per,
+            makespan_s: per, // identical clients => same finish time
+            total_bytes: bytes_per_client * clients as u64,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TransferPlan {
+    pub per_client_s: f64,
+    pub makespan_s: f64,
+    pub total_bytes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: u64 = 1 << 30;
+
+    #[test]
+    fn param_store_is_much_faster_than_s3_for_small_payloads() {
+        let s3 = StoreModel::s3_like();
+        let redis = StoreModel::redis_like(1);
+        let t_s3 = s3.transfer_s(1 << 20, 1, 1e9);
+        let t_r = redis.transfer_s(1 << 20, 1, 1e9);
+        assert!(t_r < t_s3 / 5.0, "redis {t_r} vs s3 {t_s3}");
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let s3 = StoreModel::s3_like();
+        let t = s3.transfer_s(1, 1, 1e9);
+        assert!((t - s3.first_byte_s).abs() / s3.first_byte_s < 0.01);
+    }
+
+    #[test]
+    fn aggregate_cap_congests_many_clients() {
+        let redis = StoreModel::redis_like(1);
+        let t1 = redis.transfer_s(GB, 1, f64::INFINITY);
+        let t64 = redis.transfer_s(GB, 64, f64::INFINITY);
+        assert!(t64 > t1 * 10.0, "64-way fan-in must congest: {t1} -> {t64}");
+    }
+
+    #[test]
+    fn client_nic_caps_rate() {
+        let s3 = StoreModel::s3_like();
+        let slow = s3.transfer_s(GB, 1, 10e6);
+        let fast = s3.transfer_s(GB, 1, 1e9);
+        assert!(slow > fast * 5.0);
+    }
+
+    #[test]
+    fn more_containers_raise_aggregate() {
+        let one = StoreModel::redis_like(1);
+        let four = StoreModel::redis_like(4);
+        let t1 = one.transfer_s(GB, 32, f64::INFINITY);
+        let t4 = four.transfer_s(GB, 32, f64::INFINITY);
+        assert!(t4 < t1 / 2.0);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let s3 = StoreModel::s3_like();
+        let mut prev = 0.0;
+        for sz in [1u64 << 10, 1 << 20, 1 << 25, 1 << 30] {
+            let t = s3.transfer_s(sz, 4, 100e6);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

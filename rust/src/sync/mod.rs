@@ -1,0 +1,15 @@
+//! Model-synchronization schemes (§3.3, Fig 5).
+//!
+//! Two faces, like [`crate::storage`]:
+//! - [`timing`] — analytic per-iteration communication breakdowns for
+//!   SMLT's hierarchical ScatterReduce and the baselines' centralized
+//!   schemes (drives Figs 1/2/7/8).
+//! - [`real`] — the actual hierarchical aggregation protocol over the
+//!   in-process [`crate::storage::ParamStore`], executed by real worker
+//!   threads in the e2e example (gradient bytes really move).
+
+pub mod real;
+pub mod timing;
+
+pub use real::{aggregate_mean, HierarchicalSync};
+pub use timing::{comm_breakdown, CommBreakdown, Scheme, SyncEnv};

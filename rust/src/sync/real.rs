@@ -1,0 +1,217 @@
+//! Real hierarchical model synchronization over the in-process param store.
+//!
+//! Implements Fig 5 faithfully with actual gradient bytes:
+//! 1. *shard generator*: each worker splits its gradient vector into `n`
+//!    equal shards and PUTs them (`it{i}/g/{worker}/{shard}`),
+//! 2. *shard aggregator*: worker `w` collects shard `w` from all workers,
+//!    means them, and PUTs the aggregated shard (`it{i}/a/{w}`),
+//! 3. *global aggregator*: every worker collects all aggregated shards and
+//!    reconstructs the full averaged gradient.
+//!
+//! Used by the real-mode workers in the e2e example; the `--agg xla`
+//! ablation routes step 2 through the AOT shard-mean executable instead of
+//! the native SIMD mean.
+
+use crate::storage::ParamStore;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Native mean across `k` equal-length slices — the aggregation hot path.
+/// Accumulates in f64 then divides once (bit-stable wrt worker count).
+pub fn aggregate_mean(slices: &[&[f32]]) -> Vec<f32> {
+    assert!(!slices.is_empty());
+    let len = slices[0].len();
+    debug_assert!(slices.iter().all(|s| s.len() == len));
+    let inv = 1.0 / slices.len() as f32;
+    // axpy-style accumulation: stream each slice sequentially into the
+    // accumulator (sequential loads vectorize; the strided column-walk
+    // variant was ~2x slower — see EXPERIMENTS.md §Perf L3). f32
+    // accumulation is exact enough here because worker counts are small
+    // (≤ 200) and gradients are O(1); the unit tests pin the tolerance.
+    let mut out = slices[0].to_vec();
+    for s in &slices[1..] {
+        for (o, x) in out.iter_mut().zip(s.iter()) {
+            *o += *x;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+/// One worker's view of the hierarchical synchronization protocol.
+#[derive(Clone)]
+pub struct HierarchicalSync {
+    store: ParamStore,
+    pub n_workers: usize,
+    pub worker_id: usize,
+    pub timeout: Duration,
+}
+
+impl HierarchicalSync {
+    pub fn new(store: ParamStore, n_workers: usize, worker_id: usize) -> Self {
+        assert!(worker_id < n_workers);
+        HierarchicalSync { store, n_workers, worker_id, timeout: Duration::from_secs(60) }
+    }
+
+    fn shard_bounds(&self, total: usize, shard: usize) -> (usize, usize) {
+        // first `rem` shards get one extra element (handles non-divisible)
+        let base = total / self.n_workers;
+        let rem = total % self.n_workers;
+        let start = shard * base + shard.min(rem);
+        let len = base + usize::from(shard < rem);
+        (start, start + len)
+    }
+
+    /// Run the full 4-phase protocol for iteration `iter`; returns the
+    /// mean gradient across all workers. Blocks until peers arrive (or
+    /// times out, which the task scheduler treats as a worker failure).
+    pub fn sync(&self, iter: u64, grads: &[f32]) -> Result<Vec<f32>> {
+        let n = self.n_workers;
+        let w = self.worker_id;
+
+        // 1) shard generator: split + upload (UL-Shard)
+        for s in 0..n {
+            let (a, b) = self.shard_bounds(grads.len(), s);
+            self.store
+                .put(&format!("it{iter}/g/{w}/{s}"), grads[a..b].to_vec());
+        }
+
+        // 2) shard aggregator for shard `w`: gather from all workers
+        // (DL-Shard), mean, re-upload (UL-aggr)
+        let mut collected: Vec<Arc<Vec<f32>>> = Vec::with_capacity(n);
+        for peer in 0..n {
+            let key = format!("it{iter}/g/{peer}/{w}");
+            let shard = self
+                .store
+                .wait_get(&key, self.timeout)
+                .ok_or_else(|| anyhow!("worker {w}: timeout waiting for {key}"))?;
+            collected.push(shard);
+        }
+        let views: Vec<&[f32]> = collected.iter().map(|a| a.as_slice()).collect();
+        let aggregated = aggregate_mean(&views);
+        self.store.put(&format!("it{iter}/a/{w}"), aggregated);
+
+        // 3) global aggregator: gather all aggregated shards (DL-grad)
+        let mut out = vec![0.0f32; grads.len()];
+        for s in 0..n {
+            let key = format!("it{iter}/a/{s}");
+            let agg = self
+                .store
+                .wait_get(&key, self.timeout)
+                .ok_or_else(|| anyhow!("worker {w}: timeout waiting for {key}"))?;
+            let (a, b) = self.shard_bounds(grads.len(), s);
+            out[a..b].copy_from_slice(&agg);
+        }
+
+        // 4) cleanup: worker 0 garbage-collects an older iteration whose
+        // keys every worker has certainly consumed
+        if w == 0 && iter >= 2 {
+            self.store.delete_prefix(&format!("it{}/", iter - 2));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+    use std::thread;
+
+    #[test]
+    fn aggregate_mean_exact() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [3.0f32, 2.0, 1.0];
+        assert_eq!(aggregate_mean(&[&a, &b]), vec![2.0, 2.0, 2.0]);
+        assert_eq!(aggregate_mean(&[&a]), a.to_vec());
+    }
+
+    #[test]
+    fn shard_bounds_partition_exactly() {
+        let store = ParamStore::new();
+        for total in [10usize, 17, 64, 1_000_003] {
+            for n in [1usize, 2, 3, 7, 8] {
+                let hs = HierarchicalSync::new(store.clone(), n, 0);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for s in 0..n {
+                    let (a, b) = hs.shard_bounds(total, s);
+                    assert_eq!(a, prev_end, "contiguous");
+                    covered += b - a;
+                    prev_end = b;
+                }
+                assert_eq!(covered, total, "total={total} n={n}");
+            }
+        }
+    }
+
+    fn run_protocol(n: usize, len: usize, iter: u64) {
+        let store = ParamStore::new();
+        let mut rng = Pcg::new(42 + iter);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect();
+        // expected mean
+        let views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let expect = aggregate_mean(&views);
+
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let store = store.clone();
+                let g = grads[w].clone();
+                thread::spawn(move || {
+                    HierarchicalSync::new(store, n, w).sync(iter, &g).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            for (x, y) in got.iter().zip(expect.iter()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn all_workers_agree_on_the_mean() {
+        run_protocol(4, 1000, 0);
+        run_protocol(8, 97, 1); // non-divisible length
+        run_protocol(1, 64, 2); // degenerate single worker
+    }
+
+    #[test]
+    fn cleanup_gc_removes_old_iterations() {
+        let store = ParamStore::new();
+        let n = 2;
+        for iter in 0..3u64 {
+            let handles: Vec<_> = (0..n)
+                .map(|w| {
+                    let store = store.clone();
+                    thread::spawn(move || {
+                        HierarchicalSync::new(store, n, w)
+                            .sync(iter, &[w as f32; 10])
+                            .unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        // iteration 0 keys must be gone (gc at iter 2); iter 2 keys remain
+        assert!(store.get("it0/a/0").is_none());
+        assert!(store.get("it2/a/0").is_some());
+    }
+
+    #[test]
+    fn missing_peer_times_out() {
+        let store = ParamStore::new();
+        let mut hs = HierarchicalSync::new(store, 2, 0);
+        hs.timeout = Duration::from_millis(100);
+        let err = hs.sync(0, &[1.0; 8]).unwrap_err();
+        assert!(err.to_string().contains("timeout"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Analytic communication-time model of each synchronization scheme.
+//!
+//! Terminology follows §5.2 / Fig 7:
+//! - SMLT:   UL-Shard → DL-Shard → UL-aggr → DL-grad (hierarchical)
+//! - Siren / Cirrus / LambdaML-central: UL-grad → DL-grad (centralized)
+//!
+//! The shapes the paper reports emerge from byte counts x the storage
+//! contention model: centralized schemes move O(n·G) bytes per worker per
+//! iteration (every worker downloads everyone's gradients), hierarchical
+//! moves O(G) with small constants, so both grow with n (aggregate-
+//! bandwidth contention) but the hierarchical slope is far lower.
+
+use crate::storage::StoreModel;
+
+/// Synchronization scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// SMLT: hierarchical ScatterReduce through the in-memory param store
+    SmltHierarchical,
+    /// Siren: S3-mediated all-gather (every worker reads all gradients)
+    SirenCentral,
+    /// Cirrus: dedicated parameter server; all workers hit one endpoint
+    CirrusPs,
+    /// LambdaML: ScatterReduce like SMLT but through the object store
+    LambdaMlScatterReduce,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::SmltHierarchical => "SMLT",
+            Scheme::SirenCentral => "Siren",
+            Scheme::CirrusPs => "Cirrus",
+            Scheme::LambdaMlScatterReduce => "LambdaML",
+        }
+    }
+}
+
+/// Environment a sync runs in: the stores and the per-worker NIC.
+#[derive(Clone, Debug)]
+pub struct SyncEnv {
+    pub param_store: StoreModel,
+    pub object_store: StoreModel,
+    /// per-worker network bandwidth (from FaaS memory scaling), bytes/s
+    pub client_bw_bps: f64,
+}
+
+impl SyncEnv {
+    pub fn standard(client_bw_bps: f64) -> SyncEnv {
+        SyncEnv {
+            param_store: StoreModel::redis_like(2),
+            object_store: StoreModel::s3_like(),
+            client_bw_bps,
+        }
+    }
+}
+
+/// Per-iteration communication breakdown (seconds). Centralized schemes
+/// populate only `ul_grad`/`dl_grad`; SMLT populates the four-phase split.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommBreakdown {
+    pub ul_shard: f64,
+    pub dl_shard: f64,
+    pub ul_aggr: f64,
+    pub dl_grad: f64,
+    pub ul_grad: f64,
+}
+
+impl CommBreakdown {
+    pub fn total(&self) -> f64 {
+        self.ul_shard + self.dl_shard + self.ul_aggr + self.dl_grad + self.ul_grad
+    }
+}
+
+/// Communication time of one training iteration for one worker, with `n`
+/// workers synchronizing `grad_bytes` of gradients (+ `extra_upload` of
+/// auxiliary data, e.g. RL trajectories).
+pub fn comm_breakdown(
+    scheme: Scheme,
+    env: &SyncEnv,
+    grad_bytes: u64,
+    n: u32,
+    extra_upload: u64,
+) -> CommBreakdown {
+    let n = n.max(1);
+    match scheme {
+        Scheme::SmltHierarchical => hierarchical(&env.param_store, env, grad_bytes, n, extra_upload),
+        Scheme::LambdaMlScatterReduce => {
+            hierarchical(&env.object_store, env, grad_bytes, n, extra_upload)
+        }
+        Scheme::SirenCentral => {
+            let st = &env.object_store;
+            // upload own gradients (+ extras): one PUT
+            let ul_grad = st.transfer_s(grad_bytes + extra_upload, n, env.client_bw_bps);
+            // download everyone else's gradients: n-1 GETs of G each, all
+            // n workers doing this simultaneously (n clients sharing the
+            // aggregate; per-worker bytes already scale with n-1 => the
+            // total fan-in volume is quadratic in n)
+            let dl_bytes = grad_bytes * (n as u64 - 1).max(1);
+            let dl_grad = (n as u64 - 1).max(1) as f64 * st.first_byte_s
+                + st.transfer_s(dl_bytes, n, env.client_bw_bps)
+                - st.first_byte_s;
+            CommBreakdown { ul_grad, dl_grad, ..Default::default() }
+        }
+        Scheme::CirrusPs => {
+            // one PS endpoint: every worker pushes G and pulls the updated
+            // model G through it each iteration. Sustained single-VM
+            // throughput ~2.5 Gbps (EC2 baseline bandwidth; the burst
+            // "up to 10 Gbps" rating does not hold for continuous fan-in).
+            let ps_bw: f64 = 2.5e9 / 8.0;
+            let rate_in = (ps_bw / n as f64).min(env.client_bw_bps);
+            let rate_out = (ps_bw / n as f64).min(env.client_bw_bps);
+            let ul_grad = 0.002 + (grad_bytes + extra_upload) as f64 / rate_in;
+            let dl_grad = 0.002 + grad_bytes as f64 / rate_out;
+            CommBreakdown { ul_grad, dl_grad, ..Default::default() }
+        }
+    }
+}
+
+fn hierarchical(
+    store: &StoreModel,
+    env: &SyncEnv,
+    grad_bytes: u64,
+    n: u32,
+    extra_upload: u64,
+) -> CommBreakdown {
+    let m = n as u64; // shards == workers (§3.3 footnote 4)
+    let shard = (grad_bytes / m).max(1);
+    // 1) UL-Shard: each worker PUTs m shards (G bytes total + extras)
+    let ul_shard = m as f64 * store.first_byte_s
+        + store.transfer_s(grad_bytes + extra_upload, n, env.client_bw_bps)
+        - store.first_byte_s;
+    // 2) DL-Shard: each aggregator GETs its shard from all n workers;
+    // rendezvous on peers' uploads pays the store's poll interval
+    let dl_shard = store.poll_interval_s
+        + n as f64 * store.first_byte_s
+        + store.transfer_s(shard * n as u64, n, env.client_bw_bps)
+        - store.first_byte_s;
+    // 3) UL-aggr: one PUT of the aggregated shard
+    let ul_aggr = store.transfer_s(shard, n, env.client_bw_bps);
+    // 4) DL-grad: GET all m aggregated shards (G bytes); rendezvous again
+    let dl_grad = store.poll_interval_s
+        + m as f64 * store.first_byte_s
+        + store.transfer_s(grad_bytes, n, env.client_bw_bps)
+        - store.first_byte_s;
+    CommBreakdown { ul_shard, dl_shard, ul_aggr, dl_grad, ul_grad: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G: u64 = 264_000_000; // Bert-Small gradients
+
+    fn env() -> SyncEnv {
+        SyncEnv::standard(75e6) // ~600 Mbps worker NIC
+    }
+
+    #[test]
+    fn smlt_beats_centralized_at_scale() {
+        let e = env();
+        for n in [8, 16, 32, 64] {
+            let smlt = comm_breakdown(Scheme::SmltHierarchical, &e, G, n, 0).total();
+            let siren = comm_breakdown(Scheme::SirenCentral, &e, G, n, 0).total();
+            let cirrus = comm_breakdown(Scheme::CirrusPs, &e, G, n, 0).total();
+            assert!(smlt < siren, "n={n}: smlt {smlt} vs siren {siren}");
+            assert!(smlt < cirrus, "n={n}: smlt {smlt} vs cirrus {cirrus}");
+        }
+    }
+
+    #[test]
+    fn comm_grows_with_workers_for_all_schemes() {
+        // Fig 8: "for all three systems the communication time increases
+        // linearly as the number of training workers increases"
+        let e = env();
+        for scheme in [Scheme::SmltHierarchical, Scheme::SirenCentral, Scheme::CirrusPs] {
+            let t8 = comm_breakdown(scheme, &e, G, 8, 0).total();
+            let t64 = comm_breakdown(scheme, &e, G, 64, 0).total();
+            assert!(t64 > t8, "{}: {t8} -> {t64}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn dl_grad_dominates_centralized_schemes() {
+        // Fig 7: "for both Siren and Cirrus, the main bottleneck often is
+        // the DL-grad step"
+        let e = env();
+        let b = comm_breakdown(Scheme::SirenCentral, &e, G, 32, 0);
+        assert!(b.dl_grad > b.ul_grad * 2.0);
+        // ...while SMLT's sharding keeps DL-grad comparable to uploads
+        let s = comm_breakdown(Scheme::SmltHierarchical, &e, G, 32, 0);
+        assert!(s.dl_grad < b.dl_grad / 4.0);
+    }
+
+    #[test]
+    fn lambdaml_scatterreduce_slower_than_smlt_due_to_store() {
+        // same topology, S3 latency instead of Redis
+        let e = env();
+        let smlt = comm_breakdown(Scheme::SmltHierarchical, &e, G, 16, 0).total();
+        let lml = comm_breakdown(Scheme::LambdaMlScatterReduce, &e, G, 16, 0).total();
+        // same topology => same byte volume; the gap is store latency +
+        // poll-based rendezvous (the paper's LambdaML polls S3)
+        assert!(lml > smlt * 1.1, "{lml} vs {smlt}");
+    }
+
+    #[test]
+    fn rl_extra_upload_inflates_upload_time() {
+        let e = env();
+        let plain = comm_breakdown(Scheme::SirenCentral, &e, 16_000_000, 16, 0);
+        let rl = comm_breakdown(Scheme::SirenCentral, &e, 16_000_000, 16, 160 << 20);
+        assert!(rl.ul_grad > plain.ul_grad * 3.0);
+    }
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let e = env();
+        let b = comm_breakdown(Scheme::SmltHierarchical, &e, G, 8, 0);
+        let sum = b.ul_shard + b.dl_shard + b.ul_aggr + b.dl_grad + b.ul_grad;
+        assert!((b.total() - sum).abs() < 1e-12);
+        assert!(b.ul_grad == 0.0, "smlt uses the 4-phase split");
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure utilities: PRNG, JSON, CLI parsing, statistics, tables.
+//!
+//! Hand-rolled because the offline crate registry only carries the `xla`
+//! dependency closure (see DESIGN.md §3 substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,176 @@
+//! Deterministic PRNG (PCG-XSH-RR 64/32) + the shared-LCG init scheme.
+//!
+//! The `Lcg` type mirrors `python/compile/model.py::lcg_uniform` bit-for-bit
+//! so the Rust coordinator initializes exactly the parameters the AOT smoke
+//! record was computed with.
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid; used everywhere the
+/// framework needs randomness (simulators, optimizers, property tests).
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+pub const LCG_MUL: u64 = 6364136223846793005;
+pub const LCG_ADD: u64 = 1442695040888963407;
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (seed << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(LCG_MUL).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift; bias negligible for our n « 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.next_f64().max(1e-12).ln() / lambda
+    }
+
+    /// Log-normal parameterized by the *underlying* normal's (mu, sigma).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Raw LCG shared with `python/compile/model.py` (param init / token gen).
+#[derive(Clone, Copy, Debug)]
+pub struct Lcg(pub u64);
+
+impl Lcg {
+    pub fn step(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(LCG_MUL).wrapping_add(LCG_ADD);
+        self.0
+    }
+
+    /// f32 in [-1, 1); bit-identical to python `lcg_uniform`.
+    pub fn uniform_f32(&mut self) -> f32 {
+        let x = self.step();
+        let u24 = (x >> 40) as f64;
+        ((u24 / (1u64 << 24) as f64) * 2.0 - 1.0) as f32
+    }
+}
+
+/// FNV-1a 64-bit hash, mirroring python `_fnv1a` (per-tensor init seeds).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_uniform_range() {
+        let mut r = Pcg::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn pcg_below_in_range_and_covers() {
+        let mut r = Pcg::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn fnv1a_offset_basis() {
+        assert_eq!(fnv1a(""), 0xCBF29CE484222325);
+        assert_ne!(fnv1a("tok_emb"), fnv1a("pos_emb"));
+    }
+
+    #[test]
+    fn lcg_uniform_bounds() {
+        let mut l = Lcg(123);
+        for _ in 0..1000 {
+            let x = l.uniform_f32();
+            assert!((-1.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(9);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,126 @@
+//! Small statistics helpers used by benches, metrics, and the optimizer.
+
+/// Summary of a sample: mean / std / percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    let mean = s.iter().sum::<f64>() / n as f64;
+    let var = s.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: s[0],
+        p25: percentile_sorted(&s, 0.25),
+        p50: percentile_sorted(&s, 0.50),
+        p75: percentile_sorted(&s, 0.75),
+        p95: percentile_sorted(&s, 0.95),
+        max: s[n - 1],
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Empirical CDF evaluation points: returns (sorted values, cumulative probs).
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    let probs = (1..=n).map(|i| i as f64 / n as f64).collect();
+    (s, probs)
+}
+
+/// Standard normal PDF.
+pub fn norm_pdf(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF (Abramowitz & Stegun 7.1.26 via erf approximation).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// erf via A&S 7.1.26; |err| < 1.5e-7, plenty for EI acquisition.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert!((percentile_sorted(&s, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_symmetry_and_bounds() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((norm_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pdf_peak() {
+        assert!((norm_pdf(0.0) - 0.3989422804).abs() < 1e-8);
+        assert!(norm_pdf(3.0) < norm_pdf(0.0));
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (v, p) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        assert_eq!(p, vec![1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Serverless worker (§4.2, Table 1 ②): data iterator, minibatch buffer,
+//! trainer, hierarchical aggregator — the real-mode implementation that
+//! actually executes the AOT grad-step through PJRT and moves gradient
+//! bytes through the in-process parameter store.
+
+pub mod data;
+pub mod runner;
+pub mod trainer;
+
+pub use data::{DataIterator, MinibatchBuffer};
+pub use runner::{run_worker_fleet, FleetConfig, FleetResult, InvocationBudget};
+pub use trainer::Trainer;

@@ -1,0 +1,190 @@
+//! Real-mode worker fleet: N worker threads training the AOT model with
+//! hierarchical gradient synchronization, under serverless lifecycle rules
+//! (invocation duration budget → checkpoint → restart) enforced by the
+//! task scheduler. This is the engine room of the e2e example.
+//!
+//! Each "function invocation" is a bounded span of iterations (standing in
+//! for the 15-minute Lambda cap, scaled down so tests exercise restarts);
+//! a worker whose budget expires checkpoints and is re-invoked, resuming
+//! from the stored cursor — exactly the paper's §4.1 protocol.
+
+use super::data::{DataIterator, MinibatchBuffer};
+use super::trainer::Trainer;
+use crate::runtime::{params, SharedEngine};
+use crate::scheduler::checkpoint::{Checkpoint, CheckpointStore};
+use crate::storage::ParamStore;
+use crate::sync::HierarchicalSync;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+
+/// Invocation budget: how many iterations one "function execution" may
+/// run before the platform's duration cap forces a restart.
+#[derive(Clone, Copy, Debug)]
+pub struct InvocationBudget {
+    pub iters_per_invocation: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub variant: String,
+    pub n_workers: usize,
+    pub total_iters: u64,
+    pub lr: f64,
+    pub seed: u64,
+    pub budget: InvocationBudget,
+    /// checkpoint every k iterations (worker 0 writes)
+    pub ckpt_every: u64,
+}
+
+#[derive(Debug)]
+pub struct FleetResult {
+    /// (iter, mean loss across workers)
+    pub losses: Vec<(u64, f32)>,
+    pub restarts: u64,
+    pub final_params_l2: f64,
+    pub store_counters: crate::storage::kv::Counters,
+}
+
+/// One worker invocation: runs [start, end) iterations, returns per-iter
+/// losses. Mirrors a single serverless function execution.
+#[allow(clippy::too_many_arguments)]
+fn invocation(
+    engine: &SharedEngine,
+    store: &ParamStore,
+    ckpts: &CheckpointStore,
+    cfg: &FleetConfig,
+    worker: usize,
+    start: u64,
+    end: u64,
+    barrier: &Barrier,
+) -> Result<Vec<(u64, f32)>> {
+    let spec = engine.with(|e| e.manifest().variant(&cfg.variant).cloned())?;
+
+    // (re)initialize — a stateless function must rebuild everything; the
+    // checkpoint supplies params/optimizer/data-cursor for resumes
+    let mut trainer = match ckpts.load("job") {
+        Some(c) if c.iter >= start && start > 0 => {
+            let mut t = Trainer::new(
+                engine.clone(),
+                spec.clone(),
+                c.params.clone(),
+                cfg.lr,
+            );
+            t.restore(c.params, c.opt_m, c.opt_v, c.iter);
+            t
+        }
+        _ => Trainer::new(
+            engine.clone(),
+            spec.clone(),
+            params::init_params(&spec, cfg.seed),
+            cfg.lr,
+        ),
+    };
+    // data iterator resumes at the invocation's first iteration
+    let mut data = DataIterator::new(spec.clone(), worker as u64, cfg.seed ^ 0xC0FFEE, start);
+    let mut buffer = MinibatchBuffer::new();
+    let sync = HierarchicalSync::new(store.clone(), cfg.n_workers, worker);
+
+    let mut losses = Vec::new();
+    for iter in start..end {
+        let tokens = buffer.take(&mut data);
+        let (loss, grads) = trainer.grad_step(&tokens)?;
+        let avg = sync.sync(iter, &grads)?;
+        trainer.apply(&avg)?;
+        losses.push((iter, loss));
+        if worker == 0 && (iter + 1) % cfg.ckpt_every == 0 {
+            ckpts.save(
+                "job",
+                Checkpoint {
+                    iter: iter + 1,
+                    params: trainer.params.clone(),
+                    opt_m: trainer.m.clone(),
+                    opt_v: trainer.v.clone(),
+                    data_cursor: iter + 1,
+                },
+            );
+        }
+    }
+    // all workers finish the invocation span before anyone restarts, so
+    // the checkpoint the next invocation reads is complete
+    barrier.wait();
+    if worker == 0 {
+        ckpts.save(
+            "job",
+            Checkpoint {
+                iter: end,
+                params: trainer.params.clone(),
+                opt_m: trainer.m.clone(),
+                opt_v: trainer.v.clone(),
+                data_cursor: end,
+            },
+        );
+    }
+    barrier.wait();
+    Ok(losses)
+}
+
+/// Train `total_iters` with a fleet of worker threads under invocation
+/// budgets. Returns the merged loss curve and lifecycle statistics.
+pub fn run_worker_fleet(engine: SharedEngine, cfg: FleetConfig) -> Result<FleetResult> {
+    let store = ParamStore::new();
+    let ckpts = CheckpointStore::new();
+    let mut restarts = 0u64;
+    let mut all_losses: Vec<Vec<(u64, f32)>> = vec![Vec::new(); cfg.n_workers];
+
+    // warm the executables once (compile outside the timed region)
+    engine.with(|e| e.warm(&cfg.variant))?;
+
+    let mut start = 0u64;
+    while start < cfg.total_iters {
+        let end = (start + cfg.budget.iters_per_invocation).min(cfg.total_iters);
+        if start > 0 {
+            restarts += cfg.n_workers as u64; // every worker re-invoked
+        }
+        let barrier = Arc::new(Barrier::new(cfg.n_workers));
+        let (tx, rx) = mpsc::channel();
+        std::thread::scope(|scope| {
+            for w in 0..cfg.n_workers {
+                let engine = engine.clone();
+                let store = store.clone();
+                let ckpts = ckpts.clone();
+                let cfg = cfg.clone();
+                let barrier = barrier.clone();
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    let r = invocation(&engine, &store, &ckpts, &cfg, w, start, end, &barrier);
+                    tx.send((w, r)).unwrap();
+                });
+            }
+        });
+        drop(tx);
+        for (w, r) in rx {
+            all_losses[w].extend(r?);
+        }
+        start = end;
+    }
+
+    // mean loss across workers per iteration
+    let mut merged: std::collections::BTreeMap<u64, (f32, u32)> = Default::default();
+    for wl in &all_losses {
+        for (i, l) in wl {
+            let e = merged.entry(*i).or_insert((0.0, 0));
+            e.0 += l;
+            e.1 += 1;
+        }
+    }
+    let losses: Vec<(u64, f32)> = merged
+        .into_iter()
+        .map(|(i, (s, c))| (i, s / c as f32))
+        .collect();
+
+    let ckpt = ckpts.load("job").expect("final checkpoint");
+    let l2 = ckpt.params.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    Ok(FleetResult {
+        losses,
+        restarts,
+        final_params_l2: l2,
+        store_counters: store.counters(),
+    })
+}

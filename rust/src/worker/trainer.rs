@@ -1,0 +1,62 @@
+//! Trainer (§4.2 ②c): runs the AOT-compiled training code over one
+//! minibatch and applies the aggregated update — thin, typed wrapper
+//! around the PJRT engine for one model variant.
+
+use crate::runtime::{SharedEngine, VariantSpec};
+use anyhow::Result;
+
+/// Adam hyperparameters matching python/compile/kernels/adam.py.
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+
+/// One worker's training state for a model variant.
+pub struct Trainer {
+    engine: SharedEngine,
+    pub spec: VariantSpec,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub lr: f64,
+    /// Adam timestep (bias correction); equals applied updates
+    pub t: u64,
+}
+
+impl Trainer {
+    pub fn new(engine: SharedEngine, spec: VariantSpec, params: Vec<f32>, lr: f64) -> Trainer {
+        let n = spec.n_params;
+        assert_eq!(params.len(), n);
+        Trainer { engine, spec, params, m: vec![0.0; n], v: vec![0.0; n], lr, t: 0 }
+    }
+
+    /// Restore optimizer state (checkpoint resume).
+    pub fn restore(&mut self, params: Vec<f32>, m: Vec<f32>, v: Vec<f32>, t: u64) {
+        self.params = params;
+        self.m = m;
+        self.v = v;
+        self.t = t;
+    }
+
+    /// Forward+backward on `tokens`; returns (loss, gradients).
+    pub fn grad_step(&self, tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let name = self.spec.name.clone();
+        let out = self
+            .engine
+            .with(|e| e.grad_step(&name, &self.params, tokens))?;
+        Ok((out.loss, out.grads))
+    }
+
+    /// Apply (already-aggregated) gradients with fused Adam.
+    pub fn apply(&mut self, grads: &[f32]) -> Result<()> {
+        self.t += 1;
+        let lr_t = self.lr * (1.0 - BETA2.powi(self.t as i32)).sqrt()
+            / (1.0 - BETA1.powi(self.t as i32));
+        let name = self.spec.name.clone();
+        let out = self.engine.with(|e| {
+            e.apply_update(&name, &self.params, &self.m, &self.v, grads, lr_t as f32)
+        })?;
+        self.params = out.params;
+        self.m = out.m;
+        self.v = out.v;
+        Ok(())
+    }
+}

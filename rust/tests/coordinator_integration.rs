@@ -1,0 +1,136 @@
+//! Integration across the coordinator stack: workloads x systems x goals
+//! through the shared simulation driver, checking the paper's headline
+//! relationships end to end (no artifacts needed — pure simulation).
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, Goal, SimJob, Workloads};
+use smlt::optimizer::Config;
+use smlt::perfmodel::{Framework, ModelProfile};
+
+#[test]
+fn scenario1_deadline_only_smlt_honors_it() {
+    // Fig 9: 1-hour deadline; Siren/Cirrus are goal-oblivious
+    let phases = Workloads::static_run(ModelProfile::bert_medium(), 100, 256);
+    let deadline = 4500.0;
+    let mut smlt = SimJob::new(SystemKind::Smlt, phases.clone());
+    smlt.goal = Goal::Deadline { t_max_s: deadline };
+    let out = simulate(&smlt);
+    assert!(
+        out.total_time_s <= deadline,
+        "SMLT must meet the deadline: {}",
+        out.total_time_s
+    );
+
+    // under a *tight* fixed config, baselines blow the deadline
+    let mut siren = SimJob::new(SystemKind::Siren, phases.clone());
+    siren.fixed = Config { workers: 8, mem_mb: 2048 };
+    let siren_out = simulate(&siren);
+    assert!(siren_out.total_time_s > deadline, "{}", siren_out.total_time_s);
+}
+
+#[test]
+fn scenario2_budget_smlt_fastest_within_budget() {
+    // Fig 10: $50 budget; SMLT minimizes time subject to it
+    let phases = Workloads::static_run(ModelProfile::bert_medium(), 150, 256);
+    let budget = 50.0;
+    let mut smlt = SimJob::new(SystemKind::Smlt, phases.clone());
+    smlt.goal = Goal::Budget { s_max: budget };
+    let out = simulate(&smlt);
+    assert!(out.total_cost() <= budget, "cost {}", out.total_cost());
+
+    let mut fixed = SimJob::new(SystemKind::LambdaMl, phases);
+    fixed.fixed = Config { workers: 16, mem_mb: 3072 };
+    let fixed_out = simulate(&fixed);
+    if fixed_out.total_cost() <= budget {
+        assert!(
+            out.total_time_s < fixed_out.total_time_s,
+            "smlt {} vs fixed {}",
+            out.total_time_s,
+            fixed_out.total_time_s
+        );
+    }
+}
+
+#[test]
+fn headline_speedup_over_baselines_at_scale() {
+    // "up to 8x faster": large model, many workers, comm-bound baselines
+    let phases = Workloads::static_run(ModelProfile::bert_medium(), 50, 512);
+    let mut smlt = SimJob::new(SystemKind::Smlt, phases.clone());
+    smlt.goal = Goal::Fastest;
+    let t_smlt = simulate(&smlt).total_time_s;
+    let mut siren = SimJob::new(SystemKind::Siren, phases.clone());
+    siren.fixed = Config { workers: 64, mem_mb: 3072 };
+    let t_siren = simulate(&siren).total_time_s;
+    let speedup = t_siren / t_smlt;
+    assert!(
+        speedup > 2.0,
+        "expected multi-x speedup vs Siren, got {speedup:.2}x"
+    );
+}
+
+#[test]
+fn headline_cost_saving_on_nas() {
+    // Fig 13 / §5.5: ~3x cost saving vs LambdaML through adaptation
+    let phases = Workloads::nas_enas(ModelProfile::resnet50(), 16, 60, 9);
+    let smlt = simulate(&SimJob::new(SystemKind::Smlt, phases.clone()));
+    let mut lml = SimJob::new(SystemKind::LambdaMl, phases);
+    // user tuned LambdaML for the *first* trial's model (paper assumption)
+    lml.fixed = Config { workers: 48, mem_mb: 6144 };
+    let lml_out = simulate(&lml);
+    let saving = lml_out.total_cost() / smlt.total_cost();
+    assert!(
+        saving > 1.5,
+        "expected material NAS cost saving, got {saving:.2}x (smlt ${:.2} lml ${:.2})",
+        smlt.total_cost(),
+        lml_out.total_cost()
+    );
+}
+
+#[test]
+fn dynamic_batching_throughput_adapts() {
+    // Fig 12: when batch grows, SMLT grows the fleet; throughput tracks
+    let phases = Workloads::fig12_schedule(ModelProfile::resnet50());
+    let out = simulate(&SimJob::new(SystemKind::Smlt, phases));
+    let workers: Vec<u32> = out.config_trace.iter().map(|(_, c)| c.workers).collect();
+    assert_eq!(workers.len(), 4);
+    // batch 128 -> 512 phases: the chosen fleet must not stay identical
+    assert!(
+        workers.iter().any(|w| *w != workers[0]),
+        "fleet must adapt: {workers:?}"
+    );
+    assert_eq!(out.metrics.reconfigurations, 4);
+}
+
+#[test]
+fn framework_axis_changes_init_not_comm() {
+    let phases = Workloads::static_run(ModelProfile::resnet18(), 30, 128);
+    let mut tf = SimJob::new(SystemKind::Smlt, phases.clone());
+    tf.framework = Framework::Tensorflow;
+    let mut pt = SimJob::new(SystemKind::Smlt, phases);
+    pt.framework = Framework::Pytorch;
+    let out_tf = simulate(&tf);
+    let out_pt = simulate(&pt);
+    // comm identical, init differs => small constant total-time gap
+    let d_comm = (out_tf.metrics.comm_summary().mean - out_pt.metrics.comm_summary().mean).abs();
+    assert!(d_comm < 1e-9, "comm must not depend on framework");
+    assert!(out_tf.total_time_s >= out_pt.total_time_s);
+}
+
+#[test]
+fn all_systems_complete_all_workloads() {
+    // robustness sweep: no workload x system combination may wedge
+    let workloads = vec![
+        Workloads::static_run(ModelProfile::resnet18(), 20, 64),
+        Workloads::fig12_schedule(ModelProfile::resnet50()),
+        Workloads::online_learning(ModelProfile::resnet50(), 6, 2),
+        Workloads::nas_enas(ModelProfile::resnet18(), 5, 10, 4),
+    ];
+    for phases in workloads {
+        let want: u64 = phases.iter().map(|p| p.iters).sum();
+        for sys in SystemKind::all() {
+            let out = simulate(&SimJob::new(sys, phases.clone()));
+            assert_eq!(out.iters_done, want, "{} wedged", sys.name());
+            assert!(out.total_cost().is_finite() && out.total_cost() >= 0.0);
+        }
+    }
+}

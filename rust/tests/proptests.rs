@@ -1,0 +1,239 @@
+//! Property-based tests on coordinator invariants (hand-rolled driver —
+//! the offline registry has no proptest; `Cases` sweeps seeded random
+//! inputs and shrinks nothing, but failures print the seed for replay).
+
+use smlt::costmodel::{CostLedger, Pricing};
+use smlt::faas::{FaasPlatform, InvokeMode};
+use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective};
+use smlt::scheduler::{CheckpointStore, TaskScheduler};
+use smlt::storage::{ParamStore, StoreModel};
+use smlt::sync::{aggregate_mean, comm_breakdown, Scheme, SyncEnv};
+use smlt::util::rng::Pcg;
+use smlt::util::stats::{percentile_sorted, summarize};
+
+/// Run `n` seeded cases; panic with the seed on failure.
+fn cases(n: u64, f: impl Fn(&mut Pcg)) {
+    for seed in 0..n {
+        let mut rng = Pcg::new(0xBEEF ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if result.is_err() {
+            panic!("property failed at case seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_aggregate_mean_bounded_by_min_max() {
+    cases(50, |rng| {
+        let k = 1 + rng.below(8) as usize;
+        let len = 1 + rng.below(500) as usize;
+        let slices: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.normal() as f32 * 10.0).collect())
+            .collect();
+        let views: Vec<&[f32]> = slices.iter().map(|s| s.as_slice()).collect();
+        let mean = aggregate_mean(&views);
+        for j in 0..len {
+            let lo = views.iter().map(|s| s[j]).fold(f32::INFINITY, f32::min);
+            let hi = views.iter().map(|s| s[j]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(mean[j] >= lo - 1e-4 && mean[j] <= hi + 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_comm_time_monotone_in_gradient_size() {
+    cases(30, |rng| {
+        let n = 2 + rng.below(63) as u32;
+        let bw = rng.uniform(10e6, 100e6);
+        let env = SyncEnv::standard(bw);
+        let scheme = match rng.below(4) {
+            0 => Scheme::SmltHierarchical,
+            1 => Scheme::SirenCentral,
+            2 => Scheme::CirrusPs,
+            _ => Scheme::LambdaMlScatterReduce,
+        };
+        let g1 = 1_000_000 + rng.below(50_000_000);
+        let g2 = g1 * 2;
+        let t1 = comm_breakdown(scheme, &env, g1, n, 0).total();
+        let t2 = comm_breakdown(scheme, &env, g2, n, 0).total();
+        assert!(t2 > t1, "{scheme:?} n={n} g={g1}: {t1} !< {t2}");
+    });
+}
+
+#[test]
+fn prop_comm_phases_all_nonnegative() {
+    cases(40, |rng| {
+        let n = 1 + rng.below(200) as u32;
+        let env = SyncEnv::standard(rng.uniform(5e6, 200e6));
+        let b = comm_breakdown(
+            Scheme::SmltHierarchical,
+            &env,
+            1 + rng.below(1 << 30),
+            n,
+            rng.below(1 << 28),
+        );
+        for phase in [b.ul_shard, b.dl_shard, b.ul_aggr, b.dl_grad, b.ul_grad] {
+            assert!(phase >= 0.0 && phase.is_finite());
+        }
+    });
+}
+
+#[test]
+fn prop_cost_ledger_total_is_monotone() {
+    cases(30, |rng| {
+        let p = Pricing::default();
+        let mut l = CostLedger::default();
+        let mut prev = 0.0;
+        for _ in 0..20 {
+            match rng.below(4) {
+                0 => l.add_lambda(&p, 1 + rng.below(100) as u32, 128 + rng.below(10_000) as u32, rng.uniform(0.1, 100.0)),
+                1 => l.add_s3(rng.below(1000), rng.below(1000)),
+                2 => l.add_param_store(&p, 1 + rng.below(4) as u32, rng.uniform(1.0, 1000.0)),
+                _ => l.add_vm(&p, 1 + rng.below(8) as u32, rng.uniform(1.0, 1000.0)),
+            }
+            let t = l.total(&p);
+            assert!(t >= prev && t.is_finite());
+            prev = t;
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_restart_accounting_consistent() {
+    cases(25, |rng| {
+        let n = 1 + rng.below(32) as u32;
+        let mut ts = TaskScheduler::new(n);
+        let mut pf = FaasPlatform::with_seed(rng.next_u64());
+        let mut inj = smlt::faas::FailureInjector::new(rng.uniform(0.0, 0.01), rng.next_u64());
+        let mut total = 0;
+        for _ in 0..50 {
+            let (r, add) = ts.lifecycle_step(&mut pf, &mut inj, rng.uniform(1.0, 120.0), 4.0);
+            assert!(r <= n, "cannot restart more workers than exist");
+            assert!(add >= 0.0);
+            total += r as u64;
+        }
+        assert_eq!(ts.total_restarts, total);
+    });
+}
+
+#[test]
+fn prop_checkpoint_store_monotone_iterations() {
+    cases(25, |rng| {
+        let st = CheckpointStore::new();
+        let mut max_seen = 0;
+        for _ in 0..30 {
+            let iter = rng.below(100);
+            st.save("job", smlt::scheduler::checkpoint::Checkpoint { iter, ..Default::default() });
+            max_seen = max_seen.max(iter);
+            assert_eq!(st.load("job").unwrap().iter, max_seen);
+        }
+    });
+}
+
+#[test]
+fn prop_param_store_get_returns_what_was_put() {
+    cases(20, |rng| {
+        let kv = ParamStore::new();
+        let mut keys = Vec::new();
+        for i in 0..50 {
+            let key = format!("k{}", rng.below(30));
+            let val: Vec<f32> = (0..1 + rng.below(64)).map(|_| i as f32).collect();
+            kv.put(&key, val.clone());
+            keys.push((key.clone(), val));
+        }
+        // last write wins per key
+        let mut last: std::collections::HashMap<String, Vec<f32>> = Default::default();
+        for (k, v) in keys {
+            last.insert(k, v);
+        }
+        for (k, v) in last {
+            assert_eq!(kv.get(&k).unwrap().as_slice(), v.as_slice());
+        }
+    });
+}
+
+#[test]
+fn prop_bo_best_value_never_worse_than_warmup_min() {
+    struct Surface {
+        a: f64,
+        b: f64,
+    }
+    impl Objective for Surface {
+        fn eval(&mut self, c: Config) -> f64 {
+            let w = c.workers as f64 / 200.0;
+            let m = c.mem_mb as f64 / 10_240.0;
+            (w - self.a).powi(2) + (m - self.b).powi(2) + 0.1
+        }
+        fn eval_cost_s(&self, _: Config) -> f64 {
+            1.0
+        }
+    }
+    cases(15, |rng| {
+        let mut obj = Surface { a: rng.next_f64(), b: rng.next_f64() };
+        let bo = BayesOpt::new(
+            ConfigSpace::default(),
+            BoParams { seed: rng.next_u64(), ..Default::default() },
+        );
+        let res = bo.run(&mut obj);
+        // best == min over trace, and trace values are all >= best
+        let trace_min = res
+            .trace
+            .iter()
+            .map(|(_, y)| *y)
+            .fold(f64::INFINITY, f64::min);
+        assert!((res.best_value - trace_min).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_percentiles_ordered() {
+    cases(30, |rng| {
+        let xs: Vec<f64> = (0..1 + rng.below(200)).map(|_| rng.normal() * 5.0).collect();
+        let s = summarize(&xs);
+        assert!(s.min <= s.p25 + 1e-12);
+        assert!(s.p25 <= s.p50 + 1e-12);
+        assert!(s.p50 <= s.p75 + 1e-12);
+        assert!(s.p75 <= s.p95 + 1e-12);
+        assert!(s.p95 <= s.max + 1e-12);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((percentile_sorted(&sorted, 0.0) - s.min).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_store_transfer_time_positive_finite() {
+    cases(30, |rng| {
+        let m = if rng.next_f64() < 0.5 { StoreModel::s3_like() } else { StoreModel::redis_like(1 + rng.below(4) as u32) };
+        let t = m.transfer_s(rng.below(1 << 32), 1 + rng.below(256) as u32, rng.uniform(1e6, 1e9));
+        assert!(t > 0.0 && t.is_finite());
+    });
+}
+
+#[test]
+fn prop_invocations_monotone_in_work() {
+    cases(20, |rng| {
+        let pf = FaasPlatform::with_seed(rng.next_u64());
+        let init = rng.uniform(0.0, 60.0);
+        let w1 = rng.uniform(1.0, 1e5);
+        let w2 = w1 * rng.uniform(1.0, 3.0);
+        assert!(pf.invocations_needed(w2, init) >= pf.invocations_needed(w1, init));
+    });
+}
+
+#[test]
+fn prop_invoke_workers_returns_one_record_per_worker() {
+    cases(20, |rng| {
+        let mut pf = FaasPlatform::with_seed(rng.next_u64());
+        let n = 1 + rng.below(300) as u32;
+        let mode = match rng.below(3) {
+            0 => InvokeMode::DirectTracked,
+            1 => InvokeMode::AsyncChained,
+            _ => InvokeMode::StepFunctionsMap,
+        };
+        let inv = pf.invoke_workers(n, mode);
+        assert_eq!(inv.len(), n as usize);
+        assert!(inv.iter().all(|i| i.startup_delay_s >= 0.0));
+        pf.release_workers(n);
+    });
+}

@@ -1,0 +1,124 @@
+//! Integration: the Rust PJRT runtime reproduces the python ground truth.
+//!
+//! These tests require `make artifacts` to have been run (they are skipped
+//! otherwise) and are the cross-language correctness anchor of the stack:
+//! Rust-initialized params + Rust-generated tokens through the AOT
+//! grad_step / apply_update executables must match the numbers aot.py
+//! recorded from running the same computation in JAX.
+
+use smlt::runtime::{params, Engine, Manifest};
+
+fn engine() -> Option<Engine> {
+    let root = Manifest::default_root();
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::new(Manifest::load(root).unwrap()).unwrap())
+}
+
+#[test]
+fn grad_step_matches_python_smoke_record() {
+    let Some(mut eng) = engine() else { return };
+    let smoke = eng.manifest().smoke.clone();
+    let spec = eng.manifest().variant(&smoke.variant).unwrap().clone();
+    let p = params::init_params(&spec, smoke.seed);
+    let t = params::gen_tokens(&spec, smoke.seed);
+
+    let out = eng.grad_step(&spec.name, &p, &t).unwrap();
+    assert!(
+        (out.loss as f64 - smoke.expected_loss).abs() < 1e-3,
+        "loss: rust={} python={}",
+        out.loss,
+        smoke.expected_loss
+    );
+    let g_l2 = (out.grads.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt();
+    assert!(
+        (g_l2 - smoke.grads_l2).abs() / smoke.grads_l2 < 1e-3,
+        "grads l2: rust={g_l2} python={}",
+        smoke.grads_l2
+    );
+}
+
+#[test]
+fn apply_update_matches_python_smoke_record() {
+    let Some(mut eng) = engine() else { return };
+    let smoke = eng.manifest().smoke.clone();
+    let spec = eng.manifest().variant(&smoke.variant).unwrap().clone();
+    let p = params::init_params(&spec, smoke.seed);
+    let t = params::gen_tokens(&spec, smoke.seed);
+
+    let gs = eng.grad_step(&spec.name, &p, &t).unwrap();
+    let zeros = vec![0.0f32; spec.n_params];
+    let upd = eng
+        .apply_update(&spec.name, &p, &zeros, &zeros, &gs.grads, 1e-3)
+        .unwrap();
+    let p_l2 = (upd.params.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt();
+    assert!(
+        (p_l2 - smoke.params_l2_after_update).abs() / smoke.params_l2_after_update < 1e-3,
+        "params l2 after update: rust={p_l2} python={}",
+        smoke.params_l2_after_update
+    );
+}
+
+#[test]
+fn training_loop_reduces_loss() {
+    let Some(mut eng) = engine() else { return };
+    let spec = eng.manifest().variant("tiny").unwrap().clone();
+    let mut p = params::init_params(&spec, 0);
+    let t = params::gen_tokens(&spec, 0);
+    let mut m = vec![0.0f32; spec.n_params];
+    let mut v = vec![0.0f32; spec.n_params];
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 1..=12 {
+        let gs = eng.grad_step("tiny", &p, &t).unwrap();
+        if step == 1 {
+            first = gs.loss;
+        }
+        last = gs.loss;
+        // bias-corrected step size, as kernels/adam.py expects
+        let (b1, b2, lr) = (0.9f64, 0.999f64, 1e-2f64);
+        let lr_t = lr * (1.0 - b2.powi(step)).sqrt() / (1.0 - b1.powi(step));
+        let out = eng
+            .apply_update("tiny", &p, &m, &v, &gs.grads, lr_t as f32)
+            .unwrap();
+        p = out.params;
+        m = out.m;
+        v = out.v;
+    }
+    assert!(
+        last < first - 0.5,
+        "overfit loop should reduce loss: first={first} last={last}"
+    );
+}
+
+#[test]
+fn shard_mean_executable_matches_native() {
+    let Some(mut eng) = engine() else { return };
+    let Some(agg) = eng.manifest().aggregators.first().cloned() else { return };
+    let n = agg.n_workers * agg.shard_len;
+    let stacked: Vec<f32> = (0..n).map(|i| (i % 1000) as f32 * 0.001).collect();
+    let out = eng
+        .shard_mean(agg.n_workers, agg.shard_len, &stacked)
+        .unwrap();
+    assert_eq!(out.len(), agg.shard_len);
+    for j in (0..agg.shard_len).step_by(997) {
+        let mut acc = 0.0f64;
+        for w in 0..agg.n_workers {
+            acc += stacked[w * agg.shard_len + j] as f64;
+        }
+        let want = acc / agg.n_workers as f64;
+        assert!((out[j] as f64 - want).abs() < 1e-5, "elem {j}");
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(mut eng) = engine() else { return };
+    let spec = eng.manifest().variant("tiny").unwrap().clone();
+    let p = vec![0.0f32; spec.n_params - 1];
+    let t = params::gen_tokens(&spec, 0);
+    assert!(eng.grad_step("tiny", &p, &t).is_err());
+    assert!(eng.grad_step("no_such_variant", &p, &t).is_err());
+}
