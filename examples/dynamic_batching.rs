@@ -13,7 +13,7 @@ use smlt::perfmodel::ModelProfile;
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smlt::util::error::Result<()> {
     let args = Args::from_env();
     let seed = args.get_usize("seed", 17) as u64;
     let phases = Workloads::fig12_schedule(ModelProfile::resnet50());

@@ -14,7 +14,7 @@ use smlt::optimizer::Config;
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smlt::util::error::Result<()> {
     let args = Args::from_env();
     let trials = args.get_usize("trials", 16) as u32;
     let iters = args.get_usize("iters-per-trial", 60) as u64;

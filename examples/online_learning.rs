@@ -12,7 +12,7 @@ use smlt::perfmodel::ModelProfile;
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smlt::util::error::Result<()> {
     let args = Args::from_env();
     let hours = args.get_usize("hours", 24) as u32;
     let seed = args.get_usize("seed", 5) as u64;

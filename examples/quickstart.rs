@@ -17,7 +17,7 @@ use smlt::coordinator::EndClient;
 use smlt::util::cli::Args;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smlt::util::error::Result<()> {
     let args = Args::from_env();
     let model = args.get_or("model", "small").to_string();
     let workers = args.get_usize("workers", 4) as u32;

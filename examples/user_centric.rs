@@ -13,7 +13,7 @@ use smlt::perfmodel::ModelProfile;
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> smlt::util::error::Result<()> {
     let args = Args::from_env();
     let deadline = args.get_f64("deadline", 4500.0);
     let budget = args.get_f64("budget", 50.0);

@@ -1,0 +1,82 @@
+//! Job arrival processes for the multi-tenant cluster simulation.
+//!
+//! The paper's platform hosts many concurrent design-and-training
+//! workflows; how they *arrive* shapes contention. Three generators,
+//! all deterministic given their inputs:
+//!
+//! - [`ArrivalProcess::Batch`] — everything submitted at t=0 (worst-case
+//!   burst; the regime the scalability figures stress),
+//! - [`ArrivalProcess::Poisson`] — memoryless arrivals at a given rate
+//!   (the standard open-loop cloud-workload model),
+//! - [`ArrivalProcess::Trace`] — explicit submission offsets (replay of a
+//!   recorded tenant schedule).
+
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// all jobs arrive at t = 0
+    Batch,
+    /// exponential inter-arrival gaps with the given mean rate (jobs/s)
+    Poisson { rate_per_s: f64, seed: u64 },
+    /// explicit arrival offsets (seconds); padded with its last entry if
+    /// shorter than the number of jobs
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    /// Arrival times (seconds, ascending) for `n` jobs.
+    pub fn times(&self, n: usize) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Batch => vec![0.0; n],
+            ArrivalProcess::Poisson { rate_per_s, seed } => {
+                let mut rng = Pcg::new(*seed ^ 0xA221);
+                let rate = rate_per_s.max(1e-12);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(rate);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Trace(offsets) => {
+                let mut sorted: Vec<f64> = offsets.iter().map(|t| t.max(0.0)).collect();
+                sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN arrival time"));
+                let pad = sorted.last().copied().unwrap_or(0.0);
+                (0..n)
+                    .map(|i| sorted.get(i).copied().unwrap_or(pad))
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_is_all_zero() {
+        assert_eq!(ArrivalProcess::Batch.times(4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn poisson_is_deterministic_ascending_with_right_mean() {
+        let p = ArrivalProcess::Poisson { rate_per_s: 0.01, seed: 9 };
+        let a = p.times(2000);
+        let b = p.times(2000);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // mean gap ~ 100 s
+        let mean_gap = a.last().unwrap() / a.len() as f64;
+        assert!((mean_gap - 100.0).abs() < 10.0, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn trace_pads_sorts_and_clamps() {
+        let p = ArrivalProcess::Trace(vec![5.0, 1.0, -3.0]);
+        assert_eq!(p.times(5), vec![0.0, 1.0, 5.0, 5.0, 5.0]);
+        assert_eq!(ArrivalProcess::Trace(Vec::new()).times(2), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,482 @@
+//! Fleet scheduler: interleaves many [`JobDriver`]s over one shared
+//! [`ClusterEnv`] in virtual-time order.
+//!
+//! Event loop: the unfinished, unblocked job with the smallest virtual
+//! clock takes one step (ties break by submission order, so runs are
+//! deterministic). A job whose slot request is denied parks with no lease
+//! held (no hold-and-wait → no deadlock); it wakes when a step actually
+//! returns capacity to the pool. Arbitration is by goal class
+//! (Deadline > Budget > Fastest > None):
+//!
+//! - **Preemption** — when a high-class job is denied, the scheduler
+//!   revokes fleets of strictly lower-class jobs (lowest class first,
+//!   newest arrival first) until the request fits. Victims pay the
+//!   checkpoint/restart price (cold start + re-init) and re-enter the
+//!   queue; they do not steal back until capacity is organically
+//!   released.
+//! - **Re-optimization** — a driver squeezed below its preferred fleet
+//!   size re-runs its Bayesian search over a quota-capped space (see
+//!   [`JobDriver`]), so scarcity feeds the paper's §3.2 loop rather than
+//!   bypassing it.
+//!
+//! [`JobDriver`]: crate::coordinator::simrun::JobDriver
+
+use super::arrival::ArrivalProcess;
+use super::quota::TenantQuota;
+use super::{ClusterEnv, TenantId};
+use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
+
+#[derive(Clone, Debug)]
+pub struct ClusterParams {
+    /// seed for the shared platform (cold starts, anomalies)
+    pub seed: u64,
+    /// account-level concurrent-execution limit shared by all tenants
+    pub account_limit: u32,
+    /// aggregate storage capacity in worker-NICs (see
+    /// [`ClusterEnv::storage_saturation_workers`])
+    pub storage_saturation_workers: f64,
+    /// revoke lower-class fleets when a constrained job is denied slots
+    pub preemption: bool,
+}
+
+impl Default for ClusterParams {
+    fn default() -> Self {
+        ClusterParams {
+            seed: 17,
+            account_limit: crate::faas::FaasLimits::default().concurrency_limit,
+            storage_saturation_workers: 512.0,
+            preemption: true,
+        }
+    }
+}
+
+struct Slot {
+    driver: JobDriver,
+    arrive_s: f64,
+    blocked: bool,
+    finished: bool,
+}
+
+/// One job's result inside a fleet run.
+pub struct JobOutcome {
+    pub tenant: TenantId,
+    /// the goal the job ran under (hit-rate bucketing by class)
+    pub goal: Goal,
+    pub arrive_s: f64,
+    /// global virtual time the job completed
+    pub finish_s: f64,
+    /// virtual seconds spent parked waiting for slots
+    pub queue_wait_s: f64,
+    pub preemptions: u32,
+    /// global virtual time the worker fleet first launched
+    pub first_fleet_s: Option<f64>,
+    pub outcome: SimOutcome,
+}
+
+impl JobOutcome {
+    /// Arrival-to-completion span (what a tenant experiences).
+    pub fn duration_s(&self) -> f64 {
+        self.finish_s - self.arrive_s
+    }
+
+    pub fn met_deadline(&self, t_max_s: f64) -> bool {
+        self.duration_s() <= t_max_s
+    }
+}
+
+pub struct FleetOutcome {
+    pub jobs: Vec<JobOutcome>,
+    /// first arrival to last completion
+    pub makespan_s: f64,
+    /// high-water mark of concurrent executions (must be <= the limit)
+    pub peak_in_flight: u32,
+    pub account_limit: u32,
+    /// slot requests the pool turned down
+    pub denials: u64,
+    /// launches the platform throttled (account pressure, Map caps)
+    pub throttled_invocations: u64,
+    pub preemptions: u64,
+}
+
+impl FleetOutcome {
+    pub fn total_cost(&self) -> f64 {
+        self.jobs.iter().map(|j| j.outcome.total_cost()).sum()
+    }
+
+    pub fn mean_duration_s(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.duration_s()).sum::<f64>() / self.jobs.len() as f64
+    }
+}
+
+/// Multi-tenant cluster simulation: submit jobs, then [`run`](Self::run).
+pub struct ClusterSim {
+    pub params: ClusterParams,
+    env: ClusterEnv,
+    jobs: Vec<Slot>,
+}
+
+impl ClusterSim {
+    pub fn new(params: ClusterParams) -> ClusterSim {
+        let env = ClusterEnv::shared(
+            params.seed,
+            params.account_limit,
+            params.storage_saturation_workers,
+        );
+        ClusterSim { params, env, jobs: Vec::new() }
+    }
+
+    /// Submit one job arriving at `arrive_s` under `quota`; returns its
+    /// tenant id (== its index in the outcome's job list).
+    pub fn submit(&mut self, job: SimJob, arrive_s: f64, quota: TenantQuota) -> TenantId {
+        let tenant = self.env.pool.register_tenant(quota);
+        let driver = JobDriver::new(job, tenant, &self.env, arrive_s);
+        self.jobs.push(Slot { driver, arrive_s, blocked: false, finished: false });
+        tenant
+    }
+
+    /// Submit a batch of jobs with arrival times drawn from `arrivals`,
+    /// all under the same per-tenant quota.
+    pub fn submit_all(&mut self, jobs: Vec<SimJob>, arrivals: &ArrivalProcess, quota: TenantQuota) {
+        let times = arrivals.times(jobs.len());
+        for (job, t) in jobs.into_iter().zip(times) {
+            self.submit(job, t, quota);
+        }
+    }
+
+    /// Run every submitted job to completion; deterministic given the
+    /// params seed and the job seeds.
+    pub fn run(mut self) -> FleetOutcome {
+        let total_work: u64 = self
+            .jobs
+            .iter()
+            .map(|s| s.driver.job.total_iters() + 10 * s.driver.job.phases.len() as u64 + 10)
+            .sum();
+        let max_steps = 100_000 + 50 * total_work * (self.jobs.len() as u64 + 1);
+        let mut steps = 0u64;
+
+        loop {
+            let idx = match self.next_runnable() {
+                Some(i) => i,
+                None => match self.highest_priority_blocked() {
+                    // nothing runnable: force the top-class parked job to
+                    // retry (no leases can be outstanding here, so its
+                    // clamped request must fit)
+                    Some(i) => i,
+                    None => break, // everything finished
+                },
+            };
+
+            let releases_before = self.env.pool.releases;
+            let ev = {
+                let slot = &mut self.jobs[idx];
+                slot.blocked = false;
+                slot.driver.step(&mut self.env)
+            };
+            // wake parked jobs when the *step itself* returned capacity
+            // (reconfiguration, finish, or a denied resize dropping its
+            // old lease). This runs BEFORE any preemption below, so a
+            // preemption's releases stay earmarked for the preemptor:
+            // victims parked by try_preempt_for are not woken in the same
+            // iteration and cannot steal the freed slots straight back.
+            if self.env.pool.releases > releases_before {
+                let t = self.jobs[idx].driver.now();
+                for slot in self.jobs.iter_mut() {
+                    if !slot.finished && slot.blocked {
+                        slot.driver.stall_until(t);
+                        slot.blocked = false;
+                    }
+                }
+            }
+            match ev {
+                StepEvent::Finished => self.jobs[idx].finished = true,
+                StepEvent::Progressed => {}
+                StepEvent::Blocked { want } => {
+                    self.jobs[idx].blocked = true;
+                    if self.params.preemption {
+                        self.try_preempt_for(idx, want);
+                    }
+                }
+            }
+
+            steps += 1;
+            assert!(
+                steps < max_steps,
+                "cluster event loop exceeded {max_steps} steps — scheduling livelock"
+            );
+        }
+        self.collect()
+    }
+
+    fn next_runnable(&self) -> Option<usize> {
+        self.jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.finished && !s.blocked)
+            .min_by(|(_, a), (_, b)| {
+                a.driver
+                    .now()
+                    .partial_cmp(&b.driver.now())
+                    .expect("NaN virtual time")
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn highest_priority_blocked(&self) -> Option<usize> {
+        self.jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.finished && s.blocked)
+            .min_by(|(_, a), (_, b)| {
+                b.driver
+                    .job
+                    .goal
+                    .class()
+                    .cmp(&a.driver.job.goal.class())
+                    .then(
+                        a.arrive_s
+                            .partial_cmp(&b.arrive_s)
+                            .expect("NaN arrival"),
+                    )
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Free slots for blocked job `idx` by revoking fleets of strictly
+    /// lower goal class: lowest class first, newest arrival first. The
+    /// freed slots are leased to the requester on the spot (so a
+    /// runnable lower-class job reaching its own phase boundary first
+    /// cannot snipe them), and nothing is evicted at all unless the
+    /// preemptable pool can actually cover the request.
+    fn try_preempt_for(&mut self, idx: usize, want: u32) {
+        let class = self.jobs[idx].driver.job.goal.class();
+        let tenant = self.jobs[idx].driver.tenant;
+        let t = self.jobs[idx].driver.now();
+        // feasibility first: evicting victims without being able to
+        // satisfy `want` would charge them a restart for nothing
+        let preemptable: u64 = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(j, s)| {
+                *j != idx
+                    && !s.finished
+                    && s.driver.holds_lease()
+                    && s.driver.job.goal.class() < class
+            })
+            .map(|(_, s)| s.driver.current_config().workers as u64)
+            .sum();
+        if self.env.pool.grantable(tenant) as u64 + preemptable < want as u64 {
+            return;
+        }
+        while self.env.pool.grantable(tenant) < want {
+            let victim = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(j, s)| {
+                    *j != idx
+                        && !s.finished
+                        && s.driver.holds_lease()
+                        && s.driver.job.goal.class() < class
+                })
+                .min_by(|(_, a), (_, b)| {
+                    a.driver
+                        .job
+                        .goal
+                        .class()
+                        .cmp(&b.driver.job.goal.class())
+                        .then(
+                            b.arrive_s
+                                .partial_cmp(&a.arrive_s)
+                                .expect("NaN arrival"),
+                        )
+                })
+                .map(|(j, _)| j);
+            let Some(j) = victim else { break };
+            self.jobs[j].driver.preempt(&mut self.env);
+            self.jobs[j].driver.stall_until(t);
+            self.jobs[j].blocked = true; // waits for an organic release
+        }
+        // reserve the freed slots for the requester immediately: its
+        // next step re-enters await_slots, which swaps this lease for a
+        // fresh one of the same size atomically within that step
+        if let super::Acquire::Granted(id) = self.env.pool.try_acquire(tenant, want) {
+            self.jobs[idx].driver.adopt_lease(id);
+            self.jobs[idx].blocked = false;
+        }
+    }
+
+    fn collect(self) -> FleetOutcome {
+        let peak_in_flight = self.env.pool.peak_in_flight;
+        let denials = self.env.pool.denials;
+        let throttled = self.env.platform.total_throttled;
+        let account_limit = self.params.account_limit;
+        let mut first_arrive = f64::INFINITY;
+        let mut last_finish = 0.0f64;
+        let mut preempt_total = 0u64;
+        let jobs: Vec<JobOutcome> = self
+            .jobs
+            .into_iter()
+            .map(|s| {
+                first_arrive = first_arrive.min(s.arrive_s);
+                last_finish = last_finish.max(s.driver.now());
+                preempt_total += s.driver.preemptions as u64;
+                JobOutcome {
+                    tenant: s.driver.tenant,
+                    goal: s.driver.job.goal,
+                    arrive_s: s.arrive_s,
+                    finish_s: s.driver.now(),
+                    queue_wait_s: s.driver.stalled_s,
+                    preemptions: s.driver.preemptions,
+                    first_fleet_s: s.driver.first_fleet_s,
+                    outcome: s.driver.into_outcome(),
+                }
+            })
+            .collect();
+        FleetOutcome {
+            jobs,
+            makespan_s: if first_arrive.is_finite() {
+                last_finish - first_arrive
+            } else {
+                0.0
+            },
+            peak_in_flight,
+            account_limit,
+            denials,
+            throttled_invocations: throttled,
+            preemptions: preempt_total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemKind;
+    use crate::coordinator::simrun::Goal;
+    use crate::coordinator::Workloads;
+    use crate::perfmodel::ModelProfile;
+
+    fn small_job(seed: u64) -> SimJob {
+        let mut j = SimJob::new(
+            SystemKind::Smlt,
+            Workloads::static_run(ModelProfile::resnet18(), 12, 128),
+        );
+        j.seed = seed;
+        j
+    }
+
+    fn run_fleet(n: usize, account_limit: u32) -> FleetOutcome {
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit,
+            ..Default::default()
+        });
+        let jobs: Vec<SimJob> = (0..n).map(|i| small_job(100 + i as u64)).collect();
+        sim.submit_all(
+            jobs,
+            &ArrivalProcess::Poisson { rate_per_s: 1.0 / 30.0, seed: 5 },
+            TenantQuota::unlimited(),
+        );
+        sim.run()
+    }
+
+    #[test]
+    fn all_jobs_complete_and_limit_holds() {
+        let out = run_fleet(6, 64);
+        assert_eq!(out.jobs.len(), 6);
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 12, "tenant {} wedged", j.tenant);
+            assert!(j.finish_s >= j.arrive_s);
+        }
+        assert!(
+            out.peak_in_flight <= out.account_limit,
+            "{} > {}",
+            out.peak_in_flight,
+            out.account_limit
+        );
+    }
+
+    #[test]
+    fn fleet_runs_are_deterministic() {
+        let a = run_fleet(5, 48);
+        let b = run_fleet(5, 48);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.outcome.total_cost(), y.outcome.total_cost());
+            assert_eq!(x.queue_wait_s, y.queue_wait_s);
+        }
+        assert_eq!(a.peak_in_flight, b.peak_in_flight);
+        assert_eq!(a.denials, b.denials);
+    }
+
+    #[test]
+    fn single_job_fleet_matches_simulate() {
+        // one tenant on an uncontended account == the classic simulator
+        let job = small_job(42);
+        let solo = crate::coordinator::simulate(&job);
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: job.seed,
+            storage_saturation_workers: f64::INFINITY,
+            ..Default::default()
+        });
+        sim.submit(job, 0.0, TenantQuota::unlimited());
+        let out = sim.run();
+        assert_eq!(out.jobs[0].outcome.total_time_s, solo.total_time_s);
+        assert_eq!(out.jobs[0].outcome.total_cost(), solo.total_cost());
+        assert_eq!(out.jobs[0].outcome.config_trace, solo.config_trace);
+    }
+
+    #[test]
+    fn contention_slows_the_crowd() {
+        // same workload, tighter account: jobs queue, so the fleet takes
+        // longer end-to-end than an uncontended account
+        let roomy = run_fleet(8, 1000);
+        let tight = run_fleet(8, 8);
+        assert!(tight.denials > 0, "an 8-slot account must make jobs queue");
+        assert!(
+            tight.mean_duration_s() > roomy.mean_duration_s(),
+            "tight {} vs roomy {}",
+            tight.mean_duration_s(),
+            roomy.mean_duration_s()
+        );
+        assert!(tight.peak_in_flight <= 8);
+    }
+
+    #[test]
+    fn deadline_class_outranks_none_class_under_pressure() {
+        // two tenants, slots for one fleet at a time: the Deadline job
+        // should wait less than the best-effort job
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 16,
+            ..Default::default()
+        });
+        let mut dl = small_job(1);
+        dl.goal = Goal::Deadline { t_max_s: 3.0 * 3600.0 };
+        let mut be = small_job(2);
+        be.goal = Goal::None;
+        // best-effort arrives first and grabs the slots
+        sim.submit(be, 0.0, TenantQuota::unlimited());
+        sim.submit(dl, 1.0, TenantQuota::unlimited());
+        let out = sim.run();
+        assert_eq!(out.jobs[0].outcome.iters_done, 12);
+        assert_eq!(out.jobs[1].outcome.iters_done, 12);
+        // whether it coexists (both fit) or preempts its way in, the
+        // deadline job must be admitted essentially immediately — any
+        // long wait means it sat behind the best-effort fleet
+        assert!(
+            out.jobs[1].queue_wait_s <= 60.0,
+            "deadline job starved: waited {} s (preemptions {})",
+            out.jobs[1].queue_wait_s,
+            out.preemptions
+        );
+        assert!(
+            out.jobs[1].met_deadline(3.0 * 3600.0),
+            "deadline missed: duration {} s",
+            out.jobs[1].duration_s()
+        );
+    }
+}

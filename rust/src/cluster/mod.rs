@@ -1,0 +1,129 @@
+//! Multi-tenant cluster layer: N concurrent training jobs on one shared
+//! FaaS account.
+//!
+//! The single-job simulator ([`crate::coordinator::simrun`]) answers "how
+//! does one job behave"; this layer answers the paper's actual premise —
+//! a serverless platform *continuously hosting many* ML workflows with
+//! dynamic resource demands. Three pieces:
+//!
+//! - [`arrival`] — deterministic job arrival processes (batch / Poisson /
+//!   trace replay),
+//! - [`quota`] — the shared account concurrency pool with per-tenant
+//!   quotas and lease-based conservation invariants,
+//! - [`fleet`] — the fleet scheduler: advances per-job [`JobDriver`]s in
+//!   virtual-time order over one shared [`ClusterEnv`], arbitrating slots
+//!   by goal class (Deadline > Budget > Fastest > None) with preemption;
+//!   jobs squeezed below their preferred fleet size re-optimize through
+//!   the existing Bayesian loop (the driver caps its search space at the
+//!   tenant's quota).
+//!
+//! [`ClusterEnv`] is the shared world state a driver steps against: the
+//! platform (cold starts, throttling, the account limit), the quota pool,
+//! and the aggregate storage bandwidth that jobs' synchronization traffic
+//! contends for. [`ClusterEnv::single`] degenerates to the old
+//! single-tenant world — `simulate()` runs through exactly the same code
+//! path with no contention terms active, which the golden-trace test
+//! pins down.
+//!
+//! [`JobDriver`]: crate::coordinator::simrun::JobDriver
+
+pub mod arrival;
+pub mod fleet;
+pub mod quota;
+
+pub use arrival::ArrivalProcess;
+pub use fleet::{ClusterParams, ClusterSim, FleetOutcome, JobOutcome};
+pub use quota::{Acquire, Lease, QuotaPool, TenantId, TenantQuota};
+
+use crate::faas::FaasPlatform;
+
+/// Shared world state one [`JobDriver`](crate::coordinator::simrun::JobDriver)
+/// advances against: platform + concurrency pool + shared storage capacity.
+pub struct ClusterEnv {
+    pub platform: FaasPlatform,
+    pub pool: QuotaPool,
+    /// Aggregate worker count at which the shared parameter-store /
+    /// object-store bandwidth saturates: with `W` workers from *other*
+    /// jobs in flight, a job's per-iteration communication time stretches
+    /// by `1 + W / saturation`. `f64::INFINITY` disables contention
+    /// (single-tenant mode).
+    pub storage_saturation_workers: f64,
+}
+
+impl ClusterEnv {
+    /// The degenerate single-tenant world `simulate()` runs in: an
+    /// effectively unbounded pool (the platform's own concurrency limit
+    /// still applies inside `invoke_workers`) and no cross-job storage
+    /// contention. Tenant 0 is pre-registered.
+    pub fn single(seed: u64) -> ClusterEnv {
+        let mut pool = QuotaPool::new(u32::MAX);
+        pool.register_tenant(TenantQuota::unlimited());
+        ClusterEnv {
+            platform: FaasPlatform::with_seed(seed),
+            pool,
+            storage_saturation_workers: f64::INFINITY,
+        }
+    }
+
+    /// A shared account: `account_limit` concurrent executions total,
+    /// platform seeded with `seed`, storage saturating at
+    /// `storage_saturation_workers` concurrent foreign workers (must be
+    /// > 0; pass `f64::INFINITY` to disable contention — a non-positive
+    /// value would silently invert the model, so it is rejected here).
+    pub fn shared(seed: u64, account_limit: u32, storage_saturation_workers: f64) -> ClusterEnv {
+        assert!(
+            storage_saturation_workers > 0.0,
+            "storage_saturation_workers must be > 0 (got {storage_saturation_workers}); \
+             use f64::INFINITY to disable contention"
+        );
+        let mut platform = FaasPlatform::with_seed(seed);
+        platform.limits.concurrency_limit = account_limit;
+        ClusterEnv {
+            platform,
+            pool: QuotaPool::new(account_limit),
+            storage_saturation_workers,
+        }
+    }
+
+    /// Communication-time stretch factor for a job currently holding
+    /// `own_workers` slots: contention comes from *other* tenants' load.
+    /// Exactly 1.0 when nothing else is in flight (or contention is
+    /// disabled), so the single-tenant path is bit-identical to the
+    /// pre-cluster simulator.
+    pub fn comm_factor(&self, own_workers: u32) -> f64 {
+        let others = self.pool.total_in_flight().saturating_sub(own_workers) as f64;
+        let x = others / self.storage_saturation_workers;
+        if x.is_finite() && x > 0.0 {
+            1.0 + x
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_env_never_contends() {
+        let mut env = ClusterEnv::single(1);
+        assert_eq!(env.comm_factor(0), 1.0);
+        let Acquire::Granted(_) = env.pool.try_acquire(0, 200) else { panic!() };
+        assert_eq!(env.comm_factor(200), 1.0);
+        assert_eq!(env.comm_factor(0), 1.0, "infinite saturation: no stretch");
+    }
+
+    #[test]
+    fn shared_env_stretches_comm_with_foreign_load() {
+        let mut env = ClusterEnv::shared(1, 1000, 100.0);
+        let a = env.pool.register_tenant(TenantQuota::unlimited());
+        let _b = env.pool.register_tenant(TenantQuota::unlimited());
+        let Acquire::Granted(_) = env.pool.try_acquire(a, 50) else { panic!() };
+        // the other tenant sees 50 foreign workers over a 100-worker
+        // saturation point: 1.5x comm
+        assert!((env.comm_factor(0) - 1.5).abs() < 1e-12);
+        // tenant a itself excludes its own workers
+        assert_eq!(env.comm_factor(50), 1.0);
+    }
+}

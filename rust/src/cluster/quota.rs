@@ -1,0 +1,248 @@
+//! Shared concurrency pool with per-tenant quotas.
+//!
+//! One FaaS account hosts many training jobs; the account-level
+//! concurrent-execution limit is a single shared resource. The
+//! [`QuotaPool`] arbitrates it: each tenant (job) may hold at most its
+//! quota, the account may hold at most its limit, and every grant is a
+//! [`Lease`] that must be released before the slots return. The pool is
+//! the conservation authority — its invariants (checked on every
+//! mutation) are exactly what the cluster property tests assert:
+//!
+//! 1. total in-flight == sum of per-tenant in-flight == sum of leases,
+//! 2. total in-flight never exceeds the account limit,
+//! 3. per-tenant in-flight never exceeds that tenant's quota.
+
+pub type TenantId = u32;
+
+/// Per-tenant concurrency quota.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// maximum concurrent executions this tenant may hold
+    pub max_concurrent: u32,
+}
+
+impl TenantQuota {
+    /// Bounded only by the account limit.
+    pub fn unlimited() -> TenantQuota {
+        TenantQuota { max_concurrent: u32::MAX }
+    }
+
+    pub fn capped(max_concurrent: u32) -> TenantQuota {
+        TenantQuota { max_concurrent }
+    }
+}
+
+/// An active grant of `n` concurrency slots to `tenant`.
+#[derive(Clone, Copy, Debug)]
+pub struct Lease {
+    pub id: u64,
+    pub tenant: TenantId,
+    pub n: u32,
+}
+
+/// Outcome of a slot request (all-or-nothing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acquire {
+    /// lease id to pass to [`QuotaPool::release`]
+    Granted(u64),
+    /// how many slots *could* be granted right now
+    Denied { grantable: u32 },
+}
+
+pub struct QuotaPool {
+    pub account_limit: u32,
+    quotas: Vec<TenantQuota>,
+    in_flight: Vec<u32>,
+    total: u32,
+    leases: Vec<Lease>,
+    next_id: u64,
+    /// high-water mark of total in-flight (conservation evidence)
+    pub peak_in_flight: u32,
+    pub denials: u64,
+    /// monotone release counter; the fleet scheduler uses it to wake
+    /// blocked jobs only when capacity actually came back
+    pub releases: u64,
+}
+
+impl QuotaPool {
+    /// `account_limit` is floored at 1: a zero-slot account could never
+    /// grant anything and every job would park forever.
+    pub fn new(account_limit: u32) -> QuotaPool {
+        QuotaPool {
+            account_limit: account_limit.max(1),
+            quotas: Vec::new(),
+            in_flight: Vec::new(),
+            total: 0,
+            leases: Vec::new(),
+            next_id: 0,
+            peak_in_flight: 0,
+            denials: 0,
+            releases: 0,
+        }
+    }
+
+    /// Register a tenant. Quotas are floored at 1 slot: a zero quota
+    /// could never be granted, and the drivers clamp their requests to
+    /// `max(hard_cap, 1)` — a 0-quota tenant would park forever and
+    /// livelock the fleet scheduler.
+    pub fn register_tenant(&mut self, quota: TenantQuota) -> TenantId {
+        self.quotas.push(TenantQuota {
+            max_concurrent: quota.max_concurrent.max(1),
+        });
+        self.in_flight.push(0);
+        (self.quotas.len() - 1) as TenantId
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.quotas.len()
+    }
+
+    pub fn total_in_flight(&self) -> u32 {
+        self.total
+    }
+
+    pub fn tenant_in_flight(&self, tenant: TenantId) -> u32 {
+        self.in_flight[tenant as usize]
+    }
+
+    pub fn leases(&self) -> &[Lease] {
+        &self.leases
+    }
+
+    /// The most slots `tenant` could ever hold at once.
+    pub fn hard_cap(&self, tenant: TenantId) -> u32 {
+        self.quotas[tenant as usize]
+            .max_concurrent
+            .min(self.account_limit)
+    }
+
+    /// Slots grantable to `tenant` right now.
+    pub fn grantable(&self, tenant: TenantId) -> u32 {
+        let quota_room = self.quotas[tenant as usize]
+            .max_concurrent
+            .saturating_sub(self.in_flight[tenant as usize]);
+        let account_room = self.account_limit.saturating_sub(self.total);
+        quota_room.min(account_room)
+    }
+
+    /// Request `n` slots for `tenant`, all-or-nothing.
+    pub fn try_acquire(&mut self, tenant: TenantId, n: u32) -> Acquire {
+        let room = self.grantable(tenant);
+        if n > room {
+            self.denials += 1;
+            return Acquire::Denied { grantable: room };
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.leases.push(Lease { id, tenant, n });
+        self.in_flight[tenant as usize] += n;
+        self.total += n;
+        self.peak_in_flight = self.peak_in_flight.max(self.total);
+        self.assert_invariants();
+        Acquire::Granted(id)
+    }
+
+    /// Return a lease's slots to the pool; returns the released count
+    /// (0 for an unknown/already-released id).
+    pub fn release(&mut self, lease_id: u64) -> u32 {
+        let Some(pos) = self.leases.iter().position(|l| l.id == lease_id) else {
+            return 0;
+        };
+        let lease = self.leases.swap_remove(pos);
+        self.in_flight[lease.tenant as usize] -= lease.n;
+        self.total -= lease.n;
+        self.releases += 1;
+        self.assert_invariants();
+        lease.n
+    }
+
+    /// Conservation invariants — always on: the pool is small and these
+    /// are the contract the whole cluster layer leans on.
+    fn assert_invariants(&self) {
+        let lease_sum: u64 = self.leases.iter().map(|l| l.n as u64).sum();
+        let tenant_sum: u64 = self.in_flight.iter().map(|&n| n as u64).sum();
+        assert_eq!(lease_sum, self.total as u64, "leases must sum to total");
+        assert_eq!(tenant_sum, self.total as u64, "tenant counters must sum to total");
+        assert!(
+            self.total <= self.account_limit,
+            "in-flight {} exceeds account limit {}",
+            self.total,
+            self.account_limit
+        );
+        for (t, &n) in self.in_flight.iter().enumerate() {
+            assert!(
+                n <= self.quotas[t].max_concurrent,
+                "tenant {t} holds {n} > quota {}",
+                self.quotas[t].max_concurrent
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grants_within_quota_and_limit() {
+        let mut p = QuotaPool::new(100);
+        let a = p.register_tenant(TenantQuota::capped(60));
+        let b = p.register_tenant(TenantQuota::unlimited());
+        let Acquire::Granted(la) = p.try_acquire(a, 60) else { panic!() };
+        assert_eq!(p.total_in_flight(), 60);
+        // tenant a is at quota
+        assert_eq!(p.try_acquire(a, 1), Acquire::Denied { grantable: 0 });
+        // tenant b can take the rest of the account
+        assert_eq!(p.grantable(b), 40);
+        let Acquire::Granted(_) = p.try_acquire(b, 40) else { panic!() };
+        assert_eq!(p.try_acquire(b, 1), Acquire::Denied { grantable: 0 });
+        // release frees both quota and account room
+        assert_eq!(p.release(la), 60);
+        assert_eq!(p.grantable(b), 60);
+        assert_eq!(p.peak_in_flight, 100);
+        assert_eq!(p.denials, 2);
+        assert_eq!(p.releases, 1);
+    }
+
+    #[test]
+    fn all_or_nothing() {
+        let mut p = QuotaPool::new(10);
+        let t = p.register_tenant(TenantQuota::unlimited());
+        assert!(matches!(p.try_acquire(t, 8), Acquire::Granted(_)));
+        assert_eq!(p.try_acquire(t, 5), Acquire::Denied { grantable: 2 });
+        // the denied request must not have partially consumed anything
+        assert_eq!(p.total_in_flight(), 8);
+        assert!(matches!(p.try_acquire(t, 2), Acquire::Granted(_)));
+    }
+
+    #[test]
+    fn unknown_release_is_a_noop() {
+        let mut p = QuotaPool::new(10);
+        let t = p.register_tenant(TenantQuota::unlimited());
+        let Acquire::Granted(id) = p.try_acquire(t, 4) else { panic!() };
+        assert_eq!(p.release(9999), 0);
+        assert_eq!(p.release(id), 4);
+        assert_eq!(p.release(id), 0, "double release is a no-op");
+        assert_eq!(p.total_in_flight(), 0);
+    }
+
+    #[test]
+    fn zero_quota_and_zero_limit_are_floored_to_one() {
+        let mut p = QuotaPool::new(0);
+        assert_eq!(p.account_limit, 1);
+        let t = p.register_tenant(TenantQuota::capped(0));
+        assert_eq!(p.hard_cap(t), 1);
+        // the minimum request a driver can make is always grantable on
+        // an empty pool — no permanently-parked tenants
+        assert!(matches!(p.try_acquire(t, 1), Acquire::Granted(_)));
+    }
+
+    #[test]
+    fn hard_cap_is_min_of_quota_and_limit() {
+        let mut p = QuotaPool::new(50);
+        let a = p.register_tenant(TenantQuota::capped(20));
+        let b = p.register_tenant(TenantQuota::unlimited());
+        assert_eq!(p.hard_cap(a), 20);
+        assert_eq!(p.hard_cap(b), 50);
+    }
+}

@@ -11,7 +11,7 @@
 use crate::optimizer::Config;
 use crate::runtime::{Manifest, SharedEngine};
 use crate::worker::{run_worker_fleet, FleetConfig, FleetResult, InvocationBudget};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::PathBuf;
 
 /// Artifact manager (①a): resolves and validates the deployed artifacts.

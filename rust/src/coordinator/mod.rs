@@ -5,5 +5,5 @@ pub mod simrun;
 pub mod workload;
 
 pub use endclient::{ArtifactManager, EndClient, ResourceManager};
-pub use simrun::{simulate, Goal, IterModel, SimJob, SimOutcome};
+pub use simrun::{simulate, Goal, IterModel, JobDriver, SimJob, SimOutcome, StepEvent};
 pub use workload::{Phase, Workloads};

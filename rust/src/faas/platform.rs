@@ -117,6 +117,22 @@ impl FaasPlatform {
     /// invocation records (startup delays reflect cold starts, anomalies
     /// and concurrency throttling).
     pub fn invoke_workers(&mut self, n: u32, mode: InvokeMode) -> Vec<Invocation> {
+        self.invoke_workers_shared(n, mode, 0)
+    }
+
+    /// [`invoke_workers`](Self::invoke_workers) on a *shared* account:
+    /// `external_load` in-flight executions belonging to other tenants
+    /// count toward the account-level concurrency limit, so a crowded
+    /// account throttles this launch earlier. The multi-tenant cluster
+    /// layer passes the quota pool's other-tenant total here; the
+    /// single-job driver passes 0 and behaves exactly as before.
+    pub fn invoke_workers_shared(
+        &mut self,
+        n: u32,
+        mode: InvokeMode,
+        external_load: u32,
+    ) -> Vec<Invocation> {
+        let occupied = self.running.saturating_add(external_load);
         let mut out = Vec::with_capacity(n as usize);
         for i in 0..n {
             self.total_invocations += 1;
@@ -140,7 +156,7 @@ impl FaasPlatform {
                     }
                 }
             }
-            if self.running + i >= self.limits.concurrency_limit {
+            if occupied as u64 + i as u64 >= self.limits.concurrency_limit as u64 {
                 delay += 1.0; // account-level throttle retry
                 throttled = true;
             }
@@ -234,6 +250,21 @@ mod tests {
         // 1 hour of work, 4 s init, 900 s cap => 5 invocations
         assert_eq!(p.invocations_needed(3600.0, 4.0), 5);
         assert_eq!(p.invocations_needed(10.0, 4.0), 1);
+    }
+
+    #[test]
+    fn shared_account_load_throttles_earlier() {
+        let mut p = FaasPlatform::with_seed(7);
+        p.limits.concurrency_limit = 100;
+        // 90 slots already burned by other tenants: only 10 launch clean
+        let inv = p.invoke_workers_shared(20, InvokeMode::DirectTracked, 90);
+        assert_eq!(inv.iter().filter(|i| i.throttled).count(), 10);
+        assert!(inv[..10].iter().all(|i| !i.throttled));
+        // an idle account launches the same 20 unthrottled
+        let mut q = FaasPlatform::with_seed(7);
+        q.limits.concurrency_limit = 100;
+        let inv = q.invoke_workers_shared(20, InvokeMode::DirectTracked, 0);
+        assert!(inv.iter().all(|i| !i.throttled));
     }
 
     #[test]

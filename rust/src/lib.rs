@@ -22,12 +22,19 @@
 //! - [`worker`] — serverless worker: data iterator, minibatch buffer,
 //!   trainer, hierarchical aggregator.
 //! - [`coordinator`] — end client: artifact/resource managers, workloads
-//!   (static / dynamic batching / online learning / NAS).
+//!   (static / dynamic batching / online learning / NAS), and the
+//!   reentrant per-job simulation driver (`JobDriver`).
+//! - [`cluster`] — multi-tenant fleet layer: job arrival processes,
+//!   shared account concurrency pool with per-tenant quotas, and the
+//!   fleet scheduler arbitrating slots across concurrent jobs by goal
+//!   class (with preemption and quota-aware re-optimization).
 //! - [`baselines`] — Siren, Cirrus, LambdaML, MLCD, IaaS comparators.
 //! - [`metrics`] — run recorders and CSV emission.
-//! - [`util`] — PRNG, JSON, CLI, stats (offline-registry substitutes).
+//! - [`util`] — PRNG, JSON, CLI, stats, error plumbing
+//!   (offline-registry substitutes).
 
 pub mod baselines;
+pub mod cluster;
 pub mod coordinator;
 pub mod costmodel;
 pub mod faas;

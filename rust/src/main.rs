@@ -13,7 +13,7 @@
 //!   smlt optimize --model bert-medium --goal deadline --limit 4500
 //!   smlt info
 
-use anyhow::{anyhow, Result};
+use smlt::util::error::{anyhow, Result};
 use smlt::baselines::SystemKind;
 use smlt::coordinator::simrun::IterModel;
 use smlt::coordinator::{simulate, EndClient, Goal, SimJob, Workloads};

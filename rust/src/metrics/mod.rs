@@ -1,5 +1,6 @@
 //! Run metrics: per-iteration records + aggregation for EXPERIMENTS.md.
 
+use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};
 use std::io::Write;
 use std::path::Path;
@@ -21,6 +22,26 @@ pub struct IterRecord {
 impl IterRecord {
     pub fn total_s(&self) -> f64 {
         self.compute_s + self.comm_s
+    }
+
+    /// JSON view of the record. f64 fields round-trip exactly through the
+    /// writer's shortest-representation formatting, so serialized streams
+    /// are fit for bit-exact golden-trace comparison.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("iter".to_string(), Json::Num(self.iter as f64));
+        m.insert("t_start".to_string(), Json::Num(self.t_start));
+        m.insert("compute_s".to_string(), Json::Num(self.compute_s));
+        m.insert("comm_s".to_string(), Json::Num(self.comm_s));
+        m.insert("loss".to_string(), Json::Num(self.loss as f64));
+        m.insert("workers".to_string(), Json::Num(self.workers as f64));
+        m.insert("mem_mb".to_string(), Json::Num(self.mem_mb as f64));
+        m.insert("batch_global".to_string(), Json::Num(self.batch_global as f64));
+        m.insert(
+            "restarted_workers".to_string(),
+            Json::Num(self.restarted_workers as f64),
+        );
+        Json::Obj(m)
     }
 }
 
@@ -62,6 +83,11 @@ impl RunMetrics {
         } else {
             0.0
         }
+    }
+
+    /// JSON array of all per-iteration records (golden-trace fixtures).
+    pub fn records_json(&self) -> Json {
+        Json::Arr(self.records.iter().map(|r| r.to_json()).collect())
     }
 
     /// Dump per-iteration CSV (loss curves, throughput traces).
@@ -124,6 +150,16 @@ mod tests {
         m.push(IterRecord { restarted_workers: 3, ..Default::default() });
         m.push(IterRecord { restarted_workers: 1, ..Default::default() });
         assert_eq!(m.restarts, 4);
+    }
+
+    #[test]
+    fn json_records_roundtrip_exactly() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 1.0 / 3.0, 0.123_456_789_012_345_6, 64));
+        m.push(rec(1, 2.0, 0.5, 128));
+        let text = m.records_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, m.records_json(), "shortest-repr f64 must round-trip");
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! FaaS simulator, not by wall-clock contention here.
 
 use super::manifest::{Manifest, VariantSpec};
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};

@@ -1,0 +1,135 @@
+//! API-compatible stand-in for [`engine`](super::engine) when the crate is
+//! built without the `pjrt` feature (the default: the offline registry is
+//! not guaranteed to carry the `xla` crate, and nothing on the simulator /
+//! cluster path needs PJRT).
+//!
+//! Construction and manifest access work — the artifact manager and the
+//! `info` subcommand still function — but every execution entry point
+//! returns an error. The real-mode tests (`runtime_smoke`, `train_e2e`)
+//! skip themselves when no artifacts are staged, so a default build stays
+//! green; running them against staged artifacts requires `--features pjrt`
+//! with the `xla` dependency wired into Cargo.toml.
+
+use super::manifest::Manifest;
+use crate::util::error::{anyhow, Result};
+use std::sync::{Arc, Mutex};
+
+/// Output of one gradient step.
+pub struct GradStepOut {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+/// Output of one optimizer application.
+pub struct ApplyOut {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+pub struct Engine {
+    manifest: Manifest,
+    /// cumulative PJRT execute calls (always 0 in the stub)
+    pub n_executions: u64,
+}
+
+fn unavailable(what: &str) -> crate::util::error::Error {
+    anyhow!(
+        "{what}: PJRT runtime unavailable — this binary was built without \
+         the `pjrt` feature (see Cargo.toml for how to wire in the `xla` \
+         crate)"
+    )
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        Ok(Engine { manifest, n_executions: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Ensure a variant's executables are compiled — validates the variant
+    /// exists, then fails: there is nothing to compile with.
+    pub fn warm(&mut self, variant: &str) -> Result<()> {
+        self.manifest.variant(variant)?;
+        Err(unavailable("warm"))
+    }
+
+    /// One gradient step: (flat_params, tokens) -> (loss, flat_grads).
+    pub fn grad_step(
+        &mut self,
+        _variant: &str,
+        _params: &[f32],
+        _tokens: &[i32],
+    ) -> Result<GradStepOut> {
+        Err(unavailable("grad_step"))
+    }
+
+    /// One fused-Adam application over the flat parameter vector.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_update(
+        &mut self,
+        _variant: &str,
+        _params: &[f32],
+        _m: &[f32],
+        _v: &[f32],
+        _grads: &[f32],
+        _lr_t: f32,
+    ) -> Result<ApplyOut> {
+        Err(unavailable("apply_update"))
+    }
+
+    /// XLA-path shard aggregation (`--agg xla` ablation).
+    pub fn shard_mean(
+        &mut self,
+        _n_workers: usize,
+        _shard_len: usize,
+        _stacked: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(unavailable("shard_mean"))
+    }
+}
+
+/// Thread-shareable engine handle (same shape as the real one).
+#[derive(Clone)]
+pub struct SharedEngine(Arc<Mutex<Engine>>);
+
+impl SharedEngine {
+    pub fn new(manifest: Manifest) -> Result<SharedEngine> {
+        Ok(SharedEngine(Arc::new(Mutex::new(Engine::new(manifest)?))))
+    }
+
+    pub fn with<R>(&self, f: impl FnOnce(&mut Engine) -> R) -> R {
+        let mut guard = self.0.lock().expect("engine mutex poisoned");
+        f(&mut guard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            root: std::path::PathBuf::from("/nonexistent"),
+            variants: Default::default(),
+            aggregators: Vec::new(),
+            smoke: Default::default(),
+        }
+    }
+
+    #[test]
+    fn constructs_but_refuses_to_execute() {
+        let mut e = Engine::new(empty_manifest()).unwrap();
+        assert!(e.platform().contains("stub"));
+        let err = e.grad_step("tiny", &[], &[]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert_eq!(e.n_executions, 0);
+    }
+}

@@ -1,7 +1,7 @@
 //! Parsed view of `artifacts/manifest.json` (written by python/compile/aot.py).
 
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 

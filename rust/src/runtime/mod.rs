@@ -4,6 +4,10 @@
 //! here is pure Rust + the `xla` crate (PJRT C API) — no Python on the
 //! training path.
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod manifest;
 pub mod params;

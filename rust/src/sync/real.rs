@@ -13,7 +13,7 @@
 //! the native SIMD mean.
 
 use crate::storage::ParamStore;
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Duration;
 

@@ -1,0 +1,115 @@
+//! Minimal error plumbing (the offline crate registry carries no `anyhow`):
+//! a string-backed [`Error`], a [`Result`] alias, the [`anyhow!`] macro and
+//! a [`Context`] trait — the exact subset of the `anyhow` API this crate
+//! uses, so the call sites read identically.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that is what allows the blanket
+//! `From<E: std::error::Error>` conversion behind `?` without colliding
+//! with the reflexive `From<T> for T` impl.
+
+use std::fmt;
+
+/// A boxed-string error: cheap to construct, formats as its message.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints errors via Debug; show the
+        // message, not a struct dump
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("fmt {args}")` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+// Re-export so `use crate::util::error::anyhow;` works like the crate it
+// replaces (`#[macro_export]` itself only exports at the crate root).
+pub use crate::anyhow;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(anyhow!("broke at step {}", 3))
+    }
+
+    #[test]
+    fn macro_formats_and_displays() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at step 3");
+        assert_eq!(format!("{e:?}"), "broke at step 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert!(parse("1.5").is_ok());
+        assert!(parse("nope").unwrap_err().to_string().contains("float"));
+    }
+
+    #[test]
+    fn context_wraps_both_results_and_options() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing table").unwrap_err();
+        assert!(e.to_string().starts_with("writing table: "));
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}

@@ -4,6 +4,7 @@
 //! dependency closure (see DESIGN.md §3 substitutions).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -14,7 +14,7 @@ use crate::runtime::{params, SharedEngine};
 use crate::scheduler::checkpoint::{Checkpoint, CheckpointStore};
 use crate::storage::ParamStore;
 use crate::sync::HierarchicalSync;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::mpsc;
 use std::sync::{Arc, Barrier};
 

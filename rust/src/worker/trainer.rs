@@ -3,7 +3,7 @@
 //! around the PJRT engine for one model variant.
 
 use crate::runtime::{SharedEngine, VariantSpec};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Adam hyperparameters matching python/compile/kernels/adam.py.
 const BETA1: f64 = 0.9;

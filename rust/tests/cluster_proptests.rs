@@ -1,0 +1,178 @@
+//! Property tests for the multi-tenant cluster layer: concurrency-slot
+//! conservation under churn, and bit-for-bit determinism of fleet
+//! outcomes given a seed. (The `QuotaPool` also self-checks its
+//! conservation invariants on every acquire/release, so each fleet run
+//! here doubles as a continuous audit that in-flight totals never exceed
+//! the account limit at any event.)
+
+mod common;
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::cluster::{
+    Acquire, ArrivalProcess, ClusterParams, ClusterSim, QuotaPool, TenantQuota,
+};
+use smlt::coordinator::{Goal, SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+
+#[test]
+fn prop_pool_slot_conservation_under_churn() {
+    cases(40, |rng| {
+        let limit = 1 + rng.below(256) as u32;
+        let n_tenants = 1 + rng.below(6) as usize;
+        let mut pool = QuotaPool::new(limit);
+        let quotas: Vec<u32> = (0..n_tenants)
+            .map(|_| 1 + rng.below(limit as u64 + 32) as u32)
+            .collect();
+        for q in &quotas {
+            pool.register_tenant(TenantQuota::capped(*q));
+        }
+        let mut live: Vec<(u64, u32, u32)> = Vec::new(); // (lease, tenant, n)
+        for _ in 0..200 {
+            if live.is_empty() || rng.next_f64() < 0.55 {
+                let t = rng.below(n_tenants as u64) as u32;
+                let n = 1 + rng.below(24) as u32;
+                match pool.try_acquire(t, n) {
+                    Acquire::Granted(id) => live.push((id, t, n)),
+                    Acquire::Denied { grantable } => {
+                        // denial must be honest: the request really was
+                        // larger than what the quota/limit leave
+                        assert!(grantable < n, "denied a grantable request");
+                        assert_eq!(grantable, pool.grantable(t));
+                    }
+                }
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let (id, _, n) = live.swap_remove(i);
+                assert_eq!(pool.release(id), n, "release returns lease size");
+            }
+            // conservation, recomputed independently of the pool's own
+            // internal assertions
+            let held: u64 = live.iter().map(|(_, _, n)| *n as u64).sum();
+            assert_eq!(held, pool.total_in_flight() as u64);
+            assert!(pool.total_in_flight() <= limit);
+            for t in 0..n_tenants as u32 {
+                let tenant_held: u64 = live
+                    .iter()
+                    .filter(|(_, lt, _)| *lt == t)
+                    .map(|(_, _, n)| *n as u64)
+                    .sum();
+                assert_eq!(tenant_held, pool.tenant_in_flight(t) as u64);
+                assert!(pool.tenant_in_flight(t) <= quotas[t as usize]);
+            }
+        }
+        for (id, _, _) in live {
+            pool.release(id);
+        }
+        assert_eq!(pool.total_in_flight(), 0, "all slots return after churn");
+        assert!(pool.peak_in_flight <= limit);
+    });
+}
+
+fn tiny_job(system: SystemKind, seed: u64, goal: Goal) -> SimJob {
+    let mut j = SimJob::new(
+        system,
+        Workloads::static_run(ModelProfile::resnet18(), 8, 128),
+    );
+    j.seed = seed;
+    j.goal = goal;
+    j
+}
+
+fn random_fleet(rng: &mut smlt::util::rng::Pcg) -> ClusterSim {
+    let account_limit = 8 + rng.below(120) as u32;
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: rng.below(1 << 20),
+        account_limit,
+        storage_saturation_workers: 64.0 + rng.uniform(0.0, 512.0),
+        preemption: rng.next_f64() < 0.7,
+    });
+    let n_jobs = 2 + rng.below(4) as usize;
+    let goals = [
+        Goal::None,
+        Goal::Fastest,
+        Goal::Deadline { t_max_s: 4.0 * 3600.0 },
+        Goal::Budget { s_max: 80.0 },
+    ];
+    let systems = [SystemKind::Smlt, SystemKind::LambdaMl, SystemKind::Siren];
+    let jobs: Vec<SimJob> = (0..n_jobs)
+        .map(|i| {
+            let sys = systems[rng.below(systems.len() as u64) as usize];
+            let goal = if sys.user_centric() {
+                goals[rng.below(goals.len() as u64) as usize]
+            } else {
+                Goal::None
+            };
+            tiny_job(sys, 1000 + i as u64 + rng.below(1 << 16), goal)
+        })
+        .collect();
+    let quota = TenantQuota::capped(1 + rng.below(account_limit as u64) as u32);
+    sim.submit_all(
+        jobs,
+        &ArrivalProcess::Poisson { rate_per_s: 1.0 / 60.0, seed: rng.below(1 << 16) },
+        quota,
+    );
+    sim
+}
+
+#[test]
+fn prop_fleet_conserves_slots_and_completes() {
+    cases(6, |rng| {
+        let sim = random_fleet(rng);
+        let out = sim.run();
+        assert!(
+            out.peak_in_flight <= out.account_limit,
+            "peak {} exceeded account limit {}",
+            out.peak_in_flight,
+            out.account_limit
+        );
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 8, "tenant {} did not finish", j.tenant);
+            assert!(j.finish_s.is_finite() && j.finish_s >= j.arrive_s);
+            assert!(j.queue_wait_s >= 0.0);
+            assert!(j.outcome.total_cost().is_finite() && j.outcome.total_cost() >= 0.0);
+        }
+        assert!(out.makespan_s.is_finite() && out.makespan_s >= 0.0);
+    });
+}
+
+#[test]
+fn prop_fleet_outcomes_bit_deterministic() {
+    // the whole point of a seeded simulator: same seed, same world.
+    // Rebuild the identical fleet twice from the same case seed and
+    // require bit-equal outcomes, not approximate ones.
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let build = || {
+            let mut r = smlt::util::rng::Pcg::new(case_seed);
+            random_fleet(&mut r)
+        };
+        let a = build().run();
+        let b = build().run();
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+            assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+            assert_eq!(x.preemptions, y.preemptions);
+            assert_eq!(
+                x.outcome.total_cost().to_bits(),
+                y.outcome.total_cost().to_bits()
+            );
+            assert_eq!(x.outcome.metrics.records.len(), y.outcome.metrics.records.len());
+            for (ra, rb) in x
+                .outcome
+                .metrics
+                .records
+                .iter()
+                .zip(y.outcome.metrics.records.iter())
+            {
+                assert_eq!(ra.t_start.to_bits(), rb.t_start.to_bits());
+                assert_eq!(ra.comm_s.to_bits(), rb.comm_s.to_bits());
+                assert_eq!(ra.workers, rb.workers);
+            }
+        }
+        assert_eq!(a.peak_in_flight, b.peak_in_flight);
+        assert_eq!(a.denials, b.denials);
+        assert_eq!(a.preemptions, b.preemptions);
+    });
+}

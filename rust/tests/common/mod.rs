@@ -1,0 +1,25 @@
+#![allow(dead_code)]
+//! Shared driver for the hand-rolled property tests (the offline registry
+//! has no proptest; `cases` sweeps seeded random inputs and shrinks
+//! nothing, but failures report the seed for replay).
+
+use smlt::util::rng::Pcg;
+
+/// Run `n` seeded cases; on failure re-panic with the *original*
+/// assertion message alongside the failing case seed (an earlier version
+/// discarded the payload from `catch_unwind`, leaving only the seed —
+/// useless for diagnosing which property actually fired).
+pub fn cases(n: u64, f: impl Fn(&mut Pcg)) {
+    for seed in 0..n {
+        let mut rng = Pcg::new(0xBEEF ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&'static str>().copied())
+                .unwrap_or("<non-string panic payload>");
+            panic!("property failed at case seed {seed}: {msg}");
+        }
+    }
+}

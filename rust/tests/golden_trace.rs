@@ -1,0 +1,153 @@
+//! Golden-trace regression tests for the simulation driver.
+//!
+//! Two guards around the `simulate()` → `JobDriver` refactor:
+//!
+//! 1. **Checked-in fixture** — the full per-iteration `IterRecord` stream
+//!    of a fixed-seed single-job run (SMLT + the LambdaML baseline) is
+//!    serialized through `util::json` and compared bit-for-bit against
+//!    `rust/tests/fixtures/`. Any silent behavior drift in the driver,
+//!    platform model, cost ledger or optimizer changes some record and
+//!    fails the diff. The fixture self-bootstraps: on first run (or with
+//!    `SMLT_BLESS=1`) it is written to the source tree — commit it; from
+//!    then on every run must reproduce it exactly.
+//! 2. **Path equivalence** — a single tenant on an uncontended shared
+//!    cluster must reproduce `simulate()` exactly, record for record:
+//!    the multi-tenant machinery (quota pool, contention factors, slot
+//!    leases) must be invisible when there is nobody to contend with.
+
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ClusterParams, ClusterSim, TenantQuota};
+use smlt::coordinator::{simulate, Goal, SimJob, SimOutcome, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(name)
+}
+
+fn golden_job(system: SystemKind) -> SimJob {
+    let mut j = SimJob::new(
+        system,
+        Workloads::static_run(ModelProfile::bert_small(), 40, 256),
+    );
+    j.seed = 0x2205_0185_3; // arXiv:2205.01853
+    j
+}
+
+/// Full JSON snapshot of an outcome: headline scalars + config trace +
+/// the complete per-iteration record stream.
+fn outcome_json(out: &SimOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("system".to_string(), Json::Str(out.system.name().to_string()));
+    m.insert("total_time_s".to_string(), Json::Num(out.total_time_s));
+    m.insert("profiling_time_s".to_string(), Json::Num(out.profiling_time_s));
+    m.insert("total_cost".to_string(), Json::Num(out.total_cost()));
+    m.insert("iters_done".to_string(), Json::Num(out.iters_done as f64));
+    m.insert(
+        "config_trace".to_string(),
+        Json::Arr(
+            out.config_trace
+                .iter()
+                .map(|(i, c)| {
+                    Json::Arr(vec![
+                        Json::Num(*i as f64),
+                        Json::Num(c.workers as f64),
+                        Json::Num(c.mem_mb as f64),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    m.insert("records".to_string(), out.metrics.records_json());
+    Json::Obj(m)
+}
+
+#[test]
+fn golden_trace_fixture_is_reproduced_exactly() {
+    for (system, file) in [
+        (SystemKind::Smlt, "golden_smlt.json"),
+        (SystemKind::LambdaMl, "golden_lambdaml.json"),
+    ] {
+        let out = simulate(&golden_job(system));
+        assert_eq!(out.iters_done, 40);
+        let current = outcome_json(&out);
+        let path = fixture_path(file);
+        let bless = std::env::var("SMLT_BLESS").is_ok();
+        if bless || !path.exists() {
+            // with SMLT_REQUIRE_FIXTURE set (strict CI), a missing fixture
+            // is a failure, not a bootstrap — it means nobody committed it
+            assert!(
+                std::env::var("SMLT_REQUIRE_FIXTURE").is_err(),
+                "golden fixture {path:?} missing and SMLT_REQUIRE_FIXTURE is set"
+            );
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, current.to_string_pretty()).unwrap();
+            // a blessed fixture must round-trip against a fresh run in the
+            // same process — catches nondeterminism at bless time
+            let rerun = outcome_json(&simulate(&golden_job(system)));
+            let reread = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            assert_eq!(reread, rerun, "{}: freshly blessed fixture does not reproduce", system.name());
+            eprintln!("blessed golden fixture {path:?} — commit it");
+            continue;
+        }
+        let golden = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("unparseable fixture {path:?}: {e}"));
+        assert_eq!(
+            golden, current,
+            "{}: simulate() drifted from the checked-in golden trace \
+             ({path:?}); if the change is intentional, regenerate with \
+             SMLT_BLESS=1 and commit the new fixture",
+            system.name()
+        );
+    }
+}
+
+#[test]
+fn single_tenant_cluster_is_bit_identical_to_simulate() {
+    for system in [
+        SystemKind::Smlt,
+        SystemKind::Siren,
+        SystemKind::LambdaMl,
+        SystemKind::Iaas,
+    ] {
+        let mut job = golden_job(system);
+        if system.user_centric() {
+            job.goal = Goal::Deadline { t_max_s: 6.0 * 3600.0 };
+        }
+        let solo = simulate(&job);
+
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: job.seed,
+            storage_saturation_workers: f64::INFINITY,
+            ..Default::default()
+        });
+        sim.submit(job, 0.0, TenantQuota::unlimited());
+        let fleet = sim.run();
+        let clustered = &fleet.jobs[0].outcome;
+
+        assert_eq!(
+            solo.total_time_s.to_bits(),
+            clustered.total_time_s.to_bits(),
+            "{}: total time diverged",
+            system.name()
+        );
+        assert_eq!(
+            solo.total_cost().to_bits(),
+            clustered.total_cost().to_bits(),
+            "{}: total cost diverged",
+            system.name()
+        );
+        assert_eq!(
+            outcome_json(&solo),
+            outcome_json(clustered),
+            "{}: per-iteration records diverged",
+            system.name()
+        );
+        assert_eq!(fleet.jobs[0].queue_wait_s, 0.0, "nobody to wait for");
+        assert_eq!(fleet.preemptions, 0);
+    }
+}

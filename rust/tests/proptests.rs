@@ -1,26 +1,16 @@
-//! Property-based tests on coordinator invariants (hand-rolled driver —
-//! the offline registry has no proptest; `Cases` sweeps seeded random
-//! inputs and shrinks nothing, but failures print the seed for replay).
+//! Property-based tests on coordinator invariants (see `common::cases`
+//! for the hand-rolled seeded-sweep driver).
 
+mod common;
+
+use common::cases;
 use smlt::costmodel::{CostLedger, Pricing};
 use smlt::faas::{FaasPlatform, InvokeMode};
 use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective};
 use smlt::scheduler::{CheckpointStore, TaskScheduler};
 use smlt::storage::{ParamStore, StoreModel};
 use smlt::sync::{aggregate_mean, comm_breakdown, Scheme, SyncEnv};
-use smlt::util::rng::Pcg;
 use smlt::util::stats::{percentile_sorted, summarize};
-
-/// Run `n` seeded cases; panic with the seed on failure.
-fn cases(n: u64, f: impl Fn(&mut Pcg)) {
-    for seed in 0..n {
-        let mut rng = Pcg::new(0xBEEF ^ seed);
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
-        if result.is_err() {
-            panic!("property failed at case seed {seed}");
-        }
-    }
-}
 
 #[test]
 fn prop_aggregate_mean_bounded_by_min_max() {
