@@ -1,0 +1,109 @@
+//! Capacity-shock demo: six tenants share a 64-slot account under
+//! weighted fair sharing; at t=900s the provider reclaims three quarters
+//! of the account (spot-style), the scheduler revokes fleets to fit, and
+//! the survivors re-optimize into the 16-slot world. The shock log shows
+//! what was reclaimed and how long the fleet took to recover.
+//!
+//! ```text
+//! cargo run --release --example capacity_shock -- --limit 64 --shock-to 16
+//! ```
+
+use smlt::baselines::SystemKind;
+use smlt::cluster::{
+    ArbiterKind, ArrivalProcess, CapacityTrace, ClusterParams, ClusterSim, TenantQuota,
+};
+use smlt::coordinator::{Goal, SimJob, Workloads};
+use smlt::metrics::FairnessReport;
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+
+fn main() -> smlt::util::error::Result<()> {
+    let args = Args::from_env();
+    let limit = args.get_usize("limit", 64) as u32;
+    let shock_to = args.get_usize("shock-to", (limit / 4).max(1) as usize) as u32;
+    let shock_at = args.get_f64("shock-at", 900.0);
+    let iters = args.get_usize("iters", 20) as u64;
+    let deadline = args.get_f64("deadline", 3600.0);
+
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: 11,
+        account_limit: limit,
+        arbiter: ArbiterKind::WeightedFair { starvation_bound_s: 900.0 },
+        capacity: CapacityTrace::Step { at_s: shock_at, to: shock_to },
+        ..Default::default()
+    });
+    let goals = [
+        Goal::None,
+        Goal::Deadline { t_max_s: deadline },
+        Goal::None,
+        Goal::Budget { s_max: 30.0 },
+        Goal::Deadline { t_max_s: deadline },
+        Goal::None,
+    ];
+    let arrivals = ArrivalProcess::Poisson { rate_per_s: 1.0 / 60.0, seed: 3 }.times(goals.len());
+    for (i, (goal, arrive)) in goals.iter().zip(arrivals).enumerate() {
+        let mut j = SimJob::new(
+            SystemKind::Smlt,
+            Workloads::static_run(ModelProfile::resnet18(), iters, 128),
+        );
+        j.seed = 90 + i as u64;
+        j.goal = *goal;
+        let weight = if matches!(goal, Goal::Deadline { .. }) { 2.0 } else { 1.0 };
+        sim.submit_weighted(j, arrive, TenantQuota::unlimited(), weight);
+    }
+    let out = sim.run();
+    let report = FairnessReport::from_fleet(&out);
+
+    let mut t = Table::new(
+        &format!("6 tenants, {limit}->{shock_to} slots at {shock_at:.0}s ({} arbiter)", out.arbiter),
+        &["tenant", "goal", "w", "arrive s", "dur s", "wait s", "max streak s", "preempted", "workers", "cost $"],
+    );
+    for (j, f) in out.jobs.iter().zip(report.tenants.iter()) {
+        let workers = j
+            .outcome
+            .config_trace
+            .last()
+            .map(|(_, c)| c.workers)
+            .unwrap_or(0);
+        t.row(&[
+            j.tenant.to_string(),
+            format!("{:?}", j.goal),
+            format!("{:.0}", j.weight),
+            format!("{:.0}", j.arrive_s),
+            format!("{:.0}", j.duration_s()),
+            format!("{:.0}", j.queue_wait_s),
+            format!("{:.0}", f.max_wait_streak_s),
+            j.preemptions.to_string(),
+            workers.to_string(),
+            format!("{:.2}", j.outcome.total_cost()),
+        ]);
+    }
+    t.print();
+
+    for (shock, reopt) in out.shocks.iter().zip(report.time_to_reoptimize_s.iter()) {
+        println!(
+            "\nshock @ {:.0}s: {} -> {} slots; reclaimed {} fleets / {} slots \
+             (tenants {:?}); post-shock peak {}/{}; time-to-reoptimize {}",
+            shock.at_s,
+            shock.from_limit,
+            shock.to_limit,
+            shock.reclaimed_leases,
+            shock.reclaimed_slots,
+            shock.victim_tenants,
+            shock.peak_after,
+            shock.to_limit,
+            reopt.map_or("never".to_string(), |s| format!("{s:.0}s")),
+        );
+    }
+    println!(
+        "\nfleet: makespan {:.0}s, jain(duration) {:.3}, SLOs {} met / {} missed-queueing / {} missed-capacity, total ${:.2}",
+        out.makespan_s,
+        report.jain_duration,
+        report.slo_met,
+        report.slo_missed_queueing,
+        report.slo_missed_capacity,
+        out.total_cost()
+    );
+    Ok(())
+}

@@ -1,0 +1,511 @@
+//! Pluggable slot-arbitration policies for the fleet scheduler.
+//!
+//! PR 1's scheduler hard-coded goal-class priority (Deadline > Budget >
+//! Fastest > None), which lets a sustained stream of Deadline tenants
+//! starve best-effort jobs forever. This module turns the two arbitration
+//! decisions — *which parked job gets the next shot at capacity* and *in
+//! what order fleets are evicted when capacity must be freed* — into an
+//! [`Arbiter`] trait with three implementations:
+//!
+//! - [`GoalClassArbiter`] — the original policy, bit-identical to PR 1's
+//!   behavior when its starvation bound is infinite (the default);
+//! - [`WeightedFairArbiter`] — weighted fair sharing: tenants are entitled
+//!   to slots in proportion to their weight, and a blocked job may only
+//!   preempt fleets whose weighted share strictly exceeds the share the
+//!   requester would reach if granted (which rules out eviction ping-pong
+//!   between symmetric jobs);
+//! - [`DrfArbiter`] — dominant-resource fairness over the two pooled
+//!   resources (concurrency slots and aggregate function memory): the job
+//!   with the smallest dominant share is served first.
+//!
+//! Both fairness arbiters (and, optionally, the goal-class one) carry a
+//! configurable **starvation bound**: a job blocked longer than the bound
+//! is marked [`JobView::starved`] and outranks everything, including
+//! higher classes and larger shares — with preemption enabled this is a
+//! hard progress guarantee, which the cluster property suite pins down.
+
+use super::quota::TenantId;
+
+/// Pooled capacity the arbiter normalizes shares against.
+#[derive(Clone, Copy, Debug)]
+pub struct Capacity {
+    /// account concurrency limit (slots)
+    pub slots: u32,
+    /// aggregate function memory at full fan-out (MB): slots × max
+    /// per-function memory
+    pub mem_mb: u64,
+}
+
+/// The scheduler-facing snapshot of one job at a decision point.
+///
+/// The fleet scheduler rebuilds these views before every arbitration call
+/// so a policy never sees stale shares.
+#[derive(Clone, Debug)]
+pub struct JobView {
+    /// position in the fleet's submission-ordered job list
+    pub idx: usize,
+    /// the job's tenant id in the quota pool
+    pub tenant: TenantId,
+    /// goal class (Deadline 3 > Budget 2 > Fastest 1 > None 0)
+    pub class: u8,
+    /// submission time (FIFO tie-breaks)
+    pub arrive_s: f64,
+    /// fair-share weight (1.0 unless submitted via
+    /// [`ClusterSim::submit_weighted`](super::fleet::ClusterSim::submit_weighted))
+    pub weight: f64,
+    /// current preferred fleet size (lease size when one is held)
+    pub workers: u32,
+    /// per-function memory of the current configuration (MB)
+    pub mem_mb: u32,
+    /// whether the job currently holds a slot lease
+    pub holds_lease: bool,
+    /// slots the job's tenant holds right now
+    pub in_flight: u32,
+    /// blocked longer than the arbiter's starvation bound
+    pub starved: bool,
+}
+
+impl Default for JobView {
+    fn default() -> Self {
+        JobView {
+            idx: 0,
+            tenant: 0,
+            class: 0,
+            arrive_s: 0.0,
+            weight: 1.0,
+            workers: 0,
+            mem_mb: 0,
+            holds_lease: false,
+            in_flight: 0,
+            starved: false,
+        }
+    }
+}
+
+impl JobView {
+    /// Weighted slot share: slots held per unit of weight.
+    pub fn share(&self) -> f64 {
+        self.in_flight as f64 / self.weight.max(1e-9)
+    }
+
+    /// Weighted share this job would hold if granted its `workers`.
+    pub fn prospective_share(&self) -> f64 {
+        (self.in_flight + self.workers) as f64 / self.weight.max(1e-9)
+    }
+
+    /// Dominant share (DRF): the larger of the job's slot share and its
+    /// aggregate-memory share of `cap`, per unit of weight.
+    pub fn dominant_share(&self, cap: Capacity) -> f64 {
+        let slots = self.in_flight as f64 / cap.slots.max(1) as f64;
+        let mem =
+            self.in_flight as f64 * self.mem_mb as f64 / cap.mem_mb.max(1) as f64;
+        slots.max(mem) / self.weight.max(1e-9)
+    }
+
+    /// Dominant share if granted its `workers` (what DRF ranks blocked
+    /// jobs by — every blocked job holds zero, so the *request* decides).
+    pub fn prospective_dominant_share(&self, cap: Capacity) -> f64 {
+        let n = (self.in_flight + self.workers) as f64;
+        let slots = n / cap.slots.max(1) as f64;
+        let mem = n * self.mem_mb as f64 / cap.mem_mb.max(1) as f64;
+        slots.max(mem) / self.weight.max(1e-9)
+    }
+}
+
+/// A slot-arbitration policy for the fleet scheduler.
+///
+/// Implementations must be deterministic pure functions of their inputs —
+/// the fleet's bit-reproducibility property test runs through every
+/// policy.
+///
+/// # Examples
+///
+/// ```
+/// use smlt::cluster::{Arbiter, Capacity, GoalClassArbiter, JobView};
+///
+/// let arb = GoalClassArbiter::default();
+/// let cap = Capacity { slots: 100, mem_mb: 100 * 10_240 };
+/// let blocked = vec![
+///     JobView { idx: 0, class: 0, arrive_s: 0.0, workers: 8, ..Default::default() },
+///     JobView { idx: 1, class: 3, arrive_s: 5.0, workers: 8, ..Default::default() },
+/// ];
+/// // the Deadline-class job (class 3) is served first even though the
+/// // best-effort one arrived earlier
+/// assert_eq!(arb.pick_blocked(&blocked, cap), Some(1));
+/// ```
+pub trait Arbiter {
+    /// Policy name (bench/report labels).
+    fn name(&self) -> &'static str;
+
+    /// Among blocked jobs, the position (index into `blocked`) of the one
+    /// to admit or force-retry first. `None` iff `blocked` is empty.
+    fn pick_blocked(&self, blocked: &[JobView], cap: Capacity) -> Option<usize>;
+
+    /// Eviction order (positions into `candidates`, best victim first)
+    /// for freeing capacity on behalf of `requester`; `None` means the
+    /// platform itself is reclaiming capacity (a shock) and anything may
+    /// be evicted. Candidates all hold leases and exclude the requester.
+    /// An empty result means this policy refuses to preempt for this
+    /// request.
+    fn eviction_order(
+        &self,
+        requester: Option<&JobView>,
+        candidates: &[JobView],
+        cap: Capacity,
+    ) -> Vec<usize>;
+
+    /// Continuous blocked time (virtual seconds) after which a job is
+    /// marked starved and outranks everything. Infinite = disabled.
+    fn starvation_bound_s(&self) -> f64 {
+        f64::INFINITY
+    }
+}
+
+/// Stable position ordering by a key: positions into `views`, best first.
+fn order_by<K, F>(views: &[JobView], key: F) -> Vec<usize>
+where
+    K: PartialOrd,
+    F: Fn(&JobView) -> K,
+{
+    let mut idx: Vec<usize> = (0..views.len()).collect();
+    idx.sort_by(|&a, &b| {
+        key(&views[a])
+            .partial_cmp(&key(&views[b]))
+            .expect("NaN arbitration key")
+    });
+    idx
+}
+
+/// The original PR 1 policy: strict goal-class priority with FIFO
+/// tie-break, preemption of strictly lower classes only (lowest class
+/// first, newest arrival first). With the default infinite starvation
+/// bound this is bit-identical to the pre-trait scheduler; a finite bound
+/// adds the aging escape hatch on top.
+#[derive(Clone, Debug)]
+pub struct GoalClassArbiter {
+    /// continuous blocked time after which a job outranks everything
+    /// (`f64::INFINITY` = the original starvation-prone policy)
+    pub starvation_bound_s: f64,
+}
+
+impl Default for GoalClassArbiter {
+    fn default() -> Self {
+        GoalClassArbiter { starvation_bound_s: f64::INFINITY }
+    }
+}
+
+impl GoalClassArbiter {
+    /// Goal-class priority plus the aging escape hatch.
+    pub fn with_starvation_bound(starvation_bound_s: f64) -> Self {
+        GoalClassArbiter { starvation_bound_s }
+    }
+}
+
+impl Arbiter for GoalClassArbiter {
+    fn name(&self) -> &'static str {
+        "goal-class"
+    }
+
+    fn pick_blocked(&self, blocked: &[JobView], _cap: Capacity) -> Option<usize> {
+        // starved first, then highest class, then earliest arrival;
+        // sort_by is stable, so ties keep submission order exactly like
+        // the old min_by scan
+        order_by(blocked, |v| {
+            (if v.starved { 0u8 } else { 1 }, u8::MAX - v.class, v.arrive_s)
+        })
+        .first()
+        .copied()
+    }
+
+    fn eviction_order(
+        &self,
+        requester: Option<&JobView>,
+        candidates: &[JobView],
+        cap: Capacity,
+    ) -> Vec<usize> {
+        let _ = cap;
+        let order = order_by(candidates, |v| (v.class, -v.arrive_s));
+        match requester {
+            // platform reclamation: anyone, lowest class / newest first
+            None => order,
+            Some(r) if r.starved => order,
+            // a blocked job may only evict strictly lower classes
+            Some(r) => order
+                .into_iter()
+                .filter(|&i| candidates[i].class < r.class)
+                .collect(),
+        }
+    }
+
+    fn starvation_bound_s(&self) -> f64 {
+        self.starvation_bound_s
+    }
+}
+
+/// Weighted fair sharing: tenants are entitled to pool slots in
+/// proportion to their weight. Blocked jobs are served smallest
+/// prospective share first; eviction targets the largest current share
+/// and is only permitted against fleets whose share strictly exceeds what
+/// the requester would reach if granted — symmetric jobs therefore never
+/// ping-pong each other off the account.
+#[derive(Clone, Debug)]
+pub struct WeightedFairArbiter {
+    /// continuous blocked time after which a job outranks everything
+    pub starvation_bound_s: f64,
+}
+
+impl Default for WeightedFairArbiter {
+    fn default() -> Self {
+        WeightedFairArbiter { starvation_bound_s: f64::INFINITY }
+    }
+}
+
+impl WeightedFairArbiter {
+    /// Weighted fair sharing plus the aging escape hatch.
+    pub fn with_starvation_bound(starvation_bound_s: f64) -> Self {
+        WeightedFairArbiter { starvation_bound_s }
+    }
+}
+
+impl Arbiter for WeightedFairArbiter {
+    fn name(&self) -> &'static str {
+        "weighted-fair"
+    }
+
+    fn pick_blocked(&self, blocked: &[JobView], _cap: Capacity) -> Option<usize> {
+        order_by(blocked, |v| {
+            (if v.starved { 0u8 } else { 1 }, v.prospective_share(), v.arrive_s)
+        })
+        .first()
+        .copied()
+    }
+
+    fn eviction_order(
+        &self,
+        requester: Option<&JobView>,
+        candidates: &[JobView],
+        cap: Capacity,
+    ) -> Vec<usize> {
+        let _ = cap;
+        let order = order_by(candidates, |v| (-v.share(), -v.arrive_s));
+        match requester {
+            None => order,
+            Some(r) if r.starved => order,
+            Some(r) => {
+                let target = r.prospective_share();
+                order
+                    .into_iter()
+                    .filter(|&i| candidates[i].share() > target)
+                    .collect()
+            }
+        }
+    }
+
+    fn starvation_bound_s(&self) -> f64 {
+        self.starvation_bound_s
+    }
+}
+
+/// Dominant-resource fairness over concurrency slots and aggregate
+/// function memory. The job whose *dominant* share (the larger of its
+/// slot share and memory share, weight-normalized) is smallest gets
+/// served first; eviction targets the largest dominant share, and is only
+/// permitted against fleets strictly above the requester's prospective
+/// dominant share.
+#[derive(Clone, Debug)]
+pub struct DrfArbiter {
+    /// continuous blocked time after which a job outranks everything
+    pub starvation_bound_s: f64,
+}
+
+impl Default for DrfArbiter {
+    fn default() -> Self {
+        DrfArbiter { starvation_bound_s: f64::INFINITY }
+    }
+}
+
+impl DrfArbiter {
+    /// DRF plus the aging escape hatch.
+    pub fn with_starvation_bound(starvation_bound_s: f64) -> Self {
+        DrfArbiter { starvation_bound_s }
+    }
+}
+
+impl Arbiter for DrfArbiter {
+    fn name(&self) -> &'static str {
+        "drf"
+    }
+
+    fn pick_blocked(&self, blocked: &[JobView], cap: Capacity) -> Option<usize> {
+        order_by(blocked, |v| {
+            (
+                if v.starved { 0u8 } else { 1 },
+                v.prospective_dominant_share(cap),
+                v.arrive_s,
+            )
+        })
+        .first()
+        .copied()
+    }
+
+    fn eviction_order(
+        &self,
+        requester: Option<&JobView>,
+        candidates: &[JobView],
+        cap: Capacity,
+    ) -> Vec<usize> {
+        let order = order_by(candidates, |v| (-v.dominant_share(cap), -v.arrive_s));
+        match requester {
+            None => order,
+            Some(r) if r.starved => order,
+            Some(r) => {
+                let target = r.prospective_dominant_share(cap);
+                order
+                    .into_iter()
+                    .filter(|&i| candidates[i].dominant_share(cap) > target)
+                    .collect()
+            }
+        }
+    }
+
+    fn starvation_bound_s(&self) -> f64 {
+        self.starvation_bound_s
+    }
+}
+
+/// Cloneable policy selector for [`ClusterParams`](super::fleet::ClusterParams);
+/// [`build`](Self::build) materializes the trait object. Custom policies
+/// go through [`ClusterSim::set_arbiter`](super::fleet::ClusterSim::set_arbiter)
+/// instead.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum ArbiterKind {
+    /// goal-class priority (the default; bit-identical to PR 1)
+    #[default]
+    GoalClass,
+    /// weighted fair sharing with the given starvation bound (seconds;
+    /// `f64::INFINITY` disables aging)
+    WeightedFair { starvation_bound_s: f64 },
+    /// dominant-resource fairness with the given starvation bound
+    Drf { starvation_bound_s: f64 },
+}
+
+impl ArbiterKind {
+    /// Materialize the selected policy as a trait object.
+    pub fn build(&self) -> Box<dyn Arbiter> {
+        match *self {
+            ArbiterKind::GoalClass => Box::new(GoalClassArbiter::default()),
+            ArbiterKind::WeightedFair { starvation_bound_s } => {
+                Box::new(WeightedFairArbiter { starvation_bound_s })
+            }
+            ArbiterKind::Drf { starvation_bound_s } => {
+                Box::new(DrfArbiter { starvation_bound_s })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cap() -> Capacity {
+        Capacity { slots: 100, mem_mb: 100 * 10_240 }
+    }
+
+    fn view(idx: usize, class: u8, arrive_s: f64) -> JobView {
+        JobView { idx, tenant: idx as TenantId, class, arrive_s, workers: 10, mem_mb: 3072, ..Default::default() }
+    }
+
+    #[test]
+    fn goal_class_picks_highest_class_then_fifo() {
+        let arb = GoalClassArbiter::default();
+        let blocked = vec![view(0, 2, 5.0), view(1, 3, 9.0), view(2, 3, 1.0)];
+        // class 3 beats class 2; among class 3, earliest arrival wins
+        assert_eq!(arb.pick_blocked(&blocked, cap()), Some(2));
+        assert_eq!(arb.pick_blocked(&[], cap()), None);
+    }
+
+    #[test]
+    fn goal_class_evicts_lowest_class_newest_first_and_only_below_requester() {
+        let arb = GoalClassArbiter::default();
+        let requester = view(9, 2, 50.0);
+        let cands = vec![view(0, 0, 1.0), view(1, 0, 8.0), view(2, 1, 3.0), view(3, 3, 0.0)];
+        // class 0 before class 1; within class 0 the newest (idx 1) first;
+        // the class-3 fleet is untouchable for a class-2 requester
+        assert_eq!(arb.eviction_order(Some(&requester), &cands, cap()), vec![1, 0, 2]);
+        // platform reclamation may take anyone, same ordering + class 3 last
+        assert_eq!(arb.eviction_order(None, &cands, cap()), vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn starved_jobs_outrank_everything() {
+        let arb = GoalClassArbiter::with_starvation_bound(60.0);
+        let mut be = view(0, 0, 0.0);
+        be.starved = true;
+        let dl = view(1, 3, 1.0);
+        assert_eq!(arb.pick_blocked(&[be.clone(), dl.clone()], cap()), Some(0));
+        // and a starved requester may evict even a higher class
+        assert_eq!(arb.eviction_order(Some(&be), &[dl], cap()), vec![0]);
+        assert_eq!(arb.starvation_bound_s(), 60.0);
+    }
+
+    #[test]
+    fn weighted_fair_serves_smallest_prospective_share() {
+        let arb = WeightedFairArbiter::default();
+        let mut heavy = view(0, 0, 0.0);
+        heavy.weight = 4.0; // entitled to 4x => share per weight is small
+        let light = view(1, 3, 0.0);
+        // same request size: the weighted tenant's prospective share is
+        // 10/4 vs 10/1 — class is irrelevant under fair sharing
+        assert_eq!(arb.pick_blocked(&[light.clone(), heavy.clone()], cap()), Some(1));
+    }
+
+    #[test]
+    fn weighted_fair_eviction_needs_strictly_larger_share() {
+        let arb = WeightedFairArbiter::default();
+        let mut requester = view(9, 0, 9.0);
+        requester.workers = 10; // prospective share 10
+        let mut equal = view(0, 0, 1.0);
+        equal.in_flight = 10;
+        equal.holds_lease = true;
+        // equal share: refuse (no ping-pong between symmetric jobs)
+        assert!(arb.eviction_order(Some(&requester), &[equal.clone()], cap()).is_empty());
+        let mut hog = view(1, 3, 2.0);
+        hog.in_flight = 40;
+        hog.holds_lease = true;
+        // the 40-slot fleet is strictly above the requester's 10
+        assert_eq!(
+            arb.eviction_order(Some(&requester), &[equal, hog], cap()),
+            vec![1]
+        );
+    }
+
+    #[test]
+    fn drf_ranks_by_dominant_share() {
+        let arb = DrfArbiter::default();
+        let c = cap();
+        // memory-heavy job: 10 workers x 10240 MB on a 1,024,000 MB pool
+        // => mem share 0.1 = slot share 0.1; small job dominates less
+        let mut mem_hog = view(0, 0, 0.0);
+        mem_hog.mem_mb = 10_240;
+        mem_hog.workers = 10;
+        let mut small = view(1, 0, 5.0);
+        small.workers = 4;
+        small.mem_mb = 1024;
+        assert_eq!(arb.pick_blocked(&[mem_hog.clone(), small.clone()], c), Some(1));
+        // dominant share math: slots dominate when memory is light
+        assert!(small.prospective_dominant_share(c) < mem_hog.prospective_dominant_share(c));
+    }
+
+    #[test]
+    fn kind_builds_matching_policy() {
+        assert_eq!(ArbiterKind::GoalClass.build().name(), "goal-class");
+        assert_eq!(
+            ArbiterKind::WeightedFair { starvation_bound_s: 1.0 }.build().name(),
+            "weighted-fair"
+        );
+        let drf = ArbiterKind::Drf { starvation_bound_s: 7.0 }.build();
+        assert_eq!(drf.name(), "drf");
+        assert_eq!(drf.starvation_bound_s(), 7.0);
+    }
+}

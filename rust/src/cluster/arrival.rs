@@ -13,6 +13,8 @@
 
 use crate::util::rng::Pcg;
 
+/// A deterministic generator of job submission times (see the module
+/// docs for the three regimes).
 #[derive(Clone, Debug)]
 pub enum ArrivalProcess {
     /// all jobs arrive at t = 0

@@ -1,0 +1,135 @@
+//! Capacity schedules: how the shared account's concurrency limit moves
+//! over virtual time.
+//!
+//! Real FaaS accounts are not fixed-size boxes: providers reclaim burst
+//! capacity, org-level admins re-slice quotas, and spot-style tiers shrink
+//! mid-run. A [`CapacityTrace`] is a deterministic schedule of
+//! account-limit values the fleet scheduler applies while jobs are in
+//! flight. When the limit steps *down* below the current in-flight total,
+//! the scheduler reclaims leases (see
+//! [`ClusterSim`](super::fleet::ClusterSim)) and the squeezed drivers
+//! re-optimize into the shrunken space; when it steps *up*, parked jobs
+//! are woken to claim the new room.
+
+/// A deterministic schedule for the account concurrency limit.
+///
+/// All variants are pure functions of virtual time — two runs over the
+/// same trace see identical capacity, which keeps fleet runs bit
+/// deterministic.
+///
+/// # Examples
+///
+/// ```
+/// use smlt::cluster::CapacityTrace;
+///
+/// // a spot-style reclamation: 1000 slots until t=600s, then 64
+/// let shock = CapacityTrace::Step { at_s: 600.0, to: 64 };
+/// assert_eq!(shock.limit_at(1000, 0.0), 1000);
+/// assert_eq!(shock.limit_at(1000, 599.9), 1000);
+/// assert_eq!(shock.limit_at(1000, 600.0), 64);
+///
+/// // an explicit replayed schedule; entries are (time_s, limit)
+/// let trace = CapacityTrace::Trace(vec![(0.0, 256), (300.0, 128), (900.0, 512)]);
+/// assert_eq!(trace.limit_at(256, 450.0), 128);
+/// assert_eq!(trace.limit_at(256, 900.0), 512);
+/// ```
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum CapacityTrace {
+    /// the account limit never moves (the pre-shock fleet behavior)
+    #[default]
+    Static,
+    /// one step change: the limit becomes `to` at `at_s`
+    Step { at_s: f64, to: u32 },
+    /// linear-ish ramp from the initial limit to `to`, applied as `steps`
+    /// equal stair-steps between `start_s` and `end_s` (a gradual
+    /// reclamation rather than a cliff)
+    Ramp { start_s: f64, end_s: f64, to: u32, steps: u32 },
+    /// explicit `(time_s, limit)` change points (replay of a recorded
+    /// capacity schedule); unsorted input is sorted by time
+    Trace(Vec<(f64, u32)>),
+}
+
+impl CapacityTrace {
+    /// Normalized ascending change points `(time_s, limit)` for a run
+    /// whose account starts at `initial` slots. `Static` has none.
+    /// Change points at or before t=0 still apply (the fleet applies them
+    /// before the first event).
+    pub fn changepoints(&self, initial: u32) -> Vec<(f64, u32)> {
+        let mut pts: Vec<(f64, u32)> = match self {
+            CapacityTrace::Static => Vec::new(),
+            CapacityTrace::Step { at_s, to } => vec![(*at_s, *to)],
+            CapacityTrace::Ramp { start_s, end_s, to, steps } => {
+                let n = (*steps).max(1);
+                let span = (end_s - start_s).max(0.0);
+                (1..=n)
+                    .map(|i| {
+                        let frac = i as f64 / n as f64;
+                        let t = start_s + span * frac;
+                        let limit = initial as f64 + (*to as f64 - initial as f64) * frac;
+                        (t, limit.round().max(1.0) as u32)
+                    })
+                    .collect()
+            }
+            CapacityTrace::Trace(pts) => pts.clone(),
+        };
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN capacity change time"));
+        pts
+    }
+
+    /// The account limit in force at virtual time `t` for a run starting
+    /// at `initial` slots (the last change point at or before `t`, else
+    /// `initial`). Limits are floored at 1 — a zero-slot account could
+    /// never grant anything (see [`QuotaPool`](super::quota::QuotaPool)).
+    pub fn limit_at(&self, initial: u32, t: f64) -> u32 {
+        let mut limit = initial;
+        for (at, to) in self.changepoints(initial) {
+            if at <= t {
+                limit = to;
+            } else {
+                break;
+            }
+        }
+        limit.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_never_changes() {
+        assert!(CapacityTrace::Static.changepoints(100).is_empty());
+        assert_eq!(CapacityTrace::Static.limit_at(100, 1e9), 100);
+    }
+
+    #[test]
+    fn step_applies_at_and_after_the_edge() {
+        let c = CapacityTrace::Step { at_s: 10.0, to: 5 };
+        assert_eq!(c.limit_at(100, 9.999), 100);
+        assert_eq!(c.limit_at(100, 10.0), 5);
+        assert_eq!(c.limit_at(100, 1e6), 5);
+    }
+
+    #[test]
+    fn ramp_descends_in_stairs_to_target() {
+        let c = CapacityTrace::Ramp { start_s: 0.0, end_s: 100.0, to: 20, steps: 4 };
+        let pts = c.changepoints(100);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts[0], (25.0, 80));
+        assert_eq!(pts[3], (100.0, 20));
+        // monotone in time and in limit for a pure step-down
+        assert!(pts.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 > w[1].1));
+        assert_eq!(c.limit_at(100, 1000.0), 20);
+    }
+
+    #[test]
+    fn trace_sorts_and_floors_at_one() {
+        let c = CapacityTrace::Trace(vec![(50.0, 10), (20.0, 0)]);
+        let pts = c.changepoints(64);
+        assert_eq!(pts[0].0, 20.0);
+        // the raw change point keeps its value; limit_at floors it
+        assert_eq!(c.limit_at(64, 30.0), 1);
+        assert_eq!(c.limit_at(64, 60.0), 10);
+    }
+}

@@ -5,38 +5,59 @@
 //! clock takes one step (ties break by submission order, so runs are
 //! deterministic). A job whose slot request is denied parks with no lease
 //! held (no hold-and-wait → no deadlock); it wakes when a step actually
-//! returns capacity to the pool. Arbitration is by goal class
-//! (Deadline > Budget > Fastest > None):
+//! returns capacity to the pool. *Which* parked job is served first, and
+//! *whose* fleet is revoked when capacity must be freed, is delegated to a
+//! pluggable [`Arbiter`] policy — goal-class priority (the default,
+//! bit-identical to the original scheduler), weighted fair sharing, or
+//! DRF; see [`super::arbiter`]. Three mechanisms sit on top:
 //!
-//! - **Preemption** — when a high-class job is denied, the scheduler
-//!   revokes fleets of strictly lower-class jobs (lowest class first,
-//!   newest arrival first) until the request fits. Victims pay the
-//!   checkpoint/restart price (cold start + re-init) and re-enter the
-//!   queue; they do not steal back until capacity is organically
-//!   released.
-//! - **Re-optimization** — a driver squeezed below its preferred fleet
-//!   size re-runs its Bayesian search over a quota-capped space (see
-//!   [`JobDriver`]), so scarcity feeds the paper's §3.2 loop rather than
-//!   bypassing it.
+//! - **Preemption** — when a blocked job is denied, the scheduler asks the
+//!   arbiter for an eviction order over current lease holders and revokes
+//!   fleets until the request fits (feasibility-checked first: nothing is
+//!   evicted unless the permitted victims can actually cover the request).
+//!   Victims pay the checkpoint/restart price (cold start + re-init) and
+//!   re-enter the queue.
+//! - **Starvation aging** — under a finite
+//!   [`Arbiter::starvation_bound_s`], a job blocked longer than the bound
+//!   outranks everything (any class, any share) and may preempt anyone;
+//!   with preemption enabled this upper-bounds every admitted job's
+//!   continuous wait, which the cluster property suite asserts.
+//! - **Capacity shocks** — a [`CapacityTrace`] steps the account limit
+//!   mid-run. On a shrink the scheduler reclaims leases (arbiter-ordered)
+//!   until the surviving total fits, then lowers the pool and platform
+//!   limits; squeezed drivers re-optimize into the shrunken space through
+//!   the quota-capped Bayesian loop (see [`JobDriver`]). Each shock is
+//!   logged as a [`ShockRecord`] with its reclamation size and the
+//!   virtual time at which all victims were re-admitted.
 //!
 //! [`JobDriver`]: crate::coordinator::simrun::JobDriver
 
+use super::arbiter::{Arbiter, ArbiterKind, Capacity, JobView};
 use super::arrival::ArrivalProcess;
+use super::capacity::CapacityTrace;
 use super::quota::TenantQuota;
 use super::{ClusterEnv, TenantId};
 use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
 
+/// Knobs for a [`ClusterSim`] run.
 #[derive(Clone, Debug)]
 pub struct ClusterParams {
     /// seed for the shared platform (cold starts, anomalies)
     pub seed: u64,
     /// account-level concurrent-execution limit shared by all tenants
+    /// (the *initial* limit when `capacity` moves it mid-run)
     pub account_limit: u32,
     /// aggregate storage capacity in worker-NICs (see
     /// [`ClusterEnv::storage_saturation_workers`])
     pub storage_saturation_workers: f64,
-    /// revoke lower-class fleets when a constrained job is denied slots
+    /// revoke other fleets when a blocked job is denied slots (victim
+    /// choice is the arbiter's)
     pub preemption: bool,
+    /// slot-arbitration policy (queue order + eviction order)
+    pub arbiter: ArbiterKind,
+    /// schedule for the account limit over virtual time (spot-capacity
+    /// shocks); [`CapacityTrace::Static`] reproduces the fixed account
+    pub capacity: CapacityTrace,
 }
 
 impl Default for ClusterParams {
@@ -46,6 +67,8 @@ impl Default for ClusterParams {
             account_limit: crate::faas::FaasLimits::default().concurrency_limit,
             storage_saturation_workers: 512.0,
             preemption: true,
+            arbiter: ArbiterKind::GoalClass,
+            capacity: CapacityTrace::Static,
         }
     }
 }
@@ -53,23 +76,65 @@ impl Default for ClusterParams {
 struct Slot {
     driver: JobDriver,
     arrive_s: f64,
+    weight: f64,
     blocked: bool,
     finished: bool,
+    /// when the current continuous blocked stretch began (persists across
+    /// failed retries; cleared on the first successful step)
+    blocked_since: Option<f64>,
+    /// a starvation-forced retry already failed in this release epoch
+    starved_retry: bool,
+    max_wait_streak_s: f64,
+}
+
+/// One applied capacity change and what it cost.
+#[derive(Clone, Debug)]
+pub struct ShockRecord {
+    /// virtual time the change was applied
+    pub at_s: f64,
+    /// account limit before the change
+    pub from_limit: u32,
+    /// account limit after the change (floored at 1)
+    pub to_limit: u32,
+    /// fleets revoked to fit the shrunken limit
+    pub reclaimed_leases: u32,
+    /// concurrency slots those fleets held
+    pub reclaimed_slots: u32,
+    /// tenants whose fleets were revoked (== job indices in submission
+    /// order)
+    pub victim_tenants: Vec<TenantId>,
+    /// virtual time every victim was running again (or finished) —
+    /// `recovered_s - at_s` is the fleet's time-to-reoptimize after the
+    /// shock; `None` if a victim never re-admitted before the run ended
+    pub recovered_s: Option<f64>,
+    /// high-water mark of in-flight slots from this shock until the next
+    /// one (must stay within `to_limit` — the post-shock conservation
+    /// property)
+    pub peak_after: u32,
 }
 
 /// One job's result inside a fleet run.
 pub struct JobOutcome {
+    /// tenant id == index in [`FleetOutcome::jobs`]
     pub tenant: TenantId,
     /// the goal the job ran under (hit-rate bucketing by class)
     pub goal: Goal,
+    /// fair-share weight the job was submitted with
+    pub weight: f64,
+    /// submission time on the fleet's virtual clock
     pub arrive_s: f64,
     /// global virtual time the job completed
     pub finish_s: f64,
     /// virtual seconds spent parked waiting for slots
     pub queue_wait_s: f64,
+    /// longest single continuous wait for slots (the starvation-bound
+    /// property asserts this stays under the arbiter's bound)
+    pub max_wait_streak_s: f64,
+    /// times this job's fleet was revoked (preemption or shock)
     pub preemptions: u32,
     /// global virtual time the worker fleet first launched
     pub first_fleet_s: Option<f64>,
+    /// the single-job simulation outcome (ledger, metrics, traces)
     pub outcome: SimOutcome,
 }
 
@@ -79,30 +144,43 @@ impl JobOutcome {
         self.finish_s - self.arrive_s
     }
 
+    /// Whether the arrival-to-completion span fit `t_max_s`.
     pub fn met_deadline(&self, t_max_s: f64) -> bool {
         self.duration_s() <= t_max_s
     }
 }
 
+/// Everything a [`ClusterSim::run`] produced.
 pub struct FleetOutcome {
+    /// per-job outcomes, indexed by tenant id
     pub jobs: Vec<JobOutcome>,
     /// first arrival to last completion
     pub makespan_s: f64,
-    /// high-water mark of concurrent executions (must be <= the limit)
+    /// high-water mark of concurrent executions (must be <= the *largest*
+    /// limit the capacity trace ever granted)
     pub peak_in_flight: u32,
+    /// account limit at the *end* of the run (the initial one under a
+    /// static trace)
     pub account_limit: u32,
     /// slot requests the pool turned down
     pub denials: u64,
     /// launches the platform throttled (account pressure, Map caps)
     pub throttled_invocations: u64,
+    /// fleet revocations across the whole run (preemptions + shocks)
     pub preemptions: u64,
+    /// arbitration policy the fleet ran under
+    pub arbiter: &'static str,
+    /// capacity changes applied during the run, in order
+    pub shocks: Vec<ShockRecord>,
 }
 
 impl FleetOutcome {
+    /// Summed cost of every job's ledger.
     pub fn total_cost(&self) -> f64 {
         self.jobs.iter().map(|j| j.outcome.total_cost()).sum()
     }
 
+    /// Mean arrival-to-completion span across jobs.
     pub fn mean_duration_s(&self) -> f64 {
         if self.jobs.is_empty() {
             return 0.0;
@@ -113,32 +191,69 @@ impl FleetOutcome {
 
 /// Multi-tenant cluster simulation: submit jobs, then [`run`](Self::run).
 pub struct ClusterSim {
+    /// the knobs the fleet was built with
     pub params: ClusterParams,
     env: ClusterEnv,
     jobs: Vec<Slot>,
+    arbiter: Box<dyn Arbiter>,
+    shocks: Vec<ShockRecord>,
 }
 
 impl ClusterSim {
+    /// An empty fleet on a fresh shared environment.
     pub fn new(params: ClusterParams) -> ClusterSim {
         let env = ClusterEnv::shared(
             params.seed,
             params.account_limit,
             params.storage_saturation_workers,
         );
-        ClusterSim { params, env, jobs: Vec::new() }
+        let arbiter = params.arbiter.build();
+        ClusterSim { params, env, jobs: Vec::new(), arbiter, shocks: Vec::new() }
+    }
+
+    /// Replace the arbitration policy with a custom [`Arbiter`]
+    /// implementation (the [`ClusterParams::arbiter`] kind only covers the
+    /// built-in ones). Call before [`run`](Self::run).
+    pub fn set_arbiter(&mut self, arbiter: Box<dyn Arbiter>) {
+        self.arbiter = arbiter;
     }
 
     /// Submit one job arriving at `arrive_s` under `quota`; returns its
-    /// tenant id (== its index in the outcome's job list).
+    /// tenant id (== its index in the outcome's job list). Fair-share
+    /// weight is 1.0; see [`submit_weighted`](Self::submit_weighted).
     pub fn submit(&mut self, job: SimJob, arrive_s: f64, quota: TenantQuota) -> TenantId {
+        self.submit_weighted(job, arrive_s, quota, 1.0)
+    }
+
+    /// [`submit`](Self::submit) with an explicit fair-share weight (> 0):
+    /// under the weighted-fair / DRF arbiters a weight-2 tenant is
+    /// entitled to twice the slots of a weight-1 tenant before it becomes
+    /// preemptable. The goal-class arbiter ignores weights.
+    pub fn submit_weighted(
+        &mut self,
+        job: SimJob,
+        arrive_s: f64,
+        quota: TenantQuota,
+        weight: f64,
+    ) -> TenantId {
+        assert!(weight > 0.0, "fair-share weight must be > 0 (got {weight})");
         let tenant = self.env.pool.register_tenant(quota);
         let driver = JobDriver::new(job, tenant, &self.env, arrive_s);
-        self.jobs.push(Slot { driver, arrive_s, blocked: false, finished: false });
+        self.jobs.push(Slot {
+            driver,
+            arrive_s,
+            weight,
+            blocked: false,
+            finished: false,
+            blocked_since: None,
+            starved_retry: false,
+            max_wait_streak_s: 0.0,
+        });
         tenant
     }
 
     /// Submit a batch of jobs with arrival times drawn from `arrivals`,
-    /// all under the same per-tenant quota.
+    /// all under the same per-tenant quota (and weight 1.0).
     pub fn submit_all(&mut self, jobs: Vec<SimJob>, arrivals: &ArrivalProcess, quota: TenantQuota) {
         let times = arrivals.times(jobs.len());
         for (job, t) in jobs.into_iter().zip(times) {
@@ -156,20 +271,44 @@ impl ClusterSim {
             .sum();
         let max_steps = 100_000 + 50 * total_work * (self.jobs.len() as u64 + 1);
         let mut steps = 0u64;
+        let changes = self.params.capacity.changepoints(self.params.account_limit);
+        let mut next_change = 0usize;
 
         loop {
-            let idx = match self.next_runnable() {
-                Some(i) => i,
-                None => match self.highest_priority_blocked() {
-                    // nothing runnable: force the top-class parked job to
-                    // retry (no leases can be outstanding here, so its
-                    // clamped request must fit)
+            if self.jobs.iter().all(|s| s.finished) {
+                break;
+            }
+            let frontier = self.frontier();
+            // capacity changes fire when the virtual frontier crosses them
+            while next_change < changes.len() && changes[next_change].0 <= frontier {
+                let (at, to) = changes[next_change];
+                self.apply_capacity(at.max(0.0), to);
+                next_change += 1;
+            }
+
+            let mut forced_starved = false;
+            let idx = match self.pick_starved(frontier) {
+                Some(i) => {
+                    // drag the starved job to the frontier so its
+                    // preemption happens "now", not in its stalled past
+                    self.jobs[i].driver.stall_until(frontier);
+                    forced_starved = true;
+                    i
+                }
+                None => match self.next_runnable() {
                     Some(i) => i,
-                    None => break, // everything finished
+                    None => match self.pick_blocked_idx(frontier) {
+                        // nothing runnable: force the arbiter's top parked
+                        // job to retry (no leases can be outstanding here,
+                        // so its clamped request must fit)
+                        Some(i) => i,
+                        None => break, // everything finished
+                    },
                 },
             };
 
             let releases_before = self.env.pool.releases;
+            let t_before = self.jobs[idx].driver.now();
             let ev = {
                 let slot = &mut self.jobs[idx];
                 slot.blocked = false;
@@ -181,25 +320,46 @@ impl ClusterSim {
             // preemption's releases stay earmarked for the preemptor:
             // victims parked by try_preempt_for are not woken in the same
             // iteration and cannot steal the freed slots straight back.
+            // blocked_since persists — a wake is a retry opportunity, not
+            // progress, so the continuous-wait clock keeps running.
             if self.env.pool.releases > releases_before {
                 let t = self.jobs[idx].driver.now();
                 for slot in self.jobs.iter_mut() {
                     if !slot.finished && slot.blocked {
                         slot.driver.stall_until(t);
                         slot.blocked = false;
+                        slot.starved_retry = false;
                     }
                 }
             }
             match ev {
-                StepEvent::Finished => self.jobs[idx].finished = true,
-                StepEvent::Progressed => {}
+                StepEvent::Finished => {
+                    self.jobs[idx].finished = true;
+                    self.close_wait_streak(idx, t_before);
+                }
+                StepEvent::Progressed => self.close_wait_streak(idx, t_before),
                 StepEvent::Blocked { want } => {
+                    let now = self.jobs[idx].driver.now();
                     self.jobs[idx].blocked = true;
+                    if self.jobs[idx].blocked_since.is_none() {
+                        self.jobs[idx].blocked_since = Some(now);
+                    }
                     if self.params.preemption {
                         self.try_preempt_for(idx, want);
                     }
+                    if let Some(b) = self.jobs[idx].blocked_since {
+                        let s = &mut self.jobs[idx];
+                        s.max_wait_streak_s = s.max_wait_streak_s.max(now - b);
+                    }
+                    if forced_starved && self.jobs[idx].blocked {
+                        // one forced retry per release epoch, else a
+                        // starved-but-unsatisfiable job would spin the
+                        // loop without advancing any clock
+                        self.jobs[idx].starved_retry = true;
+                    }
                 }
             }
+            self.note_shock_recovery(self.jobs[idx].driver.now());
 
             steps += 1;
             assert!(
@@ -208,6 +368,77 @@ impl ClusterSim {
             );
         }
         self.collect()
+    }
+
+    /// Smallest virtual clock among runnable jobs (falling back to parked
+    /// ones when nothing is runnable) — the fleet's notion of "now".
+    fn frontier(&self) -> f64 {
+        let mut t = f64::INFINITY;
+        for s in self.jobs.iter() {
+            if !s.finished && !s.blocked {
+                t = t.min(s.driver.now());
+            }
+        }
+        if !t.is_finite() {
+            for s in self.jobs.iter() {
+                if !s.finished {
+                    t = t.min(s.driver.now());
+                }
+            }
+        }
+        t
+    }
+
+    /// The arbiter's normalization axes at the current limit.
+    fn capacity_axes(&self) -> Capacity {
+        let slots = self.env.pool.account_limit;
+        Capacity {
+            slots,
+            mem_mb: slots as u64 * self.env.platform.limits.mem_max_mb as u64,
+        }
+    }
+
+    /// Scheduler-facing snapshot of job `j`; starvation is judged against
+    /// `t_ref` (the frontier, or the requester's own clock mid-step).
+    fn view(&self, j: usize, t_ref: f64) -> JobView {
+        let s = &self.jobs[j];
+        let bound = self.arbiter.starvation_bound_s();
+        let cfg = s.driver.current_config();
+        JobView {
+            idx: j,
+            tenant: s.driver.tenant,
+            class: s.driver.job.goal.class(),
+            arrive_s: s.arrive_s,
+            weight: s.weight,
+            workers: cfg.workers,
+            mem_mb: cfg.mem_mb,
+            holds_lease: s.driver.holds_lease(),
+            in_flight: self.env.pool.tenant_in_flight(s.driver.tenant),
+            starved: bound.is_finite()
+                && s.blocked
+                && s.blocked_since.map_or(false, |b| t_ref - b >= bound),
+        }
+    }
+
+    /// A blocked job past the starvation bound that has not burned its
+    /// forced retry this release epoch (most-starved first).
+    fn pick_starved(&self, frontier: f64) -> Option<usize> {
+        let bound = self.arbiter.starvation_bound_s();
+        if !bound.is_finite() {
+            return None;
+        }
+        self.jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.finished && s.blocked && !s.starved_retry)
+            .filter(|(_, s)| s.blocked_since.map_or(false, |b| frontier - b >= bound))
+            .min_by(|(_, a), (_, b)| {
+                a.blocked_since
+                    .unwrap()
+                    .partial_cmp(&b.blocked_since.unwrap())
+                    .expect("NaN block time")
+            })
+            .map(|(i, _)| i)
     }
 
     fn next_runnable(&self) -> Option<usize> {
@@ -224,81 +455,71 @@ impl ClusterSim {
             .map(|(i, _)| i)
     }
 
-    fn highest_priority_blocked(&self) -> Option<usize> {
-        self.jobs
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| !s.finished && s.blocked)
-            .min_by(|(_, a), (_, b)| {
-                b.driver
-                    .job
-                    .goal
-                    .class()
-                    .cmp(&a.driver.job.goal.class())
-                    .then(
-                        a.arrive_s
-                            .partial_cmp(&b.arrive_s)
-                            .expect("NaN arrival"),
-                    )
-            })
-            .map(|(i, _)| i)
-    }
-
-    /// Free slots for blocked job `idx` by revoking fleets of strictly
-    /// lower goal class: lowest class first, newest arrival first. The
-    /// freed slots are leased to the requester on the spot (so a
-    /// runnable lower-class job reaching its own phase boundary first
-    /// cannot snipe them), and nothing is evicted at all unless the
-    /// preemptable pool can actually cover the request.
-    fn try_preempt_for(&mut self, idx: usize, want: u32) {
-        let class = self.jobs[idx].driver.job.goal.class();
-        let tenant = self.jobs[idx].driver.tenant;
-        let t = self.jobs[idx].driver.now();
-        // feasibility first: evicting victims without being able to
-        // satisfy `want` would charge them a restart for nothing
-        let preemptable: u64 = self
+    /// The arbiter's first choice among parked jobs, as a job index.
+    fn pick_blocked_idx(&self, frontier: f64) -> Option<usize> {
+        let cand: Vec<usize> = self
             .jobs
             .iter()
             .enumerate()
-            .filter(|(j, s)| {
-                *j != idx
-                    && !s.finished
-                    && s.driver.holds_lease()
-                    && s.driver.job.goal.class() < class
-            })
-            .map(|(_, s)| s.driver.current_config().workers as u64)
-            .sum();
+            .filter(|(_, s)| !s.finished && s.blocked)
+            .map(|(i, _)| i)
+            .collect();
+        if cand.is_empty() {
+            return None;
+        }
+        let views: Vec<JobView> = cand.iter().map(|&j| self.view(j, frontier)).collect();
+        self.arbiter
+            .pick_blocked(&views, self.capacity_axes())
+            .map(|p| cand[p])
+    }
+
+    /// A successful step ended any continuous wait that was in progress;
+    /// the streak ran from the first denial to the moment the step began.
+    fn close_wait_streak(&mut self, idx: usize, t_before: f64) {
+        if let Some(b) = self.jobs[idx].blocked_since.take() {
+            let s = &mut self.jobs[idx];
+            s.max_wait_streak_s = s.max_wait_streak_s.max(t_before - b);
+            s.starved_retry = false;
+        }
+    }
+
+    /// Free slots for blocked job `idx` by revoking other fleets in the
+    /// arbiter's eviction order. The freed slots are leased to the
+    /// requester on the spot (so a runnable job reaching its own phase
+    /// boundary first cannot snipe them), and nothing is evicted at all
+    /// unless the permitted victims can actually cover the request.
+    fn try_preempt_for(&mut self, idx: usize, want: u32) {
+        let tenant = self.jobs[idx].driver.tenant;
+        let t = self.jobs[idx].driver.now();
+        let requester = self.view(idx, t);
+        let cand: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(j, s)| *j != idx && !s.finished && s.driver.holds_lease())
+            .map(|(j, _)| j)
+            .collect();
+        let views: Vec<JobView> = cand.iter().map(|&j| self.view(j, t)).collect();
+        let order = self
+            .arbiter
+            .eviction_order(Some(&requester), &views, self.capacity_axes());
+        // feasibility first: evicting victims without being able to
+        // satisfy `want` would charge them a restart for nothing
+        let preemptable: u64 = order.iter().map(|&p| views[p].workers as u64).sum();
         if self.env.pool.grantable(tenant) as u64 + preemptable < want as u64 {
             return;
         }
-        while self.env.pool.grantable(tenant) < want {
-            let victim = self
-                .jobs
-                .iter()
-                .enumerate()
-                .filter(|(j, s)| {
-                    *j != idx
-                        && !s.finished
-                        && s.driver.holds_lease()
-                        && s.driver.job.goal.class() < class
-                })
-                .min_by(|(_, a), (_, b)| {
-                    a.driver
-                        .job
-                        .goal
-                        .class()
-                        .cmp(&b.driver.job.goal.class())
-                        .then(
-                            b.arrive_s
-                                .partial_cmp(&a.arrive_s)
-                                .expect("NaN arrival"),
-                        )
-                })
-                .map(|(j, _)| j);
-            let Some(j) = victim else { break };
+        for &p in &order {
+            if self.env.pool.grantable(tenant) >= want {
+                break;
+            }
+            let j = cand[p];
             self.jobs[j].driver.preempt(&mut self.env);
             self.jobs[j].driver.stall_until(t);
             self.jobs[j].blocked = true; // waits for an organic release
+            if self.jobs[j].blocked_since.is_none() {
+                self.jobs[j].blocked_since = Some(self.jobs[j].driver.now());
+            }
         }
         // reserve the freed slots for the requester immediately: its
         // next step re-enters await_slots, which swaps this lease for a
@@ -309,11 +530,107 @@ impl ClusterSim {
         }
     }
 
+    /// Apply one capacity change: reclaim leases (arbiter-ordered) until
+    /// the surviving total fits a shrink, then move the pool and platform
+    /// limits; on growth, wake parked jobs to claim the new room.
+    fn apply_capacity(&mut self, at_s: f64, to: u32) {
+        let to = to.max(1);
+        let from = self.env.pool.account_limit;
+        if to == from {
+            return;
+        }
+        let mut victim_tenants: Vec<TenantId> = Vec::new();
+        let mut reclaimed_slots = 0u32;
+        if self.env.pool.excess_over(to) > 0 {
+            let holders: Vec<usize> = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.finished && s.driver.holds_lease())
+                .map(|(j, _)| j)
+                .collect();
+            let views: Vec<JobView> =
+                holders.iter().map(|&j| self.view(j, at_s)).collect();
+            let order = self.arbiter.eviction_order(None, &views, self.capacity_axes());
+            for &p in &order {
+                if self.env.pool.excess_over(to) == 0 {
+                    break;
+                }
+                let j = holders[p];
+                let freed = self.jobs[j].driver.current_config().workers;
+                self.jobs[j].driver.preempt(&mut self.env);
+                self.jobs[j].driver.stall_until(at_s);
+                self.jobs[j].blocked = true;
+                if self.jobs[j].blocked_since.is_none() {
+                    self.jobs[j].blocked_since = Some(self.jobs[j].driver.now());
+                }
+                victim_tenants.push(self.jobs[j].driver.tenant);
+                reclaimed_slots += freed;
+            }
+        }
+        self.env.pool.set_account_limit(to);
+        self.env.platform.limits.concurrency_limit = to;
+        if to > from {
+            // growth: wake parked jobs to claim the new room (no release
+            // event will announce it otherwise)
+            for slot in self.jobs.iter_mut() {
+                if !slot.finished && slot.blocked {
+                    slot.driver.stall_until(at_s);
+                    slot.blocked = false;
+                    slot.starved_retry = false;
+                }
+            }
+        }
+        let recovered_s = if victim_tenants.is_empty() { Some(at_s) } else { None };
+        self.shocks.push(ShockRecord {
+            at_s,
+            from_limit: from,
+            to_limit: to,
+            reclaimed_leases: victim_tenants.len() as u32,
+            reclaimed_slots,
+            victim_tenants,
+            recovered_s,
+            peak_after: self.env.pool.total_in_flight(),
+        });
+    }
+
+    /// Track, per shock, the post-shock in-flight peak and the moment all
+    /// its victims were running (or done) again.
+    fn note_shock_recovery(&mut self, t: f64) {
+        if self.shocks.is_empty() {
+            return;
+        }
+        let total = self.env.pool.total_in_flight();
+        let last = self.shocks.len() - 1;
+        for k in 0..self.shocks.len() {
+            if k == last {
+                let rec = &mut self.shocks[k];
+                rec.peak_after = rec.peak_after.max(total);
+            }
+            if self.shocks[k].recovered_s.is_some() {
+                continue;
+            }
+            let mut all_back = true;
+            for vi in 0..self.shocks[k].victim_tenants.len() {
+                let v = self.shocks[k].victim_tenants[vi] as usize;
+                let s = &self.jobs[v];
+                if !(s.finished || s.driver.holds_lease()) {
+                    all_back = false;
+                    break;
+                }
+            }
+            if all_back {
+                self.shocks[k].recovered_s = Some(t);
+            }
+        }
+    }
+
     fn collect(self) -> FleetOutcome {
         let peak_in_flight = self.env.pool.peak_in_flight;
         let denials = self.env.pool.denials;
         let throttled = self.env.platform.total_throttled;
-        let account_limit = self.params.account_limit;
+        let account_limit = self.env.pool.account_limit;
+        let arbiter = self.arbiter.name();
         let mut first_arrive = f64::INFINITY;
         let mut last_finish = 0.0f64;
         let mut preempt_total = 0u64;
@@ -327,9 +644,11 @@ impl ClusterSim {
                 JobOutcome {
                     tenant: s.driver.tenant,
                     goal: s.driver.job.goal,
+                    weight: s.weight,
                     arrive_s: s.arrive_s,
                     finish_s: s.driver.now(),
                     queue_wait_s: s.driver.stalled_s,
+                    max_wait_streak_s: s.max_wait_streak_s,
                     preemptions: s.driver.preemptions,
                     first_fleet_s: s.driver.first_fleet_s,
                     outcome: s.driver.into_outcome(),
@@ -348,6 +667,8 @@ impl ClusterSim {
             denials,
             throttled_invocations: throttled,
             preemptions: preempt_total,
+            arbiter,
+            shocks: self.shocks,
         }
     }
 }
@@ -397,6 +718,8 @@ mod tests {
             out.peak_in_flight,
             out.account_limit
         );
+        assert_eq!(out.arbiter, "goal-class");
+        assert!(out.shocks.is_empty(), "static capacity never shocks");
     }
 
     #[test]
@@ -477,6 +800,93 @@ mod tests {
             out.jobs[1].met_deadline(3.0 * 3600.0),
             "deadline missed: duration {} s",
             out.jobs[1].duration_s()
+        );
+    }
+
+    #[test]
+    fn capacity_step_down_reclaims_and_recovers() {
+        // a roomy account shrinks to 8 slots shortly after the fleet
+        // ramps: leases must be reclaimed, the post-shock peak must fit
+        // the shrunken limit, and everyone still finishes
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 256,
+            capacity: CapacityTrace::Step { at_s: 120.0, to: 8 },
+            ..Default::default()
+        });
+        for i in 0..4 {
+            sim.submit(small_job(300 + i), 0.0, TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        assert_eq!(out.shocks.len(), 1, "one change point, one record");
+        let shock = &out.shocks[0];
+        assert_eq!(shock.from_limit, 256);
+        assert_eq!(shock.to_limit, 8);
+        assert!(
+            shock.peak_after <= 8,
+            "post-shock in-flight peak {} exceeded the shrunken limit",
+            shock.peak_after
+        );
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 12, "tenant {} wedged", j.tenant);
+            // the shrunken account can only run 8-worker fleets
+            assert!(
+                j.outcome
+                    .config_trace
+                    .iter()
+                    .any(|(_, c)| c.workers <= 8),
+                "tenant {} never refit to the shrunken account: {:?}",
+                j.tenant,
+                j.outcome.config_trace
+            );
+        }
+        assert_eq!(out.account_limit, 8, "outcome reports the final limit");
+    }
+
+    #[test]
+    fn capacity_growth_wakes_parked_jobs() {
+        // 8 slots until t=1200, then 512: everyone finishes, and the peak
+        // may legally exceed 8 only after the growth
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 8,
+            capacity: CapacityTrace::Step { at_s: 1200.0, to: 512 },
+            ..Default::default()
+        });
+        for i in 0..3 {
+            sim.submit(small_job(700 + i), 0.0, TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 12);
+        }
+        assert!(out.peak_in_flight <= 512);
+        if let Some(shock) = out.shocks.first() {
+            assert_eq!(shock.reclaimed_leases, 0, "growth reclaims nothing");
+            assert_eq!(shock.recovered_s, Some(shock.at_s));
+        }
+    }
+
+    #[test]
+    fn weighted_fair_splits_a_contended_account_by_weight() {
+        // two identical best-effort jobs, one with 3x the weight, on an
+        // account that fits only one preferred fleet: the heavy tenant
+        // must not end up waiting longer than the light one
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 32,
+            arbiter: ArbiterKind::WeightedFair { starvation_bound_s: f64::INFINITY },
+            ..Default::default()
+        });
+        sim.submit_weighted(small_job(21), 0.0, TenantQuota::unlimited(), 1.0);
+        sim.submit_weighted(small_job(22), 5.0, TenantQuota::unlimited(), 3.0);
+        let out = sim.run();
+        assert_eq!(out.arbiter, "weighted-fair");
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 12);
+        }
+        assert!(
+            out.jobs[1].queue_wait_s <= out.jobs[0].queue_wait_s + 1e-9,
+            "the weight-3 tenant waited {} s vs the weight-1 tenant's {} s",
+            out.jobs[1].queue_wait_s,
+            out.jobs[0].queue_wait_s
         );
     }
 }

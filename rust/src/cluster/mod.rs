@@ -9,13 +9,22 @@
 //! - [`arrival`] — deterministic job arrival processes (batch / Poisson /
 //!   trace replay),
 //! - [`quota`] — the shared account concurrency pool with per-tenant
-//!   quotas and lease-based conservation invariants,
+//!   quotas and lease-based conservation invariants (limits and quotas
+//!   can now move mid-run under a reclaim-first contract),
+//! - [`arbiter`] — pluggable slot-arbitration policies: goal-class
+//!   priority (Deadline > Budget > Fastest > None, the default),
+//!   weighted fair sharing, and dominant-resource fairness, each with a
+//!   configurable starvation bound that guarantees best-effort progress,
+//! - [`capacity`] — capacity schedules ([`CapacityTrace`]): step / ramp /
+//!   replayed-trace changes to the account limit mid-run (spot-style
+//!   reclamation),
 //! - [`fleet`] — the fleet scheduler: advances per-job [`JobDriver`]s in
-//!   virtual-time order over one shared [`ClusterEnv`], arbitrating slots
-//!   by goal class (Deadline > Budget > Fastest > None) with preemption;
-//!   jobs squeezed below their preferred fleet size re-optimize through
-//!   the existing Bayesian loop (the driver caps its search space at the
-//!   tenant's quota).
+//!   virtual-time order over one shared [`ClusterEnv`], delegating queue
+//!   order and eviction order to the configured [`Arbiter`], applying
+//!   capacity shocks with lease reclamation, and recording per-shock
+//!   [`ShockRecord`]s; jobs squeezed below their preferred fleet size
+//!   re-optimize through the existing Bayesian loop (the driver caps its
+//!   search space at the tenant's quota).
 //!
 //! [`ClusterEnv`] is the shared world state a driver steps against: the
 //! platform (cold starts, throttling, the account limit), the quota pool,
@@ -27,12 +36,19 @@
 //!
 //! [`JobDriver`]: crate::coordinator::simrun::JobDriver
 
+pub mod arbiter;
 pub mod arrival;
+pub mod capacity;
 pub mod fleet;
 pub mod quota;
 
+pub use arbiter::{
+    Arbiter, ArbiterKind, Capacity, DrfArbiter, GoalClassArbiter, JobView,
+    WeightedFairArbiter,
+};
 pub use arrival::ArrivalProcess;
-pub use fleet::{ClusterParams, ClusterSim, FleetOutcome, JobOutcome};
+pub use capacity::CapacityTrace;
+pub use fleet::{ClusterParams, ClusterSim, FleetOutcome, JobOutcome, ShockRecord};
 pub use quota::{Acquire, Lease, QuotaPool, TenantId, TenantQuota};
 
 use crate::faas::FaasPlatform;
@@ -40,7 +56,9 @@ use crate::faas::FaasPlatform;
 /// Shared world state one [`JobDriver`](crate::coordinator::simrun::JobDriver)
 /// advances against: platform + concurrency pool + shared storage capacity.
 pub struct ClusterEnv {
+    /// the simulated FaaS platform (cold starts, limits, anomalies)
     pub platform: FaasPlatform,
+    /// the shared account's concurrency pool
     pub pool: QuotaPool,
     /// Aggregate worker count at which the shared parameter-store /
     /// object-store bandwidth saturates: with `W` workers from *other*

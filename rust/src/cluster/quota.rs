@@ -12,6 +12,9 @@
 //! 2. total in-flight never exceeds the account limit,
 //! 3. per-tenant in-flight never exceeds that tenant's quota.
 
+/// A tenant's identity: its registration index in the pool (and, in a
+/// [`ClusterSim`](super::fleet::ClusterSim) run, its index in the
+/// outcome's job list).
 pub type TenantId = u32;
 
 /// Per-tenant concurrency quota.
@@ -27,6 +30,7 @@ impl TenantQuota {
         TenantQuota { max_concurrent: u32::MAX }
     }
 
+    /// At most `max_concurrent` concurrent executions.
     pub fn capped(max_concurrent: u32) -> TenantQuota {
         TenantQuota { max_concurrent }
     }
@@ -35,8 +39,11 @@ impl TenantQuota {
 /// An active grant of `n` concurrency slots to `tenant`.
 #[derive(Clone, Copy, Debug)]
 pub struct Lease {
+    /// pass to [`QuotaPool::release`]
     pub id: u64,
+    /// the tenant holding the slots
     pub tenant: TenantId,
+    /// slots held
     pub n: u32,
 }
 
@@ -49,7 +56,12 @@ pub enum Acquire {
     Denied { grantable: u32 },
 }
 
+/// The shared account's concurrency pool: the conservation authority for
+/// slot leases (see the module docs for the three invariants).
 pub struct QuotaPool {
+    /// account-level concurrent-execution limit currently in force (moves
+    /// mid-run under capacity shocks via
+    /// [`set_account_limit`](Self::set_account_limit))
     pub account_limit: u32,
     quotas: Vec<TenantQuota>,
     in_flight: Vec<u32>,
@@ -58,6 +70,7 @@ pub struct QuotaPool {
     next_id: u64,
     /// high-water mark of total in-flight (conservation evidence)
     pub peak_in_flight: u32,
+    /// slot requests turned down
     pub denials: u64,
     /// monotone release counter; the fleet scheduler uses it to wake
     /// blocked jobs only when capacity actually came back
@@ -93,18 +106,22 @@ impl QuotaPool {
         (self.quotas.len() - 1) as TenantId
     }
 
+    /// Registered tenant count.
     pub fn n_tenants(&self) -> usize {
         self.quotas.len()
     }
 
+    /// Slots currently leased across all tenants.
     pub fn total_in_flight(&self) -> u32 {
         self.total
     }
 
+    /// Slots currently leased by `tenant`.
     pub fn tenant_in_flight(&self, tenant: TenantId) -> u32 {
         self.in_flight[tenant as usize]
     }
 
+    /// The outstanding leases (conservation audits).
     pub fn leases(&self) -> &[Lease] {
         &self.leases
     }
@@ -123,6 +140,48 @@ impl QuotaPool {
             .saturating_sub(self.in_flight[tenant as usize]);
         let account_room = self.account_limit.saturating_sub(self.total);
         quota_room.min(account_room)
+    }
+
+    /// Change the account concurrency limit mid-run (capacity shock /
+    /// quota raise). Floored at 1 like [`new`](Self::new).
+    ///
+    /// **Contract:** shrinking below the current in-flight total is the
+    /// caller's problem — reclaim leases first (the fleet scheduler
+    /// preempts victims before calling this), because the pool's
+    /// conservation invariants are non-negotiable and a limit below the
+    /// outstanding leases would otherwise hold a falsehood.
+    pub fn set_account_limit(&mut self, new_limit: u32) {
+        let new_limit = new_limit.max(1);
+        assert!(
+            self.total <= new_limit,
+            "shrinking the account limit to {new_limit} with {} slots leased — \
+             reclaim leases first",
+            self.total
+        );
+        self.account_limit = new_limit;
+        self.assert_invariants();
+    }
+
+    /// Change one tenant's quota mid-run. Floored at 1 like
+    /// [`register_tenant`](Self::register_tenant); same contract as
+    /// [`set_account_limit`](Self::set_account_limit) — the tenant's
+    /// in-flight total must already fit the new quota.
+    pub fn set_tenant_quota(&mut self, tenant: TenantId, quota: TenantQuota) {
+        let max_concurrent = quota.max_concurrent.max(1);
+        assert!(
+            self.in_flight[tenant as usize] <= max_concurrent,
+            "shrinking tenant {tenant}'s quota to {max_concurrent} with {} slots \
+             leased — reclaim leases first",
+            self.in_flight[tenant as usize]
+        );
+        self.quotas[tenant as usize] = TenantQuota { max_concurrent };
+        self.assert_invariants();
+    }
+
+    /// Slots that must be reclaimed before the account limit can shrink
+    /// to `new_limit` (0 when it already fits).
+    pub fn excess_over(&self, new_limit: u32) -> u32 {
+        self.total.saturating_sub(new_limit.max(1))
     }
 
     /// Request `n` slots for `tenant`, all-or-nothing.
@@ -235,6 +294,36 @@ mod tests {
         // the minimum request a driver can make is always grantable on
         // an empty pool — no permanently-parked tenants
         assert!(matches!(p.try_acquire(t, 1), Acquire::Granted(_)));
+    }
+
+    #[test]
+    fn limit_and_quota_can_move_mid_run_when_leases_fit() {
+        let mut p = QuotaPool::new(100);
+        let t = p.register_tenant(TenantQuota::capped(40));
+        let Acquire::Granted(id) = p.try_acquire(t, 30) else { panic!() };
+        assert_eq!(p.excess_over(20), 10, "10 slots must come back first");
+        assert_eq!(p.excess_over(64), 0);
+        // shrink to something the leases still fit
+        p.set_account_limit(64);
+        assert_eq!(p.account_limit, 64);
+        assert_eq!(p.grantable(t), 10, "quota room 10 < account room 34");
+        // quota shrink down to exactly the in-flight total is legal
+        p.set_tenant_quota(t, TenantQuota::capped(30));
+        assert_eq!(p.grantable(t), 0);
+        p.release(id);
+        assert_eq!(p.total_in_flight(), 0);
+        // an empty pool may shrink to anything; a zero request floors at 1
+        p.set_account_limit(0);
+        assert_eq!(p.account_limit, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "reclaim leases first")]
+    fn shrinking_below_leases_panics() {
+        let mut p = QuotaPool::new(100);
+        let t = p.register_tenant(TenantQuota::unlimited());
+        let Acquire::Granted(_) = p.try_acquire(t, 50) else { panic!() };
+        p.set_account_limit(10);
     }
 
     #[test]

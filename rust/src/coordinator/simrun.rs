@@ -563,6 +563,16 @@ impl JobDriver {
 
     fn await_slots(&mut self, env: &mut ClusterEnv) -> StepEvent {
         if self.job.system.is_serverless() {
+            // feasibility check against the *current* quota: a capacity
+            // shock may have shrunk the tenant's hard cap below the fleet
+            // this driver last planned for, in which case the request
+            // could never be granted and the job would park forever.
+            // Re-optimize (adaptive systems) or clamp into the shrunken
+            // space before asking.
+            let cap = env.pool.hard_cap(self.tenant).max(1);
+            if self.cfg.workers > cap {
+                self.refit_to_cap(env, cap);
+            }
             // no hold-and-wait: drop any previous fleet's lease before
             // requesting the (possibly resized) new one
             if let Some(id) = self.lease.take() {
@@ -575,6 +585,65 @@ impl JobDriver {
             }
         }
         self.invoke_fleet(env)
+    }
+
+    /// The tenant's quota no longer admits the planned fleet (capacity
+    /// shock / mid-run quota shrink): re-optimize into the shrunken
+    /// feasible region. Adaptive systems re-run the warm-start Bayesian
+    /// search over the quota-capped space (the paper's §3.2 loop, now
+    /// driven by scarcity); fixed-config systems just clamp. Either way
+    /// the per-iteration time model is rebuilt for the new fleet, so this
+    /// is a no-op exactly when `cfg.workers <= cap` — the single-tenant
+    /// path never gets here.
+    fn refit_to_cap(&mut self, env: &mut ClusterEnv, cap: u32) {
+        if self.phase_idx < self.job.phases.len() {
+            let phase = self.job.phases[self.phase_idx].clone();
+            let model = IterModel {
+                system: self.job.system,
+                profile: &phase.profile,
+                global_batch: phase.global_batch,
+                platform: &env.platform,
+                cal: &self.cal,
+                pricing: &self.pricing,
+            };
+            if self.job.system.adaptive() {
+                let space = self.space_capped(env);
+                let remaining = phase.iters.saturating_sub(self.iter_in_phase).max(1);
+                let mut obj = PhaseObjective {
+                    model,
+                    goal: self.job.goal,
+                    phase_iters: remaining,
+                    evals: 0,
+                };
+                let bo = BayesOpt::new(
+                    space,
+                    BoParams {
+                        n_init: 2,
+                        max_iters: 8,
+                        seed: self.job.seed ^ 0x5C0C ^ self.iters_done,
+                        ..Default::default()
+                    },
+                );
+                let res = bo.run(&mut obj);
+                self.cfg = res.best;
+                // quick refresh probes, not a full profiling pass
+                self.t_now += res.profiling_s.min(60.0);
+                self.profiling_time_s += res.profiling_s.min(60.0);
+                let (comp, comm) = obj.model.iter_time(self.cfg);
+                self.comp_s = comp;
+                self.comm_s = comm;
+            } else {
+                self.cfg.workers = cap;
+                let (comp, comm) = model.iter_time(self.cfg);
+                self.comp_s = comp;
+                self.comm_s = comm;
+            }
+        } else {
+            self.cfg.workers = cap;
+        }
+        self.cfg.workers = self.cfg.workers.min(cap).max(1);
+        self.scheduler.resize(self.cfg.workers);
+        self.config_trace.push((self.iters_done, self.cfg));
     }
 
     fn invoke_fleet(&mut self, env: &mut ClusterEnv) -> StepEvent {
@@ -936,6 +1005,37 @@ mod tests {
             "{:?}",
             out.config_trace
         );
+        assert_eq!(env.pool.total_in_flight(), 0, "lease returned at finish");
+    }
+
+    #[test]
+    fn mid_run_quota_shrink_forces_a_refit() {
+        // the platform reclaims capacity while the fleet is up: after a
+        // preempt + quota shrink, the driver must re-optimize into the
+        // shrunken space rather than re-request an ungrantable fleet
+        let job = quick_job(SystemKind::Smlt);
+        let mut env = ClusterEnv::shared(job.seed, 1000, f64::INFINITY);
+        let t = env
+            .pool
+            .register_tenant(crate::cluster::TenantQuota::unlimited());
+        let mut driver = JobDriver::new(job, t, &env, 0.0);
+        let mut steps = 0u64;
+        while driver.first_fleet_s.is_none() {
+            assert!(!matches!(driver.step(&mut env), StepEvent::Finished));
+            steps += 1;
+            assert!(steps < 10_000, "fleet never launched");
+        }
+        let _ = driver.preempt(&mut env);
+        env.pool
+            .set_tenant_quota(t, crate::cluster::TenantQuota::capped(4));
+        while !matches!(driver.step(&mut env), StepEvent::Finished) {
+            steps += 1;
+            assert!(steps < 10_000, "driver wedged after quota shrink");
+        }
+        let out = driver.into_outcome();
+        assert_eq!(out.iters_done, 60, "training still completes");
+        let (_, last) = *out.config_trace.last().unwrap();
+        assert!(last.workers <= 4, "refit ignored the 4-slot quota: {last:?}");
         assert_eq!(env.pool.total_in_flight(), 0, "lease returned at finish");
     }
 

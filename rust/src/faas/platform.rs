@@ -18,7 +18,10 @@ pub struct FaasLimits {
     /// network bandwidth at max memory (bytes/s); scales ~linearly with
     /// memory and saturates around 600 Mbps on Lambda
     pub net_bw_max_bps: f64,
-    /// account-level concurrent-execution limit
+    /// account-level concurrent-execution limit. The cluster layer's
+    /// capacity traces move this mid-run (spot-capacity shocks) in
+    /// lock-step with the quota pool's account limit, so invocation
+    /// throttling always reflects the limit currently in force.
     pub concurrency_limit: u32,
     /// local ephemeral storage (bytes) — /tmp, 512 MB default
     pub ephemeral_bytes: u64,

@@ -25,11 +25,14 @@
 //!   (static / dynamic batching / online learning / NAS), and the
 //!   reentrant per-job simulation driver (`JobDriver`).
 //! - [`cluster`] — multi-tenant fleet layer: job arrival processes,
-//!   shared account concurrency pool with per-tenant quotas, and the
-//!   fleet scheduler arbitrating slots across concurrent jobs by goal
-//!   class (with preemption and quota-aware re-optimization).
+//!   shared account concurrency pool with per-tenant quotas, pluggable
+//!   slot arbitration (goal-class priority, weighted fair sharing, DRF —
+//!   each with a configurable starvation bound), capacity traces that
+//!   step the account limit mid-run (spot-capacity shocks with lease
+//!   reclamation), preemption, and quota-aware re-optimization.
 //! - [`baselines`] — Siren, Cirrus, LambdaML, MLCD, IaaS comparators.
-//! - [`metrics`] — run recorders and CSV emission.
+//! - [`metrics`] — run recorders, CSV emission, and per-tenant
+//!   fairness / shock-degradation roll-ups.
 //! - [`util`] — PRNG, JSON, CLI, stats, error plumbing
 //!   (offline-registry substitutes).
 

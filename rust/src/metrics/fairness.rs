@@ -1,0 +1,210 @@
+//! Per-tenant fairness and shock-degradation metrics for fleet runs.
+//!
+//! The fleet scheduler answers *who got slots*; this module answers *was
+//! that fair, and what did a capacity shock cost each tenant*:
+//!
+//! - [`jain_index`] — Jain's fairness index over any per-tenant series
+//!   (1.0 = perfectly even, 1/n = one tenant took everything),
+//! - [`dominant_share`] — the DRF coordinate: a tenant's largest share of
+//!   any pooled resource (concurrency slots, aggregate function memory),
+//! - [`FairnessReport`] — the per-tenant roll-up of a
+//!   [`FleetOutcome`](crate::cluster::FleetOutcome): weighted waits,
+//!   dominant shares, SLO attribution (did a missed deadline die queueing
+//!   or computing?), and per-shock time-to-reoptimize.
+
+use crate::cluster::{FleetOutcome, TenantId};
+use crate::coordinator::Goal;
+
+/// Jain's fairness index of `xs`: `(Σx)² / (n · Σx²)`, in `[1/n, 1]`.
+/// Degenerate inputs (empty, or all zeros — nobody got anything, which is
+/// vacuously even) report 1.0.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
+/// Dominant share of a `workers × mem_mb` fleet against an account with
+/// `slot_capacity` slots and `mem_capacity_mb` aggregate function memory:
+/// the larger of the slot share and the memory share.
+pub fn dominant_share(
+    workers: u32,
+    mem_mb: u32,
+    slot_capacity: u32,
+    mem_capacity_mb: u64,
+) -> f64 {
+    let slots = workers as f64 / slot_capacity.max(1) as f64;
+    let mem = workers as f64 * mem_mb as f64 / mem_capacity_mb.max(1) as f64;
+    slots.max(mem)
+}
+
+/// Why a constrained job missed its SLO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloMiss {
+    /// the job met its constraint (or ran unconstrained)
+    Met,
+    /// missed, and more than half the overrun span was spent parked
+    /// waiting for slots — the account, not the job, is to blame
+    Queueing,
+    /// missed while mostly running — capacity was granted but too little
+    /// or too slow (shrunken quota, contention-stretched iterations)
+    Capacity,
+}
+
+/// One tenant's row in a [`FairnessReport`].
+#[derive(Clone, Debug)]
+pub struct TenantFairness {
+    pub tenant: TenantId,
+    /// goal class (Deadline 3 > Budget 2 > Fastest 1 > None 0)
+    pub class: u8,
+    pub weight: f64,
+    pub duration_s: f64,
+    pub queue_wait_s: f64,
+    /// longest single continuous wait (starvation evidence)
+    pub max_wait_streak_s: f64,
+    /// fraction of the tenant's span spent parked
+    pub wait_fraction: f64,
+    /// dominant share of the tenant's *final* fleet configuration
+    pub dominant_share: f64,
+    pub preemptions: u32,
+    pub cost: f64,
+    pub slo: SloMiss,
+}
+
+/// Fleet-level fairness roll-up; build with [`FairnessReport::from_fleet`].
+#[derive(Clone, Debug)]
+pub struct FairnessReport {
+    pub tenants: Vec<TenantFairness>,
+    /// Jain index over weight-normalized durations (lower = the account
+    /// favored some tenants' wall clocks)
+    pub jain_duration: f64,
+    /// Jain index over weight-normalized queue waits
+    pub jain_wait: f64,
+    /// worst single continuous wait across the fleet
+    pub max_wait_streak_s: f64,
+    /// per applied shock: virtual seconds from the capacity change until
+    /// every victim fleet was re-admitted (`None` = never recovered)
+    pub time_to_reoptimize_s: Vec<Option<f64>>,
+    /// constrained (Deadline/Budget) jobs that met their SLO
+    pub slo_met: u32,
+    /// missed SLOs attributed to queueing vs granted-capacity shortfall
+    pub slo_missed_queueing: u32,
+    pub slo_missed_capacity: u32,
+}
+
+impl FairnessReport {
+    /// Compute the report from a finished fleet run. The account's
+    /// resource axes are taken from the outcome's final limit and the
+    /// platform's 10 240 MB per-function ceiling (the same normalization
+    /// the DRF arbiter uses).
+    pub fn from_fleet(out: &FleetOutcome) -> FairnessReport {
+        let slot_cap = out.account_limit.max(1);
+        let mem_cap = slot_cap as u64 * crate::faas::FaasLimits::default().mem_max_mb as u64;
+        let mut tenants = Vec::with_capacity(out.jobs.len());
+        let mut slo_met = 0u32;
+        let mut slo_missed_queueing = 0u32;
+        let mut slo_missed_capacity = 0u32;
+        for j in &out.jobs {
+            let duration = j.duration_s();
+            let wait_fraction = if duration > 0.0 {
+                (j.queue_wait_s / duration).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let (workers, mem_mb) = j
+                .outcome
+                .config_trace
+                .last()
+                .map(|(_, c)| (c.workers, c.mem_mb))
+                .unwrap_or((0, 0));
+            let slo = match j.goal {
+                Goal::Deadline { t_max_s } if duration > t_max_s => {
+                    if wait_fraction > 0.5 {
+                        SloMiss::Queueing
+                    } else {
+                        SloMiss::Capacity
+                    }
+                }
+                Goal::Budget { s_max } if j.outcome.total_cost() > s_max => {
+                    // budget overruns are never queueing's fault — parked
+                    // time is free; the granted capacity was too pricey
+                    SloMiss::Capacity
+                }
+                _ => SloMiss::Met,
+            };
+            match (j.goal, slo) {
+                (Goal::Deadline { .. } | Goal::Budget { .. }, SloMiss::Met) => slo_met += 1,
+                (_, SloMiss::Queueing) => slo_missed_queueing += 1,
+                (_, SloMiss::Capacity) => slo_missed_capacity += 1,
+                _ => {}
+            }
+            tenants.push(TenantFairness {
+                tenant: j.tenant,
+                class: j.goal.class(),
+                weight: j.weight,
+                duration_s: duration,
+                queue_wait_s: j.queue_wait_s,
+                max_wait_streak_s: j.max_wait_streak_s,
+                wait_fraction,
+                dominant_share: dominant_share(workers, mem_mb, slot_cap, mem_cap),
+                preemptions: j.preemptions,
+                cost: j.outcome.total_cost(),
+                slo,
+            });
+        }
+        let weighted = |f: fn(&TenantFairness) -> f64| -> Vec<f64> {
+            tenants.iter().map(|t| f(t) / t.weight.max(1e-9)).collect()
+        };
+        FairnessReport {
+            jain_duration: jain_index(&weighted(|t| t.duration_s)),
+            jain_wait: jain_index(&weighted(|t| t.queue_wait_s)),
+            max_wait_streak_s: tenants
+                .iter()
+                .map(|t| t.max_wait_streak_s)
+                .fold(0.0, f64::max),
+            time_to_reoptimize_s: out
+                .shocks
+                .iter()
+                .map(|s| s.recovered_s.map(|r| r - s.at_s))
+                .collect(),
+            slo_met,
+            slo_missed_queueing,
+            slo_missed_capacity,
+            tenants,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jain_bounds_and_extremes() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // one tenant took everything: index collapses to 1/n
+        assert!((jain_index(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        // ordering invariance
+        assert_eq!(jain_index(&[1.0, 2.0, 3.0]), jain_index(&[3.0, 1.0, 2.0]));
+    }
+
+    #[test]
+    fn dominant_share_picks_the_binding_resource() {
+        // 10 workers on a 100-slot account: slot share 0.1; tiny memory
+        assert!((dominant_share(10, 128, 100, 1_024_000) - 0.1).abs() < 1e-12);
+        // memory hog: 10 x 10240 MB = 102400 of 1,024,000 → 0.1 either way
+        assert!((dominant_share(10, 10_240, 100, 1_024_000) - 0.1).abs() < 1e-12);
+        // memory-bound: 4 workers x 10240 on a tight memory pool
+        let d = dominant_share(4, 10_240, 100, 81_920);
+        assert!((d - 0.5).abs() < 1e-12, "memory should bind: {d}");
+        assert_eq!(dominant_share(0, 0, 0, 0), 0.0);
+    }
+}

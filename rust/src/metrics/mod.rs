@@ -1,4 +1,9 @@
-//! Run metrics: per-iteration records + aggregation for EXPERIMENTS.md.
+//! Run metrics: per-iteration records + aggregation for EXPERIMENTS.md,
+//! plus per-tenant fairness / shock-degradation roll-ups ([`fairness`]).
+
+pub mod fairness;
+
+pub use fairness::{dominant_share, jain_index, FairnessReport, SloMiss, TenantFairness};
 
 use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};

@@ -10,7 +10,8 @@ mod common;
 use common::cases;
 use smlt::baselines::SystemKind;
 use smlt::cluster::{
-    Acquire, ArrivalProcess, ClusterParams, ClusterSim, QuotaPool, TenantQuota,
+    Acquire, ArbiterKind, ArrivalProcess, CapacityTrace, ClusterParams, ClusterSim,
+    QuotaPool, TenantQuota,
 };
 use smlt::coordinator::{Goal, SimJob, Workloads};
 use smlt::perfmodel::ModelProfile;
@@ -133,6 +134,161 @@ fn prop_fleet_conserves_slots_and_completes() {
             assert!(j.outcome.total_cost().is_finite() && j.outcome.total_cost() >= 0.0);
         }
         assert!(out.makespan_s.is_finite() && out.makespan_s >= 0.0);
+    });
+}
+
+#[test]
+fn prop_capacity_step_down_conserves_slots() {
+    // a mid-run capacity shock must never leave the pool over the new
+    // limit: after reclamation, the post-shock in-flight peak fits the
+    // shrunken account, and every job still completes (re-optimized into
+    // the smaller space). Exercised across all three arbiters.
+    cases(6, |rng| {
+        let account_limit = 64 + rng.below(192) as u32;
+        let shock_to = 4 + rng.below(12) as u32;
+        let shock_at = 60.0 + rng.uniform(0.0, 600.0);
+        let arbiter = match rng.below(3) {
+            0 => ArbiterKind::GoalClass,
+            1 => ArbiterKind::WeightedFair { starvation_bound_s: f64::INFINITY },
+            _ => ArbiterKind::Drf { starvation_bound_s: f64::INFINITY },
+        };
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: rng.below(1 << 20),
+            account_limit,
+            capacity: CapacityTrace::Step { at_s: shock_at, to: shock_to },
+            arbiter,
+            ..Default::default()
+        });
+        let n_jobs = 2 + rng.below(4) as usize;
+        for i in 0..n_jobs {
+            let mut j = tiny_job(
+                SystemKind::Smlt,
+                2000 + i as u64 + rng.below(1 << 16),
+                Goal::None,
+            );
+            j.goal = if i % 2 == 0 { Goal::Deadline { t_max_s: 6.0 * 3600.0 } } else { Goal::None };
+            sim.submit(j, rng.uniform(0.0, 120.0), TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        assert!(out.peak_in_flight <= account_limit, "pre-shock limit violated");
+        for shock in &out.shocks {
+            assert_eq!(shock.to_limit, shock_to);
+            assert!(
+                shock.peak_after <= shock.to_limit,
+                "post-shock peak {} exceeded the shrunken limit {}",
+                shock.peak_after,
+                shock.to_limit
+            );
+            assert!(
+                shock.reclaimed_slots >= shock.reclaimed_leases,
+                "every reclaimed lease held at least one slot"
+            );
+            if let Some(r) = shock.recovered_s {
+                assert!(r >= shock.at_s, "recovery cannot predate the shock");
+            }
+        }
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 8, "tenant {} wedged by the shock", j.tenant);
+            assert!(j.outcome.total_cost().is_finite());
+        }
+    });
+}
+
+#[test]
+fn prop_drf_starvation_bound_admits_best_effort() {
+    // a sustained stream of Deadline tenants saturates the account while
+    // one low-weight best-effort job waits. Under DRF with a finite
+    // starvation bound and preemption, the best-effort job's longest
+    // continuous wait must stay within the bound plus one event's slack
+    // (the forced retry fires when the virtual frontier crosses the
+    // bound; the frontier advances in whole events — profiling bursts
+    // are the largest at a few hundred virtual seconds).
+    const BOUND_S: f64 = 900.0;
+    const SLACK_S: f64 = 1800.0;
+    cases(4, |rng| {
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: rng.below(1 << 20),
+            account_limit: 24,
+            preemption: true,
+            arbiter: ArbiterKind::Drf { starvation_bound_s: BOUND_S },
+            ..Default::default()
+        });
+        // the best-effort tenant: tiny weight, so pure DRF would keep it
+        // at the back of the queue for the whole Deadline stream
+        let be_seed = 3000 + rng.below(1 << 16);
+        let be = sim.submit_weighted(
+            tiny_job(SystemKind::Smlt, be_seed, Goal::None),
+            0.0,
+            TenantQuota::unlimited(),
+            0.2,
+        );
+        for i in 0..8u64 {
+            sim.submit_weighted(
+                tiny_job(
+                    SystemKind::Smlt,
+                    4000 + 17 * i + rng.below(1 << 12),
+                    Goal::Deadline { t_max_s: 4.0 * 3600.0 },
+                ),
+                i as f64 * 150.0,
+                TenantQuota::unlimited(),
+                1.0,
+            );
+        }
+        let out = sim.run();
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 8, "tenant {} wedged", j.tenant);
+        }
+        let be_job = &out.jobs[be as usize];
+        assert!(
+            be_job.max_wait_streak_s <= BOUND_S + SLACK_S,
+            "best-effort tenant starved: longest continuous wait {:.0}s \
+             exceeds the {BOUND_S:.0}s bound (+{SLACK_S:.0}s event slack)",
+            be_job.max_wait_streak_s
+        );
+    });
+}
+
+#[test]
+fn prop_fairness_arbiters_bit_deterministic() {
+    // the new policies and the shock path are still pure functions of the
+    // seed: identical fleets, identical bits
+    cases(2, |rng| {
+        let case_seed = rng.next_u64();
+        for arbiter in [
+            ArbiterKind::WeightedFair { starvation_bound_s: 600.0 },
+            ArbiterKind::Drf { starvation_bound_s: 600.0 },
+        ] {
+            let build = |arb: ArbiterKind| {
+                let mut r = smlt::util::rng::Pcg::new(case_seed);
+                let mut sim = ClusterSim::new(ClusterParams {
+                    seed: r.below(1 << 20),
+                    account_limit: 16 + r.below(48) as u32,
+                    arbiter: arb,
+                    capacity: CapacityTrace::Step {
+                        at_s: 120.0 + r.uniform(0.0, 240.0),
+                        to: 4 + r.below(8) as u32,
+                    },
+                    ..Default::default()
+                });
+                for i in 0..3u64 {
+                    sim.submit_weighted(
+                        tiny_job(SystemKind::Smlt, 5000 + i, Goal::None),
+                        i as f64 * 60.0,
+                        TenantQuota::unlimited(),
+                        1.0 + i as f64,
+                    );
+                }
+                sim.run()
+            };
+            let a = build(arbiter.clone());
+            let b = build(arbiter.clone());
+            assert_eq!(a.shocks.len(), b.shocks.len());
+            for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+                assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+                assert_eq!(x.max_wait_streak_s.to_bits(), y.max_wait_streak_s.to_bits());
+                assert_eq!(x.preemptions, y.preemptions);
+            }
+        }
     });
 }
 
