@@ -17,6 +17,7 @@ mod common;
 use smlt::baselines::SystemKind;
 use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
 use smlt::coordinator::{Goal, SimJob, Workloads};
+use smlt::metrics::BillingReport;
 use smlt::perfmodel::ModelProfile;
 use smlt::util::cli::Args;
 use smlt::util::stats::percentile_sorted;
@@ -96,6 +97,9 @@ fn main() {
             "peak/limit",
             "denied",
             "preempted",
+            "p50 $/tenant",
+            "max $/tenant",
+            "jain($)",
             "total $",
         ],
     );
@@ -126,6 +130,14 @@ fn main() {
                 "-".to_string()
             }
         };
+        // per-tenant billing view: the account's invoice split by tenant
+        let bill = BillingReport::from_fleet(&out);
+        assert!(
+            (bill.grand_total - out.total_cost()).abs() < 1e-9,
+            "the tenant-split invoice must reconcile with the fleet total"
+        );
+        let mut tenant_costs: Vec<f64> = bill.tenants.iter().map(|b| b.total).collect();
+        tenant_costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         t.row(&[
             n_jobs.to_string(),
             format!("{:.0}", out.makespan_s),
@@ -137,6 +149,9 @@ fn main() {
             format!("{}/{}", out.peak_in_flight, out.account_limit),
             out.denials.to_string(),
             out.preemptions.to_string(),
+            format!("{:.3}", percentile_sorted(&tenant_costs, 0.5)),
+            format!("{:.3}", tenant_costs.last().copied().unwrap_or(0.0)),
+            format!("{:.3}", bill.jain_cost),
             format!("{:.2}", out.total_cost()),
         ]);
     }

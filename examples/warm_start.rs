@@ -1,0 +1,126 @@
+//! Warm-start demo: a repeat tenant on a pooled account.
+//!
+//! Six same-family training jobs arrive in a staggered stream on one
+//! shared account, twice: once on the always-cold fleet, once with the
+//! warm layer on (container pool + prewarming along the arrival trace +
+//! posterior bank). The second run's later jobs launch on the containers
+//! earlier fleets retired and re-optimize from the first job's banked
+//! profiling measurements — fewer cold starts, fewer live probes, a
+//! keep-alive line item on the account bill.
+//!
+//! ```text
+//! cargo run --release --example warm_start -- --jobs 6 --iters 16
+//! ```
+
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
+use smlt::coordinator::{Goal, SimJob, Workloads};
+use smlt::metrics::BillingReport;
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+use smlt::warm::{BankConfig, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams};
+
+fn main() -> smlt::util::error::Result<()> {
+    let args = Args::from_env();
+    let n_jobs = args.get_usize("jobs", 6);
+    let iters = args.get_usize("iters", 16) as u64;
+    let deadline = args.get_f64("deadline", 3600.0);
+
+    // one tenant stream: same model family, same container image
+    let mk_job = |i: usize| {
+        let mut j = SimJob::new(
+            SystemKind::Smlt,
+            Workloads::static_run(ModelProfile::resnet18(), iters, 128),
+        );
+        j.seed = 0x3A12 + i as u64;
+        j.goal = Goal::Deadline { t_max_s: deadline };
+        j.family = Some(7);
+        j
+    };
+    let arrivals: Vec<f64> = (0..n_jobs).map(|i| i as f64 * 420.0).collect();
+    let image = mk_job(0).image_id();
+
+    let run = |warm: WarmParams| -> FleetOutcome {
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: 23,
+            account_limit: 512,
+            warm,
+            ..Default::default()
+        });
+        for (i, at) in arrivals.iter().enumerate() {
+            sim.submit(mk_job(i), *at, TenantQuota::unlimited());
+        }
+        sim.run()
+    };
+
+    let cold = run(WarmParams::default());
+    let warm = run(WarmParams {
+        pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
+        prewarm: Some(PrewarmPolicy {
+            forecast: ArrivalProcess::Trace(arrivals.clone()),
+            lead_s: 600.0,
+            tick_s: 120.0,
+            targets: vec![PrewarmTarget {
+                image,
+                mem_mb: 3072,
+                workers_per_job: 24,
+                max_warm: 256,
+            }],
+        }),
+        bank: Some(BankConfig::default()),
+    });
+
+    let mut t = Table::new(
+        &format!("{n_jobs} same-family jobs, always-cold vs warm layer"),
+        &["tenant", "mode", "cold starts", "warm hits", "BO probes", "profiling s", "dur s", "cost $"],
+    );
+    for (mode, out) in [("cold", &cold), ("warm", &warm)] {
+        for j in &out.jobs {
+            t.row(&[
+                j.tenant.to_string(),
+                mode.to_string(),
+                j.outcome.cold_starts.to_string(),
+                j.outcome.warm_hits.to_string(),
+                j.outcome.bo_probes.to_string(),
+                format!("{:.0}", j.outcome.profiling_time_s),
+                format!("{:.0}", j.duration_s()),
+                format!("{:.2}", j.outcome.total_cost()),
+            ]);
+        }
+    }
+    t.print();
+
+    let bill = BillingReport::from_fleet(&warm);
+    println!(
+        "\nwarm layer: {} hits / {} misses ({:.0}% hit rate), {} prewarmed, \
+         {} evicted; keep-alive ${:.3} + spawns ${:.3}",
+        warm.warm.hits,
+        warm.warm.misses,
+        100.0 * warm.warm.hit_rate(),
+        warm.warm.prewarm_spawns,
+        warm.warm.evictions,
+        bill.keepalive_cost,
+        bill.prewarm_spawn_cost,
+    );
+    println!(
+        "posterior bank: {} measurements banked, {} served as priors",
+        warm.warm.bank_deposits, warm.warm.bank_prior_served
+    );
+    let probes = |o: &FleetOutcome| o.jobs.iter().map(|j| j.outcome.bo_probes).sum::<u64>();
+    let colds = |o: &FleetOutcome| o.jobs.iter().map(|j| j.outcome.cold_starts).sum::<u64>();
+    println!(
+        "\nfleet: cold starts {} -> {}, live probes {} -> {}, mean duration \
+         {:.0}s -> {:.0}s, total ${:.2} -> ${:.2} (incl. ${:.3} warmth)",
+        colds(&cold),
+        colds(&warm),
+        probes(&cold),
+        probes(&warm),
+        cold.mean_duration_s(),
+        warm.mean_duration_s(),
+        cold.total_cost(),
+        warm.total_cost(),
+        warm.warm.total_cost(),
+    );
+    Ok(())
+}

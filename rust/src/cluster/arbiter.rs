@@ -14,6 +14,12 @@
 //!   preempt fleets whose weighted share strictly exceeds the share the
 //!   requester would reach if granted (which rules out eviction ping-pong
 //!   between symmetric jobs);
+//! - [`ClassWeightedFairArbiter`] — class-aware fair sharing: the goal
+//!   class is folded *into* the fair-share weight (each class level
+//!   multiplies the tenant's weight by a configurable base) instead of
+//!   being an absolute rank, so a Deadline tenant gets a larger — but
+//!   bounded — entitlement and best-effort jobs keep a nonzero share even
+//!   under a sustained Deadline stream;
 //! - [`DrfArbiter`] — dominant-resource fairness over the two pooled
 //!   resources (concurrency slots and aggregate function memory): the job
 //!   with the smallest dominant share is served first.
@@ -176,6 +182,43 @@ where
     idx
 }
 
+/// Shared core of the fair-sharing arbiters, parameterized by an
+/// effective-weight function: serve the smallest prospective share first
+/// (starved jobs outrank everything, FIFO tie-break).
+fn fair_pick_blocked(blocked: &[JobView], eff: &dyn Fn(&JobView) -> f64) -> Option<usize> {
+    let prospective = |v: &JobView| (v.in_flight + v.workers) as f64 / eff(v).max(1e-9);
+    order_by(blocked, |v| {
+        (if v.starved { 0u8 } else { 1 }, prospective(v), v.arrive_s)
+    })
+    .first()
+    .copied()
+}
+
+/// Shared eviction core of the fair-sharing arbiters: largest current
+/// share first, newest-arrival tie-break; a non-starved requester may
+/// only evict fleets whose share strictly exceeds the share the
+/// requester would reach if granted (no ping-pong between symmetric
+/// jobs).
+fn fair_eviction_order(
+    requester: Option<&JobView>,
+    candidates: &[JobView],
+    eff: &dyn Fn(&JobView) -> f64,
+) -> Vec<usize> {
+    let share = |v: &JobView| v.in_flight as f64 / eff(v).max(1e-9);
+    let order = order_by(candidates, |v| (-share(v), -v.arrive_s));
+    match requester {
+        None => order,
+        Some(r) if r.starved => order,
+        Some(r) => {
+            let target = (r.in_flight + r.workers) as f64 / eff(r).max(1e-9);
+            order
+                .into_iter()
+                .filter(|&i| share(&candidates[i]) > target)
+                .collect()
+        }
+    }
+}
+
 /// The original PR 1 policy: strict goal-class priority with FIFO
 /// tie-break, preemption of strictly lower classes only (lowest class
 /// first, newest arrival first). With the default infinite starvation
@@ -273,32 +316,100 @@ impl Arbiter for WeightedFairArbiter {
     }
 
     fn pick_blocked(&self, blocked: &[JobView], _cap: Capacity) -> Option<usize> {
-        order_by(blocked, |v| {
-            (if v.starved { 0u8 } else { 1 }, v.prospective_share(), v.arrive_s)
-        })
-        .first()
-        .copied()
+        fair_pick_blocked(blocked, &|v| v.weight)
     }
 
     fn eviction_order(
         &self,
         requester: Option<&JobView>,
         candidates: &[JobView],
-        cap: Capacity,
+        _cap: Capacity,
     ) -> Vec<usize> {
-        let _ = cap;
-        let order = order_by(candidates, |v| (-v.share(), -v.arrive_s));
-        match requester {
-            None => order,
-            Some(r) if r.starved => order,
-            Some(r) => {
-                let target = r.prospective_share();
-                order
-                    .into_iter()
-                    .filter(|&i| candidates[i].share() > target)
-                    .collect()
-            }
+        fair_eviction_order(requester, candidates, &|v| v.weight)
+    }
+
+    fn starvation_bound_s(&self) -> f64 {
+        self.starvation_bound_s
+    }
+}
+
+/// Class-aware weighted fair sharing: goal classes are folded into the
+/// fair-share weights instead of ranking absolutely. A job's *effective*
+/// weight is `weight × class_weight_base^class` (Deadline 3 > Budget 2 >
+/// Fastest 1 > None 0), and all arbitration then runs exactly like
+/// [`WeightedFairArbiter`] over effective shares. With the default base
+/// of 2.0 a Deadline tenant is entitled to 8× a same-weight best-effort
+/// tenant's slots — a strong preference, but never the absolute priority
+/// of [`GoalClassArbiter`], so a saturating Deadline stream cannot push a
+/// best-effort job's entitlement to zero. `class_weight_base = 1.0`
+/// degenerates to plain weighted fair sharing.
+///
+/// # Examples
+///
+/// ```
+/// use smlt::cluster::{Arbiter, Capacity, ClassWeightedFairArbiter, JobView};
+///
+/// let arb = ClassWeightedFairArbiter::default();
+/// let cap = Capacity { slots: 100, mem_mb: 100 * 10_240 };
+/// // same request, same weight: the Deadline-class job (class 3) has 8x
+/// // the effective weight, so its prospective share is smaller
+/// let blocked = vec![
+///     JobView { idx: 0, class: 0, workers: 8, ..Default::default() },
+///     JobView { idx: 1, class: 3, workers: 8, ..Default::default() },
+/// ];
+/// assert_eq!(arb.pick_blocked(&blocked, cap), Some(1));
+/// // ...but a big enough explicit weight outbids the class boost —
+/// // classes tilt the scale, they do not own it
+/// let mut heavy = JobView { idx: 0, class: 0, workers: 8, ..Default::default() };
+/// heavy.weight = 16.0;
+/// let dl = JobView { idx: 1, class: 3, workers: 8, ..Default::default() };
+/// assert_eq!(arb.pick_blocked(&[heavy, dl], cap), Some(0));
+/// ```
+#[derive(Clone, Debug)]
+pub struct ClassWeightedFairArbiter {
+    /// continuous blocked time after which a job outranks everything
+    pub starvation_bound_s: f64,
+    /// per-class-level weight multiplier (≥ 1.0; 1.0 = ignore classes)
+    pub class_weight_base: f64,
+}
+
+impl Default for ClassWeightedFairArbiter {
+    fn default() -> Self {
+        ClassWeightedFairArbiter {
+            starvation_bound_s: f64::INFINITY,
+            class_weight_base: 2.0,
         }
+    }
+}
+
+impl ClassWeightedFairArbiter {
+    /// Class-aware fair sharing plus the aging escape hatch.
+    pub fn with_starvation_bound(starvation_bound_s: f64) -> Self {
+        ClassWeightedFairArbiter { starvation_bound_s, ..Default::default() }
+    }
+
+    /// Weight after folding the goal class in.
+    fn effective_weight(&self, v: &JobView) -> f64 {
+        v.weight * self.class_weight_base.max(1.0).powi(v.class as i32)
+    }
+}
+
+impl Arbiter for ClassWeightedFairArbiter {
+    fn name(&self) -> &'static str {
+        "class-weighted-fair"
+    }
+
+    fn pick_blocked(&self, blocked: &[JobView], _cap: Capacity) -> Option<usize> {
+        fair_pick_blocked(blocked, &|v| self.effective_weight(v))
+    }
+
+    fn eviction_order(
+        &self,
+        requester: Option<&JobView>,
+        candidates: &[JobView],
+        _cap: Capacity,
+    ) -> Vec<usize> {
+        fair_eviction_order(requester, candidates, &|v| self.effective_weight(v))
     }
 
     fn starvation_bound_s(&self) -> f64 {
@@ -385,6 +496,10 @@ pub enum ArbiterKind {
     /// weighted fair sharing with the given starvation bound (seconds;
     /// `f64::INFINITY` disables aging)
     WeightedFair { starvation_bound_s: f64 },
+    /// class-aware fair sharing: goal classes multiply the fair-share
+    /// weight by `class_weight_base` per class level instead of ranking
+    /// absolutely
+    ClassWeightedFair { starvation_bound_s: f64, class_weight_base: f64 },
     /// dominant-resource fairness with the given starvation bound
     Drf { starvation_bound_s: f64 },
 }
@@ -396,6 +511,9 @@ impl ArbiterKind {
             ArbiterKind::GoalClass => Box::new(GoalClassArbiter::default()),
             ArbiterKind::WeightedFair { starvation_bound_s } => {
                 Box::new(WeightedFairArbiter { starvation_bound_s })
+            }
+            ArbiterKind::ClassWeightedFair { starvation_bound_s, class_weight_base } => {
+                Box::new(ClassWeightedFairArbiter { starvation_bound_s, class_weight_base })
             }
             ArbiterKind::Drf { starvation_bound_s } => {
                 Box::new(DrfArbiter { starvation_bound_s })
@@ -498,12 +616,70 @@ mod tests {
     }
 
     #[test]
+    fn class_weighted_fair_boosts_but_does_not_own() {
+        let arb = ClassWeightedFairArbiter::default();
+        // equal weights: class 3's effective weight is 8x, it goes first
+        let be = view(0, 0, 0.0);
+        let dl = view(1, 3, 5.0);
+        assert_eq!(arb.pick_blocked(&[be.clone(), dl.clone()], cap()), Some(1));
+        // a 16x explicit weight beats the 8x class boost
+        let mut heavy = view(0, 0, 0.0);
+        heavy.weight = 16.0;
+        assert_eq!(arb.pick_blocked(&[heavy, dl], cap()), Some(0));
+    }
+
+    #[test]
+    fn class_weighted_fair_with_base_one_matches_weighted_fair() {
+        let cw = ClassWeightedFairArbiter {
+            starvation_bound_s: f64::INFINITY,
+            class_weight_base: 1.0,
+        };
+        let wf = WeightedFairArbiter::default();
+        let mut a = view(0, 3, 0.0);
+        a.weight = 2.0;
+        let mut b = view(1, 0, 1.0);
+        b.in_flight = 20;
+        b.holds_lease = true;
+        let blocked = vec![a.clone(), view(2, 2, 0.5)];
+        assert_eq!(cw.pick_blocked(&blocked, cap()), wf.pick_blocked(&blocked, cap()));
+        assert_eq!(
+            cw.eviction_order(Some(&a), &[b.clone()], cap()),
+            wf.eviction_order(Some(&a), &[b], cap())
+        );
+    }
+
+    #[test]
+    fn class_weighted_fair_eviction_targets_largest_effective_share() {
+        let arb = ClassWeightedFairArbiter::default();
+        let mut requester = view(9, 3, 9.0);
+        requester.workers = 8; // prospective effective share 8/8 = 1
+        let mut be_hog = view(0, 0, 1.0);
+        be_hog.in_flight = 40; // effective share 40/1 = 40
+        be_hog.holds_lease = true;
+        let mut dl_holder = view(1, 3, 2.0);
+        dl_holder.in_flight = 8; // effective share 8/8 = 1: not above target
+        dl_holder.holds_lease = true;
+        assert_eq!(
+            arb.eviction_order(Some(&requester), &[be_hog, dl_holder], cap()),
+            vec![0],
+            "only the fleet above the requester's prospective share is fair game"
+        );
+    }
+
+    #[test]
     fn kind_builds_matching_policy() {
         assert_eq!(ArbiterKind::GoalClass.build().name(), "goal-class");
         assert_eq!(
             ArbiterKind::WeightedFair { starvation_bound_s: 1.0 }.build().name(),
             "weighted-fair"
         );
+        let cw = ArbiterKind::ClassWeightedFair {
+            starvation_bound_s: 5.0,
+            class_weight_base: 2.0,
+        }
+        .build();
+        assert_eq!(cw.name(), "class-weighted-fair");
+        assert_eq!(cw.starvation_bound_s(), 5.0);
         let drf = ArbiterKind::Drf { starvation_bound_s: 7.0 }.build();
         assert_eq!(drf.name(), "drf");
         assert_eq!(drf.starvation_bound_s(), 7.0);

@@ -1,32 +1,116 @@
 //! Job arrival processes for the multi-tenant cluster simulation.
 //!
 //! The paper's platform hosts many concurrent design-and-training
-//! workflows; how they *arrive* shapes contention. Three generators,
+//! workflows; how they *arrive* shapes contention. Four generators,
 //! all deterministic given their inputs:
 //!
 //! - [`ArrivalProcess::Batch`] — everything submitted at t=0 (worst-case
 //!   burst; the regime the scalability figures stress),
 //! - [`ArrivalProcess::Poisson`] — memoryless arrivals at a given rate
 //!   (the standard open-loop cloud-workload model),
+//! - [`ArrivalProcess::Diurnal`] — a sinusoidally-modulated Poisson
+//!   process (daily load shape: quiet troughs, predictable bursts — the
+//!   regime forecast-driven prewarming exists for),
 //! - [`ArrivalProcess::Trace`] — explicit submission offsets (replay of a
 //!   recorded tenant schedule).
+//!
+//! Every process also answers [`expected_arrivals`] over a window — the
+//! forecast surface the warm layer's
+//! [`PrewarmPolicy`](crate::warm::PrewarmPolicy) provisions against.
+//!
+//! [`expected_arrivals`]: ArrivalProcess::expected_arrivals
 
 use crate::util::rng::Pcg;
+use std::f64::consts::TAU;
 
 /// A deterministic generator of job submission times (see the module
-/// docs for the three regimes).
+/// docs for the four regimes).
 #[derive(Clone, Debug)]
 pub enum ArrivalProcess {
     /// all jobs arrive at t = 0
     Batch,
     /// exponential inter-arrival gaps with the given mean rate (jobs/s)
     Poisson { rate_per_s: f64, seed: u64 },
+    /// non-homogeneous Poisson with a sinusoidal rate: `peak_rate_per_s`
+    /// at `peak_at_s` (modulo `period_s`), `base_rate_per_s` at the
+    /// trough, sampled by thinning — deterministic given the seed
+    Diurnal {
+        base_rate_per_s: f64,
+        peak_rate_per_s: f64,
+        period_s: f64,
+        peak_at_s: f64,
+        seed: u64,
+    },
     /// explicit arrival offsets (seconds); padded with its last entry if
     /// shorter than the number of jobs
     Trace(Vec<f64>),
 }
 
 impl ArrivalProcess {
+    /// Mean arrival rate (jobs/s) at virtual time `t`. `Batch` and
+    /// `Trace` are atoms, not rate processes — integrate them over a
+    /// window with [`expected_arrivals`](Self::expected_arrivals) instead.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            ArrivalProcess::Batch => 0.0,
+            ArrivalProcess::Poisson { rate_per_s, .. } => rate_per_s.max(0.0),
+            ArrivalProcess::Diurnal {
+                base_rate_per_s,
+                peak_rate_per_s,
+                period_s,
+                peak_at_s,
+                ..
+            } => {
+                let base = base_rate_per_s.max(0.0);
+                let peak = peak_rate_per_s.max(base);
+                let mean = 0.5 * (base + peak);
+                let amp = 0.5 * (peak - base);
+                let period = period_s.max(1e-9);
+                (mean + amp * (TAU * (t - peak_at_s) / period).cos()).max(0.0)
+            }
+            ArrivalProcess::Trace(_) => 0.0,
+        }
+    }
+
+    /// Expected number of arrivals in `[t0, t1)` — the forecast a
+    /// prewarming policy provisions against. For `Trace` this counts the
+    /// recorded offsets in the window (a replayed schedule is its own
+    /// perfect forecast); for `Batch` it is 0 (the t=0 burst precedes any
+    /// forecastable window).
+    pub fn expected_arrivals(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 {
+            return 0.0;
+        }
+        match self {
+            ArrivalProcess::Batch => 0.0,
+            ArrivalProcess::Poisson { rate_per_s, .. } => rate_per_s.max(0.0) * (t1 - t0),
+            ArrivalProcess::Diurnal {
+                base_rate_per_s,
+                peak_rate_per_s,
+                period_s,
+                peak_at_s,
+                ..
+            } => {
+                // closed-form integral of the sinusoidal rate
+                let base = base_rate_per_s.max(0.0);
+                let peak = peak_rate_per_s.max(base);
+                let mean = 0.5 * (base + peak);
+                let amp = 0.5 * (peak - base);
+                let period = period_s.max(1e-9);
+                let w = TAU / period;
+                mean * (t1 - t0)
+                    + amp / w * ((w * (t1 - peak_at_s)).sin() - (w * (t0 - peak_at_s)).sin())
+            }
+            ArrivalProcess::Trace(offsets) => offsets
+                .iter()
+                .filter(|&&x| {
+                    let x = x.max(0.0);
+                    x >= t0 && x < t1
+                })
+                .count() as f64,
+        }
+    }
+
     /// Arrival times (seconds, ascending) for `n` jobs.
     pub fn times(&self, n: usize) -> Vec<f64> {
         match self {
@@ -41,6 +125,34 @@ impl ArrivalProcess {
                         t
                     })
                     .collect()
+            }
+            ArrivalProcess::Diurnal {
+                base_rate_per_s,
+                peak_rate_per_s,
+                period_s,
+                peak_at_s,
+                seed,
+            } => {
+                // Lewis-Shedler thinning against the peak rate: candidate
+                // arrivals at the homogeneous peak rate, accepted with
+                // probability rate(t)/peak — deterministic given the seed
+                let base = base_rate_per_s.max(0.0);
+                let peak = peak_rate_per_s.max(base).max(1e-12);
+                let mean = 0.5 * (base + peak);
+                let amp = 0.5 * (peak - base);
+                let w = TAU / period_s.max(1e-9);
+                let mut rng = Pcg::new(*seed ^ 0xD1A2);
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    t += rng.exponential(peak);
+                    let accept = rng.next_f64();
+                    let r = (mean + amp * (w * (t - peak_at_s)).cos()).max(0.0);
+                    if accept < r / peak {
+                        out.push(t);
+                    }
+                }
+                out
             }
             ArrivalProcess::Trace(offsets) => {
                 let mut sorted: Vec<f64> = offsets.iter().map(|t| t.max(0.0)).collect();
@@ -73,6 +185,62 @@ mod tests {
         // mean gap ~ 100 s
         let mean_gap = a.last().unwrap() / a.len() as f64;
         assert!((mean_gap - 100.0).abs() < 10.0, "mean gap {mean_gap}");
+    }
+
+    fn diurnal() -> ArrivalProcess {
+        ArrivalProcess::Diurnal {
+            base_rate_per_s: 0.001,
+            peak_rate_per_s: 0.05,
+            period_s: 86_400.0,
+            peak_at_s: 43_200.0,
+            seed: 12,
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_peaks_and_troughs_where_declared() {
+        let d = diurnal();
+        assert!((d.rate_at(43_200.0) - 0.05).abs() < 1e-12, "peak at noon");
+        assert!((d.rate_at(0.0) - 0.001).abs() < 1e-12, "trough at midnight");
+        assert!((d.rate_at(86_400.0 + 43_200.0) - 0.05).abs() < 1e-9, "periodic");
+        // a full period integrates to the mean rate x period
+        let expect = d.expected_arrivals(0.0, 86_400.0);
+        assert!((expect - 0.5 * (0.001 + 0.05) * 86_400.0).abs() < 1e-6);
+        // the peak-centered half-day holds more than the trough-centered
+        let peak_half = d.expected_arrivals(21_600.0, 64_800.0);
+        let trough_half = expect - peak_half;
+        assert!(peak_half > 2.0 * trough_half, "{peak_half} vs {trough_half}");
+    }
+
+    #[test]
+    fn diurnal_times_deterministic_ascending_and_burst_shaped() {
+        let d = diurnal();
+        let a = d.times(800);
+        assert_eq!(a, d.times(800), "same seed, same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // arrivals concentrate around the daily peak: count the first
+        // day's arrivals landing in the peak-centered half
+        let day: Vec<f64> = a.iter().copied().filter(|&t| t < 86_400.0).collect();
+        let in_peak_half = day
+            .iter()
+            .filter(|&&t| (21_600.0..64_800.0).contains(&t))
+            .count();
+        assert!(
+            in_peak_half * 2 > day.len(),
+            "{in_peak_half}/{} arrivals in the peak half",
+            day.len()
+        );
+    }
+
+    #[test]
+    fn expected_arrivals_over_windows() {
+        let p = ArrivalProcess::Poisson { rate_per_s: 0.02, seed: 1 };
+        assert!((p.expected_arrivals(100.0, 200.0) - 2.0).abs() < 1e-12);
+        assert_eq!(p.expected_arrivals(200.0, 100.0), 0.0, "empty window");
+        let t = ArrivalProcess::Trace(vec![5.0, 15.0, 25.0]);
+        assert_eq!(t.expected_arrivals(0.0, 20.0), 2.0);
+        assert_eq!(t.expected_arrivals(25.0, 30.0), 1.0);
+        assert_eq!(ArrivalProcess::Batch.expected_arrivals(0.0, 100.0), 0.0);
     }
 
     #[test]

@@ -28,7 +28,18 @@
 //!   limits; squeezed drivers re-optimize into the shrunken space through
 //!   the quota-capped Bayesian loop (see [`JobDriver`]). Each shock is
 //!   logged as a [`ShockRecord`] with its reclamation size and the
-//!   virtual time at which all victims were re-admitted.
+//!   virtual time at which all victims were re-admitted. Reclaimed
+//!   fleets' containers park in the warm pool (when one is enabled), so
+//!   a shock's restart tax shrinks to warm starts for whoever relaunches
+//!   the image within the TTL.
+//! - **Warm starts** — [`ClusterParams::warm`] can enable the
+//!   [`crate::warm`] layer: retiring fleets park containers in a shared
+//!   [`WarmPool`](crate::warm::WarmPool), launches check them out warm,
+//!   a [`PrewarmPolicy`](crate::warm::PrewarmPolicy) tops images up
+//!   ahead of forecast bursts on a fixed virtual-time tick grid, and the
+//!   [`PosteriorBank`](crate::warm::PosteriorBank) carries profiling
+//!   measurements between same-family jobs. All of it is off by default
+//!   and the disabled path is bit-identical to the pre-warm fleet.
 //!
 //! [`JobDriver`]: crate::coordinator::simrun::JobDriver
 
@@ -38,6 +49,7 @@ use super::capacity::CapacityTrace;
 use super::quota::TenantQuota;
 use super::{ClusterEnv, TenantId};
 use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
+use crate::warm::{WarmParams, WarmReport, WarmState};
 
 /// Knobs for a [`ClusterSim`] run.
 #[derive(Clone, Debug)]
@@ -58,6 +70,10 @@ pub struct ClusterParams {
     /// schedule for the account limit over virtual time (spot-capacity
     /// shocks); [`CapacityTrace::Static`] reproduces the fixed account
     pub capacity: CapacityTrace,
+    /// warm-start layer (container pool / prewarming / posterior bank);
+    /// the default disables all three — bit-identical to the pre-warm
+    /// fleet
+    pub warm: WarmParams,
 }
 
 impl Default for ClusterParams {
@@ -69,6 +85,7 @@ impl Default for ClusterParams {
             preemption: true,
             arbiter: ArbiterKind::GoalClass,
             capacity: CapacityTrace::Static,
+            warm: WarmParams::default(),
         }
     }
 }
@@ -172,12 +189,16 @@ pub struct FleetOutcome {
     pub arbiter: &'static str,
     /// capacity changes applied during the run, in order
     pub shocks: Vec<ShockRecord>,
+    /// what the warm-start layer did (all zeros when disabled)
+    pub warm: WarmReport,
 }
 
 impl FleetOutcome {
-    /// Summed cost of every job's ledger.
+    /// Summed cost of every job's ledger, plus what the warm layer itself
+    /// spent (keep-alive + prewarm spawns — account-level money no tenant
+    /// ledger sees; exactly 0 when the pool is disabled).
     pub fn total_cost(&self) -> f64 {
-        self.jobs.iter().map(|j| j.outcome.total_cost()).sum()
+        self.jobs.iter().map(|j| j.outcome.total_cost()).sum::<f64>() + self.warm.total_cost()
     }
 
     /// Mean arrival-to-completion span across jobs.
@@ -202,11 +223,20 @@ pub struct ClusterSim {
 impl ClusterSim {
     /// An empty fleet on a fresh shared environment.
     pub fn new(params: ClusterParams) -> ClusterSim {
-        let env = ClusterEnv::shared(
+        let mut env = ClusterEnv::shared(
             params.seed,
             params.account_limit,
             params.storage_saturation_workers,
         );
+        env.warm = WarmState::new(&params.warm);
+        if let Some(p) = &params.warm.prewarm {
+            assert!(
+                p.tick_s > 0.0 && p.lead_s.is_finite(),
+                "prewarm tick_s must be > 0 and lead_s finite (got tick {} lead {})",
+                p.tick_s,
+                p.lead_s
+            );
+        }
         let arbiter = params.arbiter.build();
         ClusterSim { params, env, jobs: Vec::new(), arbiter, shocks: Vec::new() }
     }
@@ -273,6 +303,9 @@ impl ClusterSim {
         let mut steps = 0u64;
         let changes = self.params.capacity.changepoints(self.params.account_limit);
         let mut next_change = 0usize;
+        // forecast-driven prewarming fires on a fixed virtual-time grid
+        let prewarm = self.params.warm.prewarm.clone();
+        let mut next_prewarm_s = 0.0f64;
 
         loop {
             if self.jobs.iter().all(|s| s.finished) {
@@ -284,6 +317,21 @@ impl ClusterSim {
                 let (at, to) = changes[next_change];
                 self.apply_capacity(at.max(0.0), to);
                 next_change += 1;
+            }
+            // prewarm ticks the frontier has crossed: top each target
+            // image up to its forecast-implied warm count, paying spawn
+            // cost now so the predicted burst launches warm
+            if let Some(policy) = &prewarm {
+                let cold_median = self.env.platform.limits.cold_start_median_s;
+                while next_prewarm_s <= frontier {
+                    for t in &policy.targets {
+                        let desired = policy.desired(t, next_prewarm_s);
+                        self.env
+                            .warm
+                            .prewarm_to(t.image, t.mem_mb, desired, next_prewarm_s, cold_median);
+                    }
+                    next_prewarm_s += policy.tick_s;
+                }
             }
 
             let mut forced_starved = false;
@@ -626,16 +674,16 @@ impl ClusterSim {
     }
 
     fn collect(self) -> FleetOutcome {
-        let peak_in_flight = self.env.pool.peak_in_flight;
-        let denials = self.env.pool.denials;
-        let throttled = self.env.platform.total_throttled;
-        let account_limit = self.env.pool.account_limit;
-        let arbiter = self.arbiter.name();
+        let ClusterSim { mut env, jobs, arbiter, shocks, .. } = self;
+        let peak_in_flight = env.pool.peak_in_flight;
+        let denials = env.pool.denials;
+        let throttled = env.platform.total_throttled;
+        let account_limit = env.pool.account_limit;
+        let arbiter = arbiter.name();
         let mut first_arrive = f64::INFINITY;
         let mut last_finish = 0.0f64;
         let mut preempt_total = 0u64;
-        let jobs: Vec<JobOutcome> = self
-            .jobs
+        let jobs: Vec<JobOutcome> = jobs
             .into_iter()
             .map(|s| {
                 first_arrive = first_arrive.min(s.arrive_s);
@@ -655,6 +703,10 @@ impl ClusterSim {
                 }
             })
             .collect();
+        // bill the containers still parked when the last job finished,
+        // then snapshot the warm layer's run totals
+        env.warm.finalize(last_finish);
+        let warm = env.warm.report();
         FleetOutcome {
             jobs,
             makespan_s: if first_arrive.is_finite() {
@@ -668,7 +720,8 @@ impl ClusterSim {
             throttled_invocations: throttled,
             preemptions: preempt_total,
             arbiter,
-            shocks: self.shocks,
+            shocks,
+            warm,
         }
     }
 }
@@ -862,6 +915,99 @@ mod tests {
         if let Some(shock) = out.shocks.first() {
             assert_eq!(shock.reclaimed_leases, 0, "growth reclaims nothing");
             assert_eq!(shock.recovered_s, Some(shock.at_s));
+        }
+    }
+
+    #[test]
+    fn disabled_warm_layer_reports_zeros() {
+        let out = run_fleet(3, 64);
+        assert!(!out.warm.enabled);
+        assert_eq!(out.warm.hits + out.warm.misses + out.warm.checkins, 0);
+        assert_eq!(out.warm.total_cost(), 0.0);
+    }
+
+    #[test]
+    fn warm_fleet_shares_containers_across_tenants() {
+        use crate::warm::{PoolConfig, WarmParams};
+        // staggered same-image tenants on a pooled account: later fleets
+        // (and every reconfiguration) should find warm containers that
+        // earlier fleets retired. TTL comfortably covers the arrival
+        // stagger plus a profiling pass.
+        // roomy account (4 fleets can never exceed it): both builds run
+        // identical searches and launches, so hit/cold counts compare 1:1
+        let build = |warm: WarmParams| {
+            let mut sim = ClusterSim::new(ClusterParams {
+                account_limit: 1000,
+                warm,
+                ..Default::default()
+            });
+            for i in 0..4u64 {
+                sim.submit(small_job(500 + i), i as f64 * 400.0, TenantQuota::unlimited());
+            }
+            sim.run()
+        };
+        let warm = build(WarmParams {
+            pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
+            prewarm: None,
+            bank: None,
+        });
+        let cold = build(WarmParams::default());
+        assert!(warm.warm.enabled);
+        assert!(warm.warm.hits > 0, "staggered tenants must reuse containers");
+        assert!(warm.warm.conserves(), "pool accounting must balance");
+        let warm_cold_starts: u64 = warm.jobs.iter().map(|j| j.outcome.cold_starts).sum();
+        let cold_cold_starts: u64 = cold.jobs.iter().map(|j| j.outcome.cold_starts).sum();
+        assert!(
+            warm_cold_starts < cold_cold_starts,
+            "pool must absorb cold starts: {warm_cold_starts} vs {cold_cold_starts}"
+        );
+        assert!(warm.warm.keepalive_cost > 0.0, "warmth is not free");
+        for j in &warm.jobs {
+            assert_eq!(j.outcome.iters_done, 12);
+        }
+    }
+
+    #[test]
+    fn prewarmed_diurnal_burst_launches_warm() {
+        use crate::warm::{PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams};
+        // a burst of same-image jobs arrives on a known trace; the
+        // prewarmer provisions ahead of it, so even the *first* fleets
+        // launch (partly) warm
+        let arrivals = vec![900.0, 920.0, 940.0, 960.0];
+        let image = small_job(0).image_id();
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 256,
+            warm: WarmParams {
+                // generous TTL: the burst's fleets launch only after
+                // their profiling passes, well after the spawn tick
+                pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
+                prewarm: Some(PrewarmPolicy {
+                    forecast: ArrivalProcess::Trace(arrivals.clone()),
+                    lead_s: 300.0,
+                    tick_s: 60.0,
+                    targets: vec![PrewarmTarget {
+                        image,
+                        mem_mb: 3072,
+                        workers_per_job: 16,
+                        max_warm: 128,
+                    }],
+                }),
+                bank: None,
+            },
+            ..Default::default()
+        });
+        for (i, at) in arrivals.iter().enumerate() {
+            sim.submit(small_job(600 + i as u64), *at, TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        assert!(out.warm.prewarm_spawns > 0, "the forecast must trigger spawns");
+        assert!(out.warm.spawn_cost > 0.0);
+        assert!(
+            out.warm.hits > 0,
+            "prewarmed containers must serve the burst's first fleets"
+        );
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 12);
         }
     }
 

@@ -28,6 +28,8 @@
 //!
 //! [`ClusterEnv`] is the shared world state a driver steps against: the
 //! platform (cold starts, throttling, the account limit), the quota pool,
+//! the warm-start layer ([`crate::warm`]: fleet-wide container pool +
+//! cross-job profiling-posterior bank, both disabled by default),
 //! and the aggregate storage bandwidth that jobs' synchronization traffic
 //! contends for. [`ClusterEnv::single`] degenerates to the old
 //! single-tenant world — `simulate()` runs through exactly the same code
@@ -43,8 +45,8 @@ pub mod fleet;
 pub mod quota;
 
 pub use arbiter::{
-    Arbiter, ArbiterKind, Capacity, DrfArbiter, GoalClassArbiter, JobView,
-    WeightedFairArbiter,
+    Arbiter, ArbiterKind, Capacity, ClassWeightedFairArbiter, DrfArbiter, GoalClassArbiter,
+    JobView, WeightedFairArbiter,
 };
 pub use arrival::ArrivalProcess;
 pub use capacity::CapacityTrace;
@@ -52,14 +54,20 @@ pub use fleet::{ClusterParams, ClusterSim, FleetOutcome, JobOutcome, ShockRecord
 pub use quota::{Acquire, Lease, QuotaPool, TenantId, TenantQuota};
 
 use crate::faas::FaasPlatform;
+use crate::warm::WarmState;
 
 /// Shared world state one [`JobDriver`](crate::coordinator::simrun::JobDriver)
-/// advances against: platform + concurrency pool + shared storage capacity.
+/// advances against: platform + concurrency pool + shared storage capacity
+/// + the warm-start layer (container pool and posterior bank).
 pub struct ClusterEnv {
     /// the simulated FaaS platform (cold starts, limits, anomalies)
     pub platform: FaasPlatform,
     /// the shared account's concurrency pool
     pub pool: QuotaPool,
+    /// warm-start layer: container pool + profiling-posterior bank.
+    /// [`WarmState::disabled`] (the default) is a strict no-op, keeping
+    /// this path bit-identical to the pre-warm golden traces.
+    pub warm: WarmState,
     /// Aggregate worker count at which the shared parameter-store /
     /// object-store bandwidth saturates: with `W` workers from *other*
     /// jobs in flight, a job's per-iteration communication time stretches
@@ -79,6 +87,7 @@ impl ClusterEnv {
         ClusterEnv {
             platform: FaasPlatform::with_seed(seed),
             pool,
+            warm: WarmState::disabled(),
             storage_saturation_workers: f64::INFINITY,
         }
     }
@@ -99,6 +108,7 @@ impl ClusterEnv {
         ClusterEnv {
             platform,
             pool: QuotaPool::new(account_limit),
+            warm: WarmState::disabled(),
             storage_saturation_workers,
         }
     }

@@ -67,6 +67,14 @@ pub struct SimJob {
     pub seed: u64,
     /// worker crash hazard (fault-tolerance experiments; 0 = off)
     pub hazard_per_s: f64,
+    /// container image the job's workers run (warm-pool sharing key);
+    /// `None` derives one from the system + framework — see
+    /// [`image_id`](Self::image_id)
+    pub image: Option<crate::warm::ImageId>,
+    /// declared model family for cross-job GP-prior sharing via the
+    /// [`PosteriorBank`](crate::warm::PosteriorBank); `None` (the
+    /// default) opts out — the job profiles from scratch
+    pub family: Option<crate::warm::FamilyId>,
 }
 
 impl SimJob {
@@ -79,11 +87,23 @@ impl SimJob {
             fixed: Config { workers: 32, mem_mb: 3072 },
             seed: 17,
             hazard_per_s: 0.0,
+            image: None,
+            family: None,
         }
     }
 
     pub fn total_iters(&self) -> u64 {
         self.phases.iter().map(|p| p.iters).sum()
+    }
+
+    /// The container image the job's workers run: the declared
+    /// [`image`](Self::image) when given, else derived from the system +
+    /// framework (the runtime layers an image actually pins; jobs on the
+    /// same stack share warm containers by default once a pool is on).
+    pub fn image_id(&self) -> crate::warm::ImageId {
+        self.image.unwrap_or_else(|| {
+            crate::util::rng::fnv1a(self.system.name()) ^ (self.framework as u64 + 1)
+        })
     }
 }
 
@@ -96,6 +116,13 @@ pub struct SimOutcome {
     pub total_time_s: f64,
     pub profiling_time_s: f64,
     pub iters_done: u64,
+    /// live profiling evaluations the Bayesian searches spent (warm
+    /// posteriors show up here as fewer probes)
+    pub bo_probes: u64,
+    /// serverless worker launches served by a warm container
+    pub warm_hits: u64,
+    /// serverless worker launches that paid a cold start
+    pub cold_starts: u64,
     /// configs chosen per phase (adaptation trace, Figs 12b/13b)
     pub config_trace: Vec<(u64, Config)>,
 }
@@ -176,6 +203,31 @@ impl IterModel<'_> {
     }
 }
 
+/// Score a configuration's *physical* measurements — per-iteration time
+/// and cost — under a user goal over a phase of `phase_iters` iterations.
+/// Shared by the live profiling objective and the posterior-bank path:
+/// banked measurements are goal-agnostic, so a borrowing job rescores
+/// them under its own goal with exactly the arithmetic live probes use.
+pub(crate) fn goal_score(goal: Goal, t_iter: f64, iter_cost: f64, phase_iters: u64) -> f64 {
+    let time = t_iter * phase_iters as f64;
+    let cost = iter_cost * phase_iters as f64;
+    match goal {
+        // cost-time efficiency per iteration (phase-length independent)
+        Goal::None => t_iter * iter_cost,
+        Goal::Fastest => t_iter,
+        Goal::Deadline { t_max_s } => {
+            // 22% safety margin: profiling spends *wall time* before
+            // training starts, so the training span must undershoot
+            let limit = 0.78 * t_max_s;
+            cost + 1e4 * ((time - limit).max(0.0) / limit)
+        }
+        Goal::Budget { s_max } => {
+            let limit = 0.92 * s_max;
+            time + 1e6 * ((cost - limit).max(0.0) / limit)
+        }
+    }
+}
+
 /// Objective the BO minimizes for a phase under a user goal.
 struct PhaseObjective<'a> {
     model: IterModel<'a>,
@@ -188,24 +240,7 @@ impl Objective for PhaseObjective<'_> {
     fn eval(&mut self, c: Config) -> f64 {
         self.evals += 1;
         let (comp, comm) = self.model.iter_time(c);
-        let t_iter = comp + comm;
-        let time = t_iter * self.phase_iters as f64;
-        let cost = self.model.iter_cost(c) * self.phase_iters as f64;
-        match self.goal {
-            // cost-time efficiency per iteration (phase-length independent)
-            Goal::None => t_iter * self.model.iter_cost(c),
-            Goal::Fastest => t_iter,
-            Goal::Deadline { t_max_s } => {
-                // 22% safety margin: profiling spends *wall time* before
-                // training starts, so the training span must undershoot
-                let limit = 0.78 * t_max_s;
-                cost + 1e4 * ((time - limit).max(0.0) / limit)
-            }
-            Goal::Budget { s_max } => {
-                let limit = 0.92 * s_max;
-                time + 1e6 * ((cost - limit).max(0.0) / limit)
-            }
-        }
+        goal_score(self.goal, comp + comm, self.model.iter_cost(c), self.phase_iters)
     }
 
     fn eval_cost_s(&self, c: Config) -> f64 {
@@ -269,6 +304,10 @@ pub struct JobDriver {
     init_s: f64,
     guard_every: u64,
     lease: Option<u64>,
+    /// memory the currently-running fleet's containers were launched
+    /// with — what a later check-in bills keep-alive by (cfg.mem_mb may
+    /// have moved on by then via re-optimization)
+    fleet_mem_mb: u32,
     state: DriverState,
     /// virtual seconds spent waiting for concurrency slots
     pub stalled_s: f64,
@@ -276,6 +315,12 @@ pub struct JobDriver {
     pub preemptions: u32,
     /// when the fleet first launched (queueing + profiling delay evidence)
     pub first_fleet_s: Option<f64>,
+    /// live Bayesian-search probes spent (all searches, all phases)
+    pub bo_probes: u64,
+    /// serverless worker launches served warm from the fleet pool
+    pub warm_hits: u64,
+    /// serverless worker launches that paid a cold start
+    pub cold_starts: u64,
 }
 
 impl JobDriver {
@@ -332,10 +377,14 @@ impl JobDriver {
             init_s: 0.0,
             guard_every: 1,
             lease: None,
+            fleet_mem_mb: cfg.mem_mb,
             state: DriverState::PhaseStart,
             stalled_s: 0.0,
             preemptions: 0,
             first_fleet_s: None,
+            bo_probes: 0,
+            warm_hits: 0,
+            cold_starts: 0,
         }
     }
 
@@ -373,14 +422,32 @@ impl JobDriver {
         }
     }
 
+    /// Release the held slot lease (if any) and park the retiring fleet's
+    /// containers in the shared warm pool — where the next launch of the
+    /// same image (this job's or another tenant's) can pick them up warm.
+    /// With the pool disabled the check-in vanishes and this is exactly
+    /// the old bare release. Returns false if no lease was held.
+    fn retire_fleet(&mut self, env: &mut ClusterEnv) -> bool {
+        let Some(id) = self.lease.take() else { return false };
+        let n = env.pool.release(id);
+        if self.job.system.is_serverless() {
+            env.warm.checkin(self.job.image_id(), self.fleet_mem_mb, n, self.t_now);
+        }
+        true
+    }
+
     /// Revoke this job's fleet (a higher-class job needs the slots). The
     /// lease returns to the pool; the job must re-acquire and re-invoke —
     /// paying cold start + init again — before its next iteration, exactly
     /// the checkpoint/restart cost the task scheduler's protocol implies.
+    /// (With a warm pool enabled, the revoked containers park there — a
+    /// reclaimed fleet's restart price shrinks to warm starts if it, or
+    /// anyone sharing its image, relaunches within the TTL.)
     /// Returns false if there was nothing to preempt.
     pub fn preempt(&mut self, env: &mut ClusterEnv) -> bool {
-        let Some(id) = self.lease.take() else { return false };
-        env.pool.release(id);
+        if !self.retire_fleet(env) {
+            return false;
+        }
         self.fleet_started = false;
         self.preemptions += 1;
         if matches!(self.state, DriverState::Iterate) {
@@ -420,9 +487,7 @@ impl JobDriver {
 
     fn phase_start(&mut self, env: &mut ClusterEnv) -> StepEvent {
         if self.phase_idx >= self.job.phases.len() {
-            if let Some(id) = self.lease.take() {
-                env.pool.release(id);
-            }
+            self.retire_fleet(env);
             self.state = DriverState::Finished;
             return StepEvent::Finished;
         }
@@ -457,6 +522,28 @@ impl JobDriver {
 
         if should_optimize {
             let space = self.space_capped(env);
+            // cross-job warm posterior: same-family measurements banked by
+            // earlier jobs, rescored under *this* job's goal and phase
+            // length (the bank stores physical quantities, not objectives).
+            // Filter HERE, not just inside the optimizer — the
+            // refresh-vs-full budget choice below must see only priors the
+            // search can actually use: inside the quota-capped space, and
+            // from the same global-batch regime (per-iteration time is
+            // batch-dependent; a dynamic-batching job must not treat its
+            // own earlier phases as a warm posterior for a new batch).
+            let prior: Vec<(Config, f64)> = match self.job.family {
+                Some(fam) if self.job.system.is_serverless() => env
+                    .warm
+                    .bank_prior(fam)
+                    .iter()
+                    .filter(|o| space.contains(o.cfg) && o.global_batch == phase.global_batch)
+                    .map(|o| {
+                        (o.cfg, goal_score(self.job.goal, o.iter_s, o.iter_cost, phase.iters))
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            };
+            env.warm.bank_note_served(prior.len() as u64);
             let model = IterModel {
                 system: self.job.system,
                 profile: &phase.profile,
@@ -475,6 +562,16 @@ impl JobDriver {
                 // MLCD profiles on VMs: fewer, far more expensive probes;
                 // it cannot afford to re-run (the paper's key contrast)
                 BoParams { n_init: 3, max_iters: 10, seed: self.job.seed, ..Default::default() }
+            } else if !prior.is_empty() {
+                // warm posterior from the bank: the family's performance
+                // surface is already mapped, so spend a refresh budget —
+                // the same economics as re-optimizing on a dynamics change
+                BoParams {
+                    n_init: 1,
+                    max_iters: 6,
+                    seed: self.job.seed ^ 0xBA2E ^ self.phase_idx as u64,
+                    ..Default::default()
+                }
             } else if first_active {
                 // initial search: full budget; constrained goals get a
                 // larger one (their feasible region can be a corner)
@@ -496,7 +593,8 @@ impl JobDriver {
                 }
             };
             let bo = BayesOpt::new(space, params);
-            let res = bo.run(&mut obj);
+            let res = bo.run_with_prior(&mut obj, &prior);
+            self.bo_probes += res.evaluations as u64;
             // profiling wall time + money
             self.profiling_time_s += res.profiling_s;
             self.t_now += res.profiling_s;
@@ -517,6 +615,25 @@ impl JobDriver {
             }
             if first_active {
                 self.ledger.mark_profiling(&self.pricing);
+            }
+            // bank this search's physical measurements for the family's
+            // next job (live probes only — the borrowed prior already
+            // lives in the bank)
+            if self.job.system.is_serverless() {
+                if let Some(fam) = self.job.family {
+                    for (c, _) in &res.trace {
+                        let (comp, comm) = obj.model.iter_time(*c);
+                        env.warm.bank_deposit(
+                            fam,
+                            crate::warm::FamilyObs {
+                                cfg: *c,
+                                global_batch: phase.global_batch,
+                                iter_s: comp + comm,
+                                iter_cost: obj.model.iter_cost(*c),
+                            },
+                        );
+                    }
+                }
             }
             self.cfg = res.best;
             self.scheduler.resize(self.cfg.workers);
@@ -574,10 +691,10 @@ impl JobDriver {
                 self.refit_to_cap(env, cap);
             }
             // no hold-and-wait: drop any previous fleet's lease before
-            // requesting the (possibly resized) new one
-            if let Some(id) = self.lease.take() {
-                env.pool.release(id);
-            }
+            // requesting the (possibly resized) new one — the retiring
+            // containers park in the warm pool, where the re-invocation
+            // below can immediately pick them back up warm
+            self.retire_fleet(env);
             let want = self.cfg.workers;
             match env.pool.try_acquire(self.tenant, want) {
                 Acquire::Granted(id) => self.lease = Some(id),
@@ -625,6 +742,7 @@ impl JobDriver {
                     },
                 );
                 let res = bo.run(&mut obj);
+                self.bo_probes += res.evaluations as u64;
                 self.cfg = res.best;
                 // quick refresh probes, not a full profiling pass
                 self.t_now += res.profiling_s.min(60.0);
@@ -653,14 +771,40 @@ impl JobDriver {
             Some(_) => env.pool.total_in_flight() - self.cfg.workers,
             None => 0,
         };
-        let invs = env.platform.invoke_workers_shared(
+        // warm reuse: take matching containers from the fleet pool (zero
+        // when disabled — the bit-identical golden path); those workers
+        // sample a warm-start delay instead of a cold start
+        let hits = if self.job.system.is_serverless() {
+            env.warm
+                .checkout(self.job.image_id(), self.cfg.workers, self.t_now)
+        } else {
+            0
+        };
+        let (warm_median, warm_sigma) = env.warm.warm_start_dist();
+        let invs = env.platform.invoke_workers_pooled(
             self.cfg.workers,
             self.job.system.invoke_mode(),
             external,
+            hits,
+            warm_median,
+            warm_sigma,
         );
+        if self.job.system.is_serverless() {
+            self.warm_hits += hits as u64;
+            self.cold_starts += (self.cfg.workers - hits) as u64;
+        }
         let slowest = invs.iter().map(|i| i.startup_delay_s).fold(0.0, f64::max);
-        self.t_now += slowest + self.init_s;
+        // training is gang-scheduled: the barrier waits for the coldest
+        // worker, so framework init only shrinks when the *whole* fleet
+        // launched warm (process + framework already resident)
+        let init_eff = if hits >= self.cfg.workers && self.cfg.workers > 0 {
+            self.init_s * env.warm.warm_init_fraction()
+        } else {
+            self.init_s
+        };
+        self.t_now += slowest + init_eff;
         env.platform.release_workers(self.cfg.workers);
+        self.fleet_mem_mb = self.cfg.mem_mb;
         self.fleet_started = true;
         if self.first_fleet_s.is_none() {
             self.first_fleet_s = Some(self.t_now);
@@ -704,6 +848,7 @@ impl JobDriver {
                         },
                     );
                     let res = bo.run(&mut obj);
+                    self.bo_probes += res.evaluations as u64;
                     let (na, nb) = obj.model.iter_time(res.best);
                     // only escalate to a strictly faster configuration
                     if res.best != self.cfg && na + nb < self.comp_s + self.comm_s {
@@ -846,6 +991,9 @@ impl JobDriver {
             total_time_s: self.t_now,
             profiling_time_s: self.profiling_time_s,
             iters_done: self.iters_done,
+            bo_probes: self.bo_probes,
+            warm_hits: self.warm_hits,
+            cold_starts: self.cold_starts,
             config_trace: self.config_trace,
         }
     }
@@ -1037,6 +1185,96 @@ mod tests {
         let (_, last) = *out.config_trace.last().unwrap();
         assert!(last.workers <= 4, "refit ignored the 4-slot quota: {last:?}");
         assert_eq!(env.pool.total_in_flight(), 0, "lease returned at finish");
+    }
+
+    #[test]
+    fn warm_pool_serves_reconfiguration_relaunches() {
+        // dynamic batching forces retire → re-optimize → relaunch at each
+        // phase switch; with the pool enabled the relaunch picks the just
+        // retired containers back up warm instead of paying cold starts
+        let phases = Workloads::fig12_schedule(ModelProfile::resnet50());
+        let job = SimJob::new(SystemKind::Smlt, phases);
+        let mut env = ClusterEnv::shared(job.seed, 1000, f64::INFINITY);
+        env.warm = crate::warm::WarmState::new(&crate::warm::WarmParams::enabled());
+        let t = env
+            .pool
+            .register_tenant(crate::cluster::TenantQuota::unlimited());
+        let mut driver = JobDriver::new(job.clone(), t, &env, 0.0);
+        let mut steps = 0u64;
+        while !matches!(driver.step(&mut env), StepEvent::Finished) {
+            steps += 1;
+            assert!(steps < 10_000, "driver wedged");
+        }
+        let warm = driver.into_outcome();
+        assert!(warm.warm_hits > 0, "reconfigurations must relaunch warm");
+        assert!(warm.cold_starts > 0, "the first fleet is always cold");
+
+        // same job, pool disabled: every launch is cold
+        let mut env2 = ClusterEnv::shared(job.seed, 1000, f64::INFINITY);
+        let t2 = env2
+            .pool
+            .register_tenant(crate::cluster::TenantQuota::unlimited());
+        let mut driver2 = JobDriver::new(job, t2, &env2, 0.0);
+        while !matches!(driver2.step(&mut env2), StepEvent::Finished) {}
+        let cold = driver2.into_outcome();
+        assert_eq!(cold.warm_hits, 0);
+        assert!(
+            warm.cold_starts < cold.cold_starts,
+            "the pool must absorb cold starts: {} vs {}",
+            warm.cold_starts,
+            cold.cold_starts
+        );
+        assert_eq!(warm.iters_done, cold.iters_done);
+    }
+
+    #[test]
+    fn same_family_second_job_probes_less() {
+        // two identical jobs declaring the same model family, run one
+        // after the other on a shared env with the posterior bank on: the
+        // second seeds its GP from the first's measurements and spends a
+        // refresh budget instead of a full search
+        let mk = |seed: u64| {
+            let mut j = quick_job(SystemKind::Smlt);
+            j.seed = seed;
+            j.family = Some(0xFA);
+            j
+        };
+        let mut env = ClusterEnv::shared(7, 1000, f64::INFINITY);
+        env.warm = crate::warm::WarmState::new(&crate::warm::WarmParams::enabled());
+        let mut outs = Vec::new();
+        for seed in [21u64, 22] {
+            let t = env
+                .pool
+                .register_tenant(crate::cluster::TenantQuota::unlimited());
+            let mut d = JobDriver::new(mk(seed), t, &env, 0.0);
+            let mut steps = 0u64;
+            while !matches!(d.step(&mut env), StepEvent::Finished) {
+                steps += 1;
+                assert!(steps < 10_000, "driver wedged");
+            }
+            outs.push(d.into_outcome());
+        }
+        assert!(
+            outs[1].bo_probes < outs[0].bo_probes,
+            "warm posterior must cut live probes: {} vs {}",
+            outs[1].bo_probes,
+            outs[0].bo_probes
+        );
+        assert_eq!(outs[0].iters_done, outs[1].iters_done);
+        let bank = env.warm.bank().expect("bank enabled");
+        assert!(bank.deposits > 0 && bank.prior_served > 0);
+    }
+
+    #[test]
+    fn image_id_defaults_by_stack_and_respects_declaration() {
+        let a = quick_job(SystemKind::Smlt);
+        let b = quick_job(SystemKind::Smlt);
+        assert_eq!(a.image_id(), b.image_id(), "same stack, same image");
+        let c = quick_job(SystemKind::Siren);
+        assert_ne!(a.image_id(), c.image_id(), "different system, different image");
+        let mut d = quick_job(SystemKind::Smlt);
+        d.image = Some(99);
+        assert_eq!(d.image_id(), 99);
     }
 
     #[test]

@@ -11,6 +11,10 @@ pub struct Pricing {
     pub lambda_gb_s: f64,
     /// Lambda: $ per request
     pub lambda_request: f64,
+    /// provisioned concurrency: $ per GB-second a container is *kept
+    /// warm* (what the warm pool's keep-alive accrues at — roughly a
+    /// quarter of the active-duration rate, matching AWS list pricing)
+    pub lambda_provisioned_gb_s: f64,
     /// S3: $ per GET / per PUT request
     pub s3_get: f64,
     pub s3_put: f64,
@@ -30,6 +34,7 @@ impl Default for Pricing {
         Pricing {
             lambda_gb_s: 0.0000166667,
             lambda_request: 0.20 / 1e6,
+            lambda_provisioned_gb_s: 0.0000041667,
             s3_get: 0.0004 / 1000.0,
             s3_put: 0.005 / 1000.0,
             s3_gb_month: 0.023,
@@ -46,6 +51,12 @@ impl Pricing {
     pub fn lambda_cost(&self, n: u32, mem_mb: u32, seconds: f64) -> f64 {
         let gb = mem_mb as f64 / 1024.0;
         n as f64 * (gb * seconds * self.lambda_gb_s + self.lambda_request)
+    }
+
+    /// Keep-alive cost of `gb_s` GB-seconds of warm (provisioned)
+    /// container residency.
+    pub fn provisioned_cost(&self, gb_s: f64) -> f64 {
+        gb_s * self.lambda_provisioned_gb_s
     }
 
     /// Parameter-store cost: `containers` Fargate tasks (2 vCPU / 4 GB
@@ -99,12 +110,15 @@ impl CostLedger {
         self.profiling = self.total(p);
     }
 
+    /// Object-store request line ($): GETs + PUTs priced out. The single
+    /// source of truth for the S3 line — `total` and the per-tenant
+    /// billing view both go through it.
+    pub fn s3_cost(&self, p: &Pricing) -> f64 {
+        self.s3_gets as f64 * p.s3_get + self.s3_puts as f64 * p.s3_put
+    }
+
     pub fn total(&self, p: &Pricing) -> f64 {
-        self.lambda_compute
-            + self.s3_gets as f64 * p.s3_get
-            + self.s3_puts as f64 * p.s3_put
-            + self.param_store
-            + self.vm
+        self.lambda_compute + self.s3_cost(p) + self.param_store + self.vm
     }
 
     /// Training-only share (total minus the profiling prefix).
@@ -154,6 +168,16 @@ mod tests {
         assert!(l.total(&p) > after_profiling);
         assert!((l.profiling - after_profiling).abs() < 1e-12);
         assert!(l.training_only(&p) > 0.0);
+    }
+
+    #[test]
+    fn provisioned_rate_undercuts_active_rate() {
+        let p = Pricing::default();
+        // keeping a container warm must be cheaper than running it —
+        // otherwise the warm pool could never win the cost trade
+        assert!(p.lambda_provisioned_gb_s < p.lambda_gb_s);
+        assert!((p.provisioned_cost(1000.0) - 1000.0 * p.lambda_provisioned_gb_s).abs() < 1e-15);
+        assert_eq!(p.provisioned_cost(0.0), 0.0);
     }
 
     #[test]

@@ -135,11 +135,35 @@ impl FaasPlatform {
         mode: InvokeMode,
         external_load: u32,
     ) -> Vec<Invocation> {
+        self.invoke_workers_pooled(n, mode, external_load, 0, 0.0, 0.0)
+    }
+
+    /// [`invoke_workers_shared`](Self::invoke_workers_shared) when the
+    /// first `warm_hits` workers land on warm containers from the fleet's
+    /// [`WarmPool`](crate::warm::WarmPool): those sample a warm-start
+    /// delay (lognormal around `warm_median_s` with `warm_sigma`) instead
+    /// of a cold start. Throttling rules are unchanged — warm containers
+    /// still occupy concurrency while running. With `warm_hits == 0` this
+    /// is bit-identical to the un-pooled path (same RNG draws), which is
+    /// what keeps the pool-disabled golden traces exact.
+    pub fn invoke_workers_pooled(
+        &mut self,
+        n: u32,
+        mode: InvokeMode,
+        external_load: u32,
+        warm_hits: u32,
+        warm_median_s: f64,
+        warm_sigma: f64,
+    ) -> Vec<Invocation> {
         let occupied = self.running.saturating_add(external_load);
         let mut out = Vec::with_capacity(n as usize);
         for i in 0..n {
             self.total_invocations += 1;
-            let mut delay = self.cold_start_s();
+            let mut delay = if i < warm_hits {
+                self.warm_start_s(warm_median_s, warm_sigma)
+            } else {
+                self.cold_start_s()
+            };
             let mut throttled = false;
 
             match mode {
@@ -181,6 +205,13 @@ impl FaasPlatform {
     pub fn cold_start_s(&mut self) -> f64 {
         let mu = self.limits.cold_start_median_s.ln();
         self.rng.lognormal(mu, self.limits.cold_start_sigma)
+    }
+
+    /// One warm-start sample: the startup delay of an invocation landing
+    /// on an already-resident container (same lognormal family as cold
+    /// starts, an order of magnitude smaller median).
+    pub fn warm_start_s(&mut self, median_s: f64, sigma: f64) -> f64 {
+        self.rng.lognormal(median_s.max(1e-6).ln(), sigma)
     }
 
     /// How much of `work_s` of function time fits before the duration cap
@@ -268,6 +299,35 @@ mod tests {
         q.limits.concurrency_limit = 100;
         let inv = q.invoke_workers_shared(20, InvokeMode::DirectTracked, 0);
         assert!(inv.iter().all(|i| !i.throttled));
+    }
+
+    #[test]
+    fn pooled_with_zero_hits_is_bit_identical_to_shared() {
+        // the golden-trace guarantee: an empty warm pool must not perturb
+        // a single RNG draw relative to the pre-pool platform
+        let mut a = FaasPlatform::with_seed(8);
+        let mut b = FaasPlatform::with_seed(8);
+        let ia = a.invoke_workers_shared(64, InvokeMode::DirectTracked, 10);
+        let ib = b.invoke_workers_pooled(64, InvokeMode::DirectTracked, 10, 0, 0.02, 0.3);
+        for (x, y) in ia.iter().zip(ib.iter()) {
+            assert_eq!(x.startup_delay_s.to_bits(), y.startup_delay_s.to_bits());
+            assert_eq!(x.throttled, y.throttled);
+        }
+    }
+
+    #[test]
+    fn warm_workers_start_much_faster() {
+        let mut p = FaasPlatform::with_seed(9);
+        let inv = p.invoke_workers_pooled(200, InvokeMode::DirectTracked, 0, 100, 0.02, 0.3);
+        let warm: f64 = inv[..100].iter().map(|i| i.startup_delay_s).sum();
+        let cold: f64 = inv[100..].iter().map(|i| i.startup_delay_s).sum();
+        assert!(
+            warm * 5.0 < cold,
+            "warm total {warm} should be far below cold total {cold}"
+        );
+        for i in &inv[..100] {
+            assert!(i.startup_delay_s > 0.0 && i.startup_delay_s < 0.2);
+        }
     }
 
     #[test]

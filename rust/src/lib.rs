@@ -24,12 +24,17 @@
 //! - [`coordinator`] — end client: artifact/resource managers, workloads
 //!   (static / dynamic batching / online learning / NAS), and the
 //!   reentrant per-job simulation driver (`JobDriver`).
-//! - [`cluster`] — multi-tenant fleet layer: job arrival processes,
-//!   shared account concurrency pool with per-tenant quotas, pluggable
-//!   slot arbitration (goal-class priority, weighted fair sharing, DRF —
+//! - [`cluster`] — multi-tenant fleet layer: job arrival processes
+//!   (batch / Poisson / diurnal / trace), shared account concurrency pool
+//!   with per-tenant quotas, pluggable slot arbitration (goal-class
+//!   priority, weighted fair sharing, class-aware fair sharing, DRF —
 //!   each with a configurable starvation bound), capacity traces that
 //!   step the account limit mid-run (spot-capacity shocks with lease
 //!   reclamation), preemption, and quota-aware re-optimization.
+//! - [`warm`] — warm-start layer: fleet-wide warm-container pool (TTL
+//!   eviction, keep-alive billing, warm-vs-cold init distributions),
+//!   forecast-driven prewarming, and the cross-job profiling-posterior
+//!   bank that seeds repeat jobs' Bayesian searches.
 //! - [`baselines`] — Siren, Cirrus, LambdaML, MLCD, IaaS comparators.
 //! - [`metrics`] — run recorders, CSV emission, and per-tenant
 //!   fairness / shock-degradation roll-ups.
@@ -50,4 +55,5 @@ pub mod simclock;
 pub mod storage;
 pub mod sync;
 pub mod util;
+pub mod warm;
 pub mod worker;

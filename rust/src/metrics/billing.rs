@@ -1,0 +1,166 @@
+//! Per-tenant billing view of a fleet run: the shared-account invoice,
+//! split by who incurred what.
+//!
+//! The fleet scheduler already keeps one [`CostLedger`] per job, but a
+//! platform operator reads the bill the other way around: *which tenant
+//! cost what, per service line, and what did the account itself spend on
+//! warmth*. [`BillingReport::from_fleet`] rolls a
+//! [`FleetOutcome`](crate::cluster::FleetOutcome) up into exactly that —
+//! per-tenant service-line totals plus the account-level warm-layer spend
+//! (keep-alive + prewarm spawns) that no tenant ledger sees, with the
+//! guarantee that the lines sum back to the fleet's own
+//! [`total_cost`](crate::cluster::FleetOutcome::total_cost).
+//!
+//! [`CostLedger`]: crate::costmodel::CostLedger
+
+use crate::cluster::{FleetOutcome, TenantId};
+use crate::metrics::fairness::jain_index;
+
+/// One tenant's invoice lines for a fleet run (all $).
+#[derive(Clone, Debug)]
+pub struct TenantBill {
+    pub tenant: TenantId,
+    /// goal class (Deadline 3 > Budget 2 > Fastest 1 > None 0)
+    pub class: u8,
+    /// Lambda compute (GB-seconds + requests)
+    pub lambda: f64,
+    /// object-store requests (GET + PUT)
+    pub s3: f64,
+    /// parameter-store container-hours
+    pub param_store: f64,
+    /// VM-hours (IaaS/MLCD baselines)
+    pub vm: f64,
+    /// the profiling-phase share of the total (already included in it)
+    pub profiling: f64,
+    /// everything the tenant's ledger accumulated
+    pub total: f64,
+    /// worker launches this tenant got served warm
+    pub warm_hits: u64,
+    /// worker launches this tenant paid cold
+    pub cold_starts: u64,
+}
+
+/// The fleet invoice: per-tenant bills + the account-level warm spend.
+#[derive(Clone, Debug)]
+pub struct BillingReport {
+    /// per-tenant invoices, indexed like the outcome's job list
+    pub tenants: Vec<TenantBill>,
+    /// sum of the tenant totals
+    pub tenant_total: f64,
+    /// account-level keep-alive spend (warm pool)
+    pub keepalive_cost: f64,
+    /// account-level prewarm spawn spend
+    pub prewarm_spawn_cost: f64,
+    /// tenant totals + warm spend — equals the fleet's `total_cost()`
+    pub grand_total: f64,
+    /// Jain's index over per-tenant totals (1.0 = everyone paid the
+    /// same; 1/n = one tenant footed the whole bill)
+    pub jain_cost: f64,
+}
+
+impl BillingReport {
+    /// Split a finished fleet's ledger by tenant.
+    pub fn from_fleet(out: &FleetOutcome) -> BillingReport {
+        let tenants: Vec<TenantBill> = out
+            .jobs
+            .iter()
+            .map(|j| {
+                let l = &j.outcome.ledger;
+                let p = &j.outcome.pricing;
+                TenantBill {
+                    tenant: j.tenant,
+                    class: j.goal.class(),
+                    lambda: l.lambda_compute,
+                    s3: l.s3_cost(p),
+                    param_store: l.param_store,
+                    vm: l.vm,
+                    profiling: l.profiling,
+                    total: j.outcome.total_cost(),
+                    warm_hits: j.outcome.warm_hits,
+                    cold_starts: j.outcome.cold_starts,
+                }
+            })
+            .collect();
+        // identical summation order to FleetOutcome::total_cost so the
+        // invoice reconciles bit-for-bit with the headline number
+        let tenant_total: f64 = out.jobs.iter().map(|j| j.outcome.total_cost()).sum();
+        let totals: Vec<f64> = tenants.iter().map(|t| t.total).collect();
+        BillingReport {
+            jain_cost: jain_index(&totals),
+            tenants,
+            tenant_total,
+            keepalive_cost: out.warm.keepalive_cost,
+            prewarm_spawn_cost: out.warm.spawn_cost,
+            grand_total: tenant_total + out.warm.total_cost(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemKind;
+    use crate::cluster::{ClusterParams, ClusterSim, TenantQuota};
+    use crate::coordinator::{SimJob, Workloads};
+    use crate::perfmodel::ModelProfile;
+    use crate::warm::WarmParams;
+
+    fn fleet(warm: WarmParams) -> FleetOutcome {
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 128,
+            warm,
+            ..Default::default()
+        });
+        for i in 0..3u64 {
+            let mut j = SimJob::new(
+                SystemKind::Smlt,
+                Workloads::static_run(ModelProfile::resnet18(), 10, 128),
+            );
+            j.seed = 800 + i;
+            sim.submit(j, i as f64 * 200.0, TenantQuota::unlimited());
+        }
+        sim.run()
+    }
+
+    #[test]
+    fn invoice_reconciles_with_fleet_total() {
+        for warm in [WarmParams::default(), WarmParams::enabled()] {
+            let out = fleet(warm);
+            let bill = BillingReport::from_fleet(&out);
+            assert_eq!(bill.tenants.len(), 3);
+            assert_eq!(
+                bill.grand_total.to_bits(),
+                out.total_cost().to_bits(),
+                "the invoice must reconcile exactly with the headline cost"
+            );
+            for t in &bill.tenants {
+                let lines = t.lambda + t.s3 + t.param_store + t.vm;
+                assert!(
+                    (lines - t.total).abs() < 1e-9,
+                    "tenant {}: lines {} != total {}",
+                    t.tenant,
+                    lines,
+                    t.total
+                );
+                assert!(t.profiling <= t.total + 1e-12);
+            }
+            assert!(bill.jain_cost > 0.0 && bill.jain_cost <= 1.0);
+        }
+    }
+
+    #[test]
+    fn warm_spend_is_account_level_not_tenant_level() {
+        let out = fleet(WarmParams::enabled());
+        let bill = BillingReport::from_fleet(&out);
+        if out.warm.hits > 0 {
+            assert!(bill.keepalive_cost > 0.0);
+        }
+        assert!(
+            (bill.grand_total - bill.tenant_total
+                - bill.keepalive_cost
+                - bill.prewarm_spawn_cost)
+                .abs()
+                < 1e-12
+        );
+    }
+}

@@ -1,8 +1,11 @@
 //! Run metrics: per-iteration records + aggregation for EXPERIMENTS.md,
-//! plus per-tenant fairness / shock-degradation roll-ups ([`fairness`]).
+//! per-tenant fairness / shock-degradation roll-ups ([`fairness`]), and
+//! the per-tenant billing view of a fleet run ([`billing`]).
 
+pub mod billing;
 pub mod fairness;
 
+pub use billing::{BillingReport, TenantBill};
 pub use fairness::{dominant_share, jain_index, FairnessReport, SloMiss, TenantFairness};
 
 use crate::util::json::Json;

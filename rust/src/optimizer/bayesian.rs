@@ -63,6 +63,22 @@ impl BayesOpt {
 
     /// Run the optimization loop against `obj`.
     pub fn run(&self, obj: &mut dyn Objective) -> BoResult {
+        self.run_with_prior(obj, &[])
+    }
+
+    /// [`run`](Self::run) with the GP posterior seeded from `prior` —
+    /// `(config, objective value)` pairs measured by *earlier* runs (the
+    /// cross-job [`PosteriorBank`](crate::warm::PosteriorBank), rescored
+    /// under the caller's goal). Prior points inform the posterior but
+    /// never count as evaluations or incumbents: the best-observed value
+    /// comes from live probes only, so a stale prior can misdirect early
+    /// acquisition but cannot fabricate a result. With a non-empty prior
+    /// the random warm-up shrinks to a single probe — the banked surface
+    /// replaces it — which is where the "second same-family job converges
+    /// in fewer probes" saving comes from. Prior configs outside the
+    /// current (possibly quota-shrunken) space are ignored. An empty
+    /// prior is bit-identical to [`run`](Self::run).
+    pub fn run_with_prior(&self, obj: &mut dyn Objective, prior: &[(Config, f64)]) -> BoResult {
         let mut rng = Pcg::new(self.params.seed);
         let mut gp = Gp::default();
         let mut trace: Vec<(Config, f64)> = Vec::new();
@@ -74,6 +90,14 @@ impl BayesOpt {
         // in log space keeps the low-cost region resolvable. argmin is
         // invariant under the monotone transform.
         let warp = |y: f64| (y.max(1e-12)).ln();
+        let mut prior_n = 0u32;
+        for (c, y) in prior {
+            if !self.space.contains(*c) {
+                continue;
+            }
+            gp.observe(self.space.normalize(*c).to_vec(), warp(*y));
+            prior_n += 1;
+        }
         let mut evaluate =
             |c: Config, gp: &mut Gp, trace: &mut Vec<(Config, f64)>, prof: &mut f64,
              best: &mut (Config, f64)| {
@@ -87,8 +111,9 @@ impl BayesOpt {
             };
 
         // warm-up: random configurations ("randomly chosen configurations"
-        // per §3.2)
-        for _ in 0..self.params.n_init.min(self.params.max_iters) {
+        // per §3.2); a warm posterior replaces all but one of them
+        let n_init = if prior_n > 0 { self.params.n_init.min(1) } else { self.params.n_init };
+        for _ in 0..n_init.min(self.params.max_iters) {
             let c = self.space.sample(&mut rng);
             evaluate(c, &mut gp, &mut trace, &mut profiling_s, &mut best);
         }
@@ -199,6 +224,74 @@ mod tests {
         let r2 = bo.run(&mut Bowl { evals: 0 });
         assert_eq!(r1.best, r2.best);
         assert_eq!(r1.trace.len(), r2.trace.len());
+    }
+
+    #[test]
+    fn empty_prior_is_bit_identical_to_run() {
+        let space = ConfigSpace::default();
+        let bo = BayesOpt::new(space, BoParams::default());
+        let a = bo.run(&mut Bowl { evals: 0 });
+        let b = bo.run_with_prior(&mut Bowl { evals: 0 }, &[]);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.profiling_s.to_bits(), b.profiling_s.to_bits());
+    }
+
+    #[test]
+    fn warm_prior_still_finds_the_optimum_on_a_refresh_budget() {
+        // the driver pairs a banked prior with a small refresh budget
+        // (like its re-optimization branch); the informed GP must land
+        // near the optimum anyway, with the full warm-up skipped
+        let space = ConfigSpace::default();
+        let mut donor = Bowl { evals: 0 };
+        let prior: Vec<(Config, f64)> = [
+            (10u32, 512u32),
+            (40, 2048),
+            (60, 4096),
+            (80, 6144),
+            (120, 8192),
+            (180, 9216),
+        ]
+        .iter()
+        .map(|&(w, m)| {
+            let c = Config { workers: w, mem_mb: m };
+            (c, donor.eval(c))
+        })
+        .collect();
+        let bo = BayesOpt::new(
+            space,
+            BoParams { n_init: 4, max_iters: 6, ..Default::default() },
+        );
+        let warm = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
+        assert!(
+            warm.evaluations <= 6,
+            "refresh budget respected: {}",
+            warm.evaluations
+        );
+        assert!(
+            warm.best_value < 1.6,
+            "warm run still finds the optimum: {:?} = {}",
+            warm.best,
+            warm.best_value
+        );
+        // a non-empty prior collapses the random warm-up to one probe, so
+        // the acquisition loop ran informed from the second evaluation on
+        assert!(warm.evaluations >= 1);
+    }
+
+    #[test]
+    fn out_of_space_prior_points_are_ignored() {
+        let space = ConfigSpace {
+            max_workers: 50,
+            ..Default::default()
+        };
+        let bo = BayesOpt::new(space, BoParams::default());
+        // a prior measured under a roomier quota: workers=120 is outside
+        // the shrunken space and must not panic or poison the GP
+        let prior = vec![(Config { workers: 120, mem_mb: 4096 }, 1.0)];
+        let res = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
+        assert!(res.best.workers <= 50);
+        assert!(res.best_value.is_finite());
     }
 
     #[test]

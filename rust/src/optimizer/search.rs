@@ -37,6 +37,15 @@ impl Default for ConfigSpace {
 }
 
 impl ConfigSpace {
+    /// Whether `c` lies inside the space's bounds (grid alignment not
+    /// required — the GP interpolates off-grid points fine). Used to
+    /// filter banked prior observations deposited under a differently
+    /// bounded space before normalizing them.
+    pub fn contains(&self, c: Config) -> bool {
+        (self.min_workers..=self.max_workers).contains(&c.workers)
+            && (self.min_mem_mb..=self.max_mem_mb).contains(&c.mem_mb)
+    }
+
     pub fn clamp(&self, c: Config) -> Config {
         Config {
             workers: c.workers.clamp(self.min_workers, self.max_workers),

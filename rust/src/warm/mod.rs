@@ -1,0 +1,349 @@
+//! Warm-start layer: fleet-wide container reuse, forecast-driven
+//! prewarming, and cross-job profiling-posterior sharing.
+//!
+//! The paper motivates SMLT partly by serverless ML's "need for repeated
+//! initialization": every fleet launch pays cold starts, framework init,
+//! and a from-scratch profiling search. On a platform *continuously
+//! hosting many* workflows those costs are largely avoidable — containers
+//! from a retiring fleet can serve the next launch of the same image, and
+//! a job's profiling measurements can seed the next same-family job's
+//! optimizer. Three pieces:
+//!
+//! - [`pool`] — the [`WarmPool`]: fleet-wide warm-container inventory
+//!   keyed by image, with TTL eviction, capacity caps, and keep-alive
+//!   (GB-second) accounting,
+//! - [`prewarm`] — [`PrewarmPolicy`]: arrival-forecast-driven
+//!   pre-provisioning (trade keep-alive spend for cold-start latency
+//!   ahead of predicted bursts),
+//! - [`posterior`] — the [`PosteriorBank`]: goal-agnostic profiling
+//!   measurements shared across jobs declaring the same model family, so
+//!   a repeat job's Bayesian search converges in fewer live probes.
+//!
+//! [`WarmState`] bundles all three into the piece of shared world state
+//! the cluster layer carries ([`ClusterEnv::warm`]); the **disabled**
+//! state (the default everywhere) is a strict no-op — checkouts return
+//! zero, check-ins vanish, the bank serves nothing — so every pre-warm
+//! code path is bit-identical to the golden traces unless a fleet opts
+//! in via [`ClusterParams::warm`].
+//!
+//! [`ClusterEnv::warm`]: crate::cluster::ClusterEnv
+//! [`ClusterParams::warm`]: crate::cluster::ClusterParams
+
+pub mod pool;
+pub mod posterior;
+pub mod prewarm;
+
+pub use pool::{ImageId, PoolConfig, WarmPool};
+pub use posterior::{BankConfig, FamilyId, FamilyObs, PosteriorBank};
+pub use prewarm::{PrewarmPolicy, PrewarmTarget};
+
+use crate::costmodel::Pricing;
+
+/// Fleet-level warm-start configuration: which of the three mechanisms a
+/// [`ClusterSim`](crate::cluster::ClusterSim) run enables. The default is
+/// everything off — the bit-identical golden path.
+#[derive(Clone, Debug, Default)]
+pub struct WarmParams {
+    /// warm-container pool (`None` = every launch pays full cold starts)
+    pub pool: Option<PoolConfig>,
+    /// forecast-driven prewarming (requires `pool`; ignored without it)
+    pub prewarm: Option<PrewarmPolicy>,
+    /// cross-job GP-prior sharing (`None` = every job profiles from
+    /// scratch)
+    pub bank: Option<BankConfig>,
+}
+
+impl WarmParams {
+    /// Pool + posterior bank with default knobs, no prewarming.
+    pub fn enabled() -> WarmParams {
+        WarmParams {
+            pool: Some(PoolConfig::default()),
+            prewarm: None,
+            bank: Some(BankConfig::default()),
+        }
+    }
+
+    /// Anything at all switched on?
+    pub fn any_enabled(&self) -> bool {
+        self.pool.is_some() || self.bank.is_some()
+    }
+}
+
+/// Warm-start world state carried by `ClusterEnv`: the pool, the bank,
+/// and the money the warming layer itself spends (prewarming spawns +
+/// keep-alive, which per-tenant ledgers cannot see).
+#[derive(Clone, Debug)]
+pub struct WarmState {
+    pool: Option<WarmPool>,
+    bank: Option<PosteriorBank>,
+    pricing: Pricing,
+    /// $ spent spawning prewarmed containers (accepted spawns only —
+    /// cap-rejected prewarm requests never start a container)
+    pub spawn_cost: f64,
+}
+
+impl WarmState {
+    /// The strict no-op state (the default world): every operation
+    /// returns "nothing warm, nothing banked" without consuming anything.
+    pub fn disabled() -> WarmState {
+        WarmState {
+            pool: None,
+            bank: None,
+            pricing: Pricing::default(),
+            spawn_cost: 0.0,
+        }
+    }
+
+    pub fn new(params: &WarmParams) -> WarmState {
+        WarmState {
+            pool: params.pool.clone().map(WarmPool::new),
+            bank: params.bank.clone().map(PosteriorBank::new),
+            pricing: Pricing::default(),
+            spawn_cost: 0.0,
+        }
+    }
+
+    pub fn pool_enabled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    pub fn bank_enabled(&self) -> bool {
+        self.bank.is_some()
+    }
+
+    /// The pool (when enabled) — prewarm ticks and reports go through it.
+    pub fn pool(&self) -> Option<&WarmPool> {
+        self.pool.as_ref()
+    }
+
+    /// The bank (when enabled) — drivers deposit and borrow through
+    /// [`bank_prior`](Self::bank_prior)/[`bank_deposit`](Self::bank_deposit).
+    pub fn bank(&self) -> Option<&PosteriorBank> {
+        self.bank.as_ref()
+    }
+
+    /// Take up to `want` warm containers of `image`; 0 when disabled.
+    pub fn checkout(&mut self, image: ImageId, want: u32, now: f64) -> u32 {
+        match self.pool.as_mut() {
+            Some(p) if want > 0 => p.checkout(image, want, now),
+            _ => 0,
+        }
+    }
+
+    /// Park `n` retiring containers of `image`; no-op when disabled.
+    pub fn checkin(&mut self, image: ImageId, mem_mb: u32, n: u32, now: f64) {
+        if let Some(p) = self.pool.as_mut() {
+            if n > 0 {
+                p.checkin(image, mem_mb, n, now);
+            }
+        }
+    }
+
+    /// Top `image` up to `desired` warm containers at `now`, spawning (and
+    /// billing) the shortfall. `cold_median_s` is the platform's median
+    /// cold start — what each spawn costs in Lambda compute. The target is
+    /// clamped to what the pool's capacity caps can actually hold, so a
+    /// forecast larger than the pool does not re-attempt (and re-reject)
+    /// the impossible remainder on every tick.
+    pub fn prewarm_to(&mut self, image: ImageId, mem_mb: u32, desired: u32, now: f64, cold_median_s: f64) {
+        let Some(p) = self.pool.as_mut() else { return };
+        p.evict_expired(now);
+        let have = p.parked_for(image);
+        let desired = desired.min(p.cfg.per_image_cap);
+        if desired <= have {
+            return;
+        }
+        let total_room = p.cfg.total_cap.saturating_sub(p.parked_total());
+        let want = (desired - have).min(total_room);
+        if want == 0 {
+            return;
+        }
+        let spawned = p.prewarm(image, mem_mb, want, now);
+        self.spawn_cost += self.pricing.lambda_cost(spawned, mem_mb, cold_median_s);
+    }
+
+    /// Fraction of framework init a fully warm fleet still pays (1.0 when
+    /// the pool is disabled — full init, the golden path).
+    pub fn warm_init_fraction(&self) -> f64 {
+        self.pool.as_ref().map_or(1.0, |p| p.cfg.warm_init_fraction)
+    }
+
+    /// Warm-start median/sigma the platform samples for pooled workers
+    /// (cold-start values when disabled; never consulted in that case).
+    pub fn warm_start_dist(&self) -> (f64, f64) {
+        self.pool
+            .as_ref()
+            .map_or((0.0, 0.0), |p| (p.cfg.warm_start_median_s, p.cfg.warm_start_sigma))
+    }
+
+    /// Newest banked measurements for `family` (empty when disabled).
+    /// The caller filters these and reports actual usage via
+    /// [`bank_note_served`](Self::bank_note_served).
+    pub fn bank_prior(&self, family: FamilyId) -> Vec<FamilyObs> {
+        self.bank.as_ref().map_or_else(Vec::new, |b| b.prior(family))
+    }
+
+    /// Record that `n` banked observations actually seeded a GP.
+    pub fn bank_note_served(&mut self, n: u64) {
+        if let Some(b) = self.bank.as_mut() {
+            b.note_served(n);
+        }
+    }
+
+    /// Bank one measurement for `family`; no-op when disabled.
+    pub fn bank_deposit(&mut self, family: FamilyId, obs: FamilyObs) {
+        if let Some(b) = self.bank.as_mut() {
+            b.deposit(family, obs);
+        }
+    }
+
+    /// Bill containers still parked at end of run (see [`WarmPool::drain`]).
+    pub fn finalize(&mut self, now: f64) {
+        if let Some(p) = self.pool.as_mut() {
+            p.drain(now);
+        }
+    }
+
+    /// Snapshot for [`FleetOutcome`](crate::cluster::FleetOutcome).
+    pub fn report(&self) -> WarmReport {
+        let (hits, misses, evictions, rejected, checkins, prewarmed, parked_peak, gb_s) =
+            match self.pool.as_ref() {
+                Some(p) => (
+                    p.hits,
+                    p.misses,
+                    p.evictions,
+                    p.rejected,
+                    p.checkins,
+                    p.prewarmed,
+                    p.parked_peak,
+                    p.keepalive_gb_s,
+                ),
+                None => (0, 0, 0, 0, 0, 0, 0, 0.0),
+            };
+        WarmReport {
+            enabled: self.pool.is_some(),
+            hits,
+            misses,
+            evictions,
+            rejected,
+            checkins,
+            prewarm_spawns: prewarmed,
+            parked_peak,
+            keepalive_gb_s: gb_s,
+            keepalive_cost: self.pricing.provisioned_cost(gb_s),
+            spawn_cost: self.spawn_cost,
+            bank_deposits: self.bank.as_ref().map_or(0, |b| b.deposits),
+            bank_prior_served: self.bank.as_ref().map_or(0, |b| b.prior_served),
+        }
+    }
+}
+
+/// What the warm layer did during one fleet run (all zeros when
+/// disabled). `keepalive_cost + spawn_cost` is the money the layer spent
+/// to buy `hits` warm launches — the trade `fig16_warm_pool` sweeps.
+#[derive(Clone, Debug)]
+pub struct WarmReport {
+    /// whether a pool was configured at all
+    pub enabled: bool,
+    /// warm containers handed to launching fleets
+    pub hits: u64,
+    /// requested containers the pool could not cover (cold starts paid)
+    pub misses: u64,
+    /// containers dropped by TTL expiry (incl. end-of-run drain)
+    pub evictions: u64,
+    /// check-ins bounced off a capacity cap
+    pub rejected: u64,
+    /// containers accepted into the pool
+    pub checkins: u64,
+    /// containers the prewarmer spawned into the pool (subset of
+    /// `checkins`; cap-rejected prewarm requests spawn nothing)
+    pub prewarm_spawns: u64,
+    /// high-water mark of parked containers
+    pub parked_peak: u32,
+    /// keep-alive GB-seconds accrued by parked containers
+    pub keepalive_gb_s: f64,
+    /// the above priced at the provisioned-concurrency rate ($)
+    pub keepalive_cost: f64,
+    /// $ spent spawning prewarmed containers
+    pub spawn_cost: f64,
+    /// measurements deposited into the posterior bank
+    pub bank_deposits: u64,
+    /// banked observations served as GP priors
+    pub bank_prior_served: u64,
+}
+
+impl WarmReport {
+    /// Money the warm layer itself spent (billed to the account, not to
+    /// any tenant's ledger).
+    pub fn total_cost(&self) -> f64 {
+        self.keepalive_cost + self.spawn_cost
+    }
+
+    /// End-of-run conservation: the pool is drained at collect time, so
+    /// every accepted container must have been either reused or evicted.
+    pub fn conserves(&self) -> bool {
+        self.checkins == self.hits + self.evictions
+    }
+
+    /// Fraction of requested containers served warm (0 when nothing was
+    /// requested).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_state_is_a_strict_noop() {
+        let mut w = WarmState::disabled();
+        assert_eq!(w.checkout(1, 8, 0.0), 0);
+        w.checkin(1, 2048, 8, 0.0);
+        assert_eq!(w.checkout(1, 8, 1.0), 0, "check-ins vanish");
+        assert!(w.bank_prior(1).is_empty());
+        w.prewarm_to(1, 2048, 16, 0.0, 0.35);
+        w.finalize(100.0);
+        let r = w.report();
+        assert!(!r.enabled);
+        assert_eq!(r.hits + r.misses + r.checkins + r.prewarm_spawns, 0);
+        assert_eq!(r.total_cost(), 0.0);
+        assert_eq!(r.hit_rate(), 0.0);
+        assert_eq!(w.warm_init_fraction(), 1.0);
+    }
+
+    #[test]
+    fn enabled_state_round_trips_containers() {
+        let mut w = WarmState::new(&WarmParams::enabled());
+        w.checkin(1, 1024, 8, 0.0);
+        assert_eq!(w.checkout(1, 6, 10.0), 6);
+        w.finalize(50.0);
+        let r = w.report();
+        assert!(r.enabled);
+        assert_eq!(r.hits, 6);
+        assert_eq!(r.misses, 0);
+        assert_eq!(r.evictions, 2, "drain evicts the stragglers");
+        assert!(r.keepalive_cost > 0.0);
+        assert_eq!(r.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn prewarm_tops_up_and_bills() {
+        let mut w = WarmState::new(&WarmParams::enabled());
+        w.prewarm_to(5, 2048, 10, 0.0, 0.35);
+        assert_eq!(w.report().prewarm_spawns, 10);
+        assert!(w.spawn_cost > 0.0);
+        // already at target: nothing new spawned, nothing new billed
+        let cost_before = w.spawn_cost;
+        w.prewarm_to(5, 2048, 10, 1.0, 0.35);
+        assert_eq!(w.report().prewarm_spawns, 10);
+        assert_eq!(w.spawn_cost, cost_before);
+        assert_eq!(w.checkout(5, 10, 2.0), 10);
+    }
+}

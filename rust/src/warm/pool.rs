@@ -1,0 +1,343 @@
+//! Fleet-wide warm-container pool with TTL eviction and keep-alive
+//! accounting.
+//!
+//! A FaaS account that continuously hosts ML workflows does not pay a
+//! fresh cold start per invocation: containers that just finished an
+//! invocation stay resident for a while and the platform (or an explicit
+//! provisioned-concurrency spend) can keep them warm. The [`WarmPool`]
+//! models that fleet-wide container inventory, keyed by **container
+//! image** (runtime + framework + model artifact — the part of
+//! initialization the image actually determines): tenants whose jobs
+//! declare the same image share each other's retired containers.
+//!
+//! Lifecycle of one container through the pool:
+//!
+//! 1. **check-in** — a retiring fleet (phase end, reconfiguration,
+//!    preemption) parks its containers; capacity caps (per image and
+//!    total) reject the overflow outright,
+//! 2. **parked** — the container accrues keep-alive GB-seconds until it
+//!    is reused or its TTL expires,
+//! 3. **check-out** — a launching fleet takes matching containers
+//!    most-recently-parked first (freshest residual TTL) and pays a warm
+//!    init-time distribution instead of a cold start,
+//! 4. **eviction** — containers past the TTL are dropped at the next
+//!    pool interaction, having billed exactly `ttl_s` of keep-alive.
+//!
+//! The pool never touches the account's concurrency slots — idle warm
+//! containers do not count against the concurrency limit (matching real
+//! FaaS semantics), they only cost keep-alive money. All operations are
+//! deterministic: the same call sequence yields bit-identical counters,
+//! which the warm property suite pins down, along with the conservation
+//! identity `checkins == parked + hits + evictions`.
+
+use std::collections::BTreeMap;
+
+/// Container-image identity: jobs declaring the same id share warm
+/// containers. See [`SimJob::image_id`](crate::coordinator::SimJob::image_id)
+/// for the default derivation.
+pub type ImageId = u64;
+
+/// Knobs for a [`WarmPool`].
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// seconds a parked container stays warm before eviction
+    pub ttl_s: f64,
+    /// most containers parked per image at once (overflow is rejected)
+    pub per_image_cap: u32,
+    /// most containers parked fleet-wide at once
+    pub total_cap: u32,
+    /// median warm-start delay (s) a checked-out container pays instead
+    /// of the platform's cold start (Lambda warm invokes are ~10s of ms)
+    pub warm_start_median_s: f64,
+    /// lognormal sigma of the warm-start delay
+    pub warm_start_sigma: f64,
+    /// fraction of the framework/model init a **fully warm** fleet still
+    /// pays (process and framework already resident; only per-phase state
+    /// reloads). A partially warm fleet pays full init — training is
+    /// gang-scheduled, so the barrier waits for its coldest worker.
+    pub warm_init_fraction: f64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            ttl_s: 600.0,
+            per_image_cap: 256,
+            total_cap: 1024,
+            warm_start_median_s: 0.02,
+            warm_start_sigma: 0.30,
+            warm_init_fraction: 0.10,
+        }
+    }
+}
+
+/// One parked container.
+#[derive(Clone, Copy, Debug)]
+struct Parked {
+    image: ImageId,
+    /// memory the container was configured with — keep-alive bills by it
+    mem_mb: u32,
+    /// virtual time the container entered the pool
+    since_s: f64,
+}
+
+/// The fleet-wide warm-container inventory (see the module docs).
+///
+/// # Examples
+///
+/// ```
+/// use smlt::warm::{PoolConfig, WarmPool};
+///
+/// let mut pool = WarmPool::new(PoolConfig { ttl_s: 300.0, ..Default::default() });
+/// // a retiring 8-worker fleet parks its containers at t=100s
+/// pool.checkin(42, 3072, 8, 100.0);
+/// // a 4-worker launch of the same image at t=200s reuses four of them
+/// assert_eq!(pool.checkout(42, 4, 200.0), 4);
+/// // a different image finds nothing warm
+/// assert_eq!(pool.checkout(7, 4, 200.0), 0);
+/// // past the TTL the rest are evicted instead of reused
+/// assert_eq!(pool.checkout(42, 4, 500.0), 0);
+/// assert_eq!(pool.evictions, 4);
+/// ```
+#[derive(Clone, Debug)]
+pub struct WarmPool {
+    pub cfg: PoolConfig,
+    /// parked containers in check-in order (virtual times interleave
+    /// across drivers, so this is call order, not sorted time)
+    parked: Vec<Parked>,
+    per_image: BTreeMap<ImageId, u32>,
+    /// containers accepted into the pool (retired fleets + prewarms)
+    pub checkins: u64,
+    /// check-in attempts bounced off a capacity cap
+    pub rejected: u64,
+    /// containers handed to launching fleets while still warm
+    pub hits: u64,
+    /// requested containers the pool could not cover (cold starts)
+    pub misses: u64,
+    /// containers dropped by TTL expiry
+    pub evictions: u64,
+    /// containers entered via [`prewarm`](Self::prewarm) (subset of
+    /// `checkins`)
+    pub prewarmed: u64,
+    /// high-water mark of parked containers
+    pub parked_peak: u32,
+    /// accrued keep-alive GB-seconds (billed via
+    /// [`Pricing::provisioned_cost`](crate::costmodel::Pricing::provisioned_cost))
+    pub keepalive_gb_s: f64,
+}
+
+impl WarmPool {
+    pub fn new(cfg: PoolConfig) -> WarmPool {
+        WarmPool {
+            cfg,
+            parked: Vec::new(),
+            per_image: BTreeMap::new(),
+            checkins: 0,
+            rejected: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            prewarmed: 0,
+            parked_peak: 0,
+            keepalive_gb_s: 0.0,
+        }
+    }
+
+    /// Containers currently parked (all images).
+    pub fn parked_total(&self) -> u32 {
+        self.parked.len() as u32
+    }
+
+    /// Containers currently parked for `image`.
+    pub fn parked_for(&self, image: ImageId) -> u32 {
+        self.per_image.get(&image).copied().unwrap_or(0)
+    }
+
+    /// Keep-alive a container accrued from `since_s` to `leave_s`,
+    /// clamped to `[0, ttl]` — the fleet's virtual frontier interleaves
+    /// drivers, so a checkout can observe a container parked by a driver
+    /// whose own clock ran ahead.
+    fn accrue(&mut self, c: Parked, leave_s: f64) {
+        let dwell = (leave_s - c.since_s).clamp(0.0, self.cfg.ttl_s);
+        self.keepalive_gb_s += dwell * c.mem_mb as f64 / 1024.0;
+    }
+
+    /// Drop every container whose TTL expired by `now`, billing each for
+    /// its full TTL of keep-alive.
+    pub fn evict_expired(&mut self, now: f64) {
+        let ttl = self.cfg.ttl_s;
+        let mut i = 0;
+        while i < self.parked.len() {
+            if self.parked[i].since_s + ttl <= now {
+                let c = self.parked.remove(i);
+                *self.per_image.get_mut(&c.image).expect("image count") -= 1;
+                self.accrue(c, c.since_s + ttl);
+                self.evictions += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn park(&mut self, image: ImageId, mem_mb: u32, n: u32, now: f64, prewarm: bool) -> u32 {
+        self.evict_expired(now);
+        let mut accepted = 0;
+        for _ in 0..n {
+            let image_room = self.parked_for(image) < self.cfg.per_image_cap;
+            let total_room = self.parked_total() < self.cfg.total_cap;
+            if !(image_room && total_room) {
+                self.rejected += 1;
+                continue;
+            }
+            self.parked.push(Parked { image, mem_mb, since_s: now });
+            *self.per_image.entry(image).or_insert(0) += 1;
+            self.checkins += 1;
+            if prewarm {
+                self.prewarmed += 1;
+            }
+            accepted += 1;
+        }
+        self.parked_peak = self.parked_peak.max(self.parked_total());
+        accepted
+    }
+
+    /// Park `n` containers of `image` retired by a fleet at virtual time
+    /// `now`; returns how many the capacity caps accepted.
+    pub fn checkin(&mut self, image: ImageId, mem_mb: u32, n: u32, now: f64) -> u32 {
+        self.park(image, mem_mb, n, now, false)
+    }
+
+    /// Pre-provision `n` containers of `image` (forecast-driven warming);
+    /// same capacity rules as [`checkin`](Self::checkin).
+    pub fn prewarm(&mut self, image: ImageId, mem_mb: u32, n: u32, now: f64) -> u32 {
+        self.park(image, mem_mb, n, now, true)
+    }
+
+    /// Take up to `want` warm containers of `image` for a fleet launching
+    /// at `now`, most-recently-parked first (freshest residual TTL).
+    /// Returns the number actually taken; the shortfall is counted as
+    /// misses (cold starts).
+    pub fn checkout(&mut self, image: ImageId, want: u32, now: f64) -> u32 {
+        self.evict_expired(now);
+        let mut taken = 0;
+        let mut i = self.parked.len();
+        while taken < want && i > 0 {
+            i -= 1;
+            if self.parked[i].image != image {
+                continue;
+            }
+            let c = self.parked.remove(i);
+            *self.per_image.get_mut(&c.image).expect("image count") -= 1;
+            self.accrue(c, now);
+            taken += 1;
+        }
+        self.hits += taken as u64;
+        self.misses += (want - taken) as u64;
+        taken
+    }
+
+    /// Bill the containers still parked at the end of a run (dwell up to
+    /// `now`, TTL-capped) and drop them. Call once, when the fleet's last
+    /// job finishes.
+    pub fn drain(&mut self, now: f64) {
+        while let Some(c) = self.parked.pop() {
+            *self.per_image.get_mut(&c.image).expect("image count") -= 1;
+            self.accrue(c, now);
+            self.evictions += 1;
+        }
+    }
+
+    /// The conservation identity every pool state must satisfy: each
+    /// accepted container is still parked, was reused, or was evicted.
+    pub fn conserves(&self) -> bool {
+        self.checkins == self.parked_total() as u64 + self.hits + self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(ttl: f64) -> WarmPool {
+        WarmPool::new(PoolConfig { ttl_s: ttl, ..Default::default() })
+    }
+
+    #[test]
+    fn hit_then_miss_accounting() {
+        let mut p = pool(600.0);
+        assert_eq!(p.checkin(1, 2048, 6, 0.0), 6);
+        assert_eq!(p.checkout(1, 4, 10.0), 4);
+        assert_eq!(p.checkout(1, 4, 10.0), 2, "only two left");
+        assert_eq!(p.hits, 6);
+        assert_eq!(p.misses, 2);
+        assert_eq!(p.parked_total(), 0);
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn images_do_not_mix() {
+        let mut p = pool(600.0);
+        p.checkin(1, 1024, 3, 0.0);
+        p.checkin(2, 1024, 3, 0.0);
+        assert_eq!(p.checkout(1, 5, 1.0), 3);
+        assert_eq!(p.parked_for(2), 3);
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn ttl_evicts_and_bills_exactly_ttl() {
+        let mut p = pool(100.0);
+        p.checkin(1, 1024, 2, 0.0);
+        assert_eq!(p.checkout(1, 2, 100.0), 0, "expired at exactly ttl");
+        assert_eq!(p.evictions, 2);
+        // 2 containers x 100 s x 1 GB
+        assert!((p.keepalive_gb_s - 200.0).abs() < 1e-9);
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn capacity_caps_reject_overflow() {
+        let mut p = WarmPool::new(PoolConfig {
+            per_image_cap: 2,
+            total_cap: 3,
+            ..Default::default()
+        });
+        assert_eq!(p.checkin(1, 1024, 5, 0.0), 2, "per-image cap");
+        assert_eq!(p.checkin(2, 1024, 5, 0.0), 1, "total cap");
+        assert_eq!(p.rejected, 7);
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn checkout_prefers_freshest() {
+        let mut p = pool(100.0);
+        p.checkin(1, 1024, 1, 0.0);
+        p.checkin(1, 1024, 1, 90.0);
+        // at t=95 both are alive; the t=90 container is taken first and
+        // bills 5 s, the t=0 one stays (and expires 5 s later)
+        assert_eq!(p.checkout(1, 1, 95.0), 1);
+        assert!((p.keepalive_gb_s - 5.0).abs() < 1e-9);
+        assert_eq!(p.checkout(1, 1, 101.0), 0);
+        assert_eq!(p.evictions, 1);
+    }
+
+    #[test]
+    fn drain_bills_residuals() {
+        let mut p = pool(600.0);
+        p.checkin(1, 2048, 2, 0.0);
+        p.drain(50.0);
+        assert_eq!(p.parked_total(), 0);
+        // 2 x 50 s x 2 GB
+        assert!((p.keepalive_gb_s - 200.0).abs() < 1e-9);
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn out_of_order_virtual_times_clamp() {
+        let mut p = pool(600.0);
+        // parked by a driver whose clock ran ahead of the checkout's
+        p.checkin(1, 1024, 1, 500.0);
+        assert_eq!(p.checkout(1, 1, 400.0), 1);
+        assert_eq!(p.keepalive_gb_s, 0.0, "negative dwell clamps to zero");
+    }
+}

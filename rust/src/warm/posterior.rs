@@ -1,0 +1,179 @@
+//! Cross-job profiling-posterior bank: GP priors shared between jobs
+//! training similar models.
+//!
+//! SMLT's Bayesian optimizer profiles a handful of ⟨workers, memory⟩
+//! configurations per job (§3.2). On a platform continuously hosting many
+//! workflows, much of that spend is redundant: a tenant's second ResNet
+//! job re-measures the same performance surface its first job already
+//! mapped. The [`PosteriorBank`] keeps the *physical* measurements —
+//! per-iteration time and cost at a configuration — keyed by a declared
+//! **model family**, so a later job can seed its GP posterior with them
+//! and stop after far fewer live probes.
+//!
+//! Two design points worth noting:
+//!
+//! - The bank stores `(config, iter_s, iter_cost)` rather than objective
+//!   values. Objectives are goal- and phase-length-dependent (a Deadline
+//!   penalty baked into a banked value would poison a Budget job); the
+//!   physical quantities are goal-agnostic, and the borrowing job rescores
+//!   them under its *own* goal before seeding its GP (see
+//!   [`goal_score`](crate::coordinator::simrun) usage in the driver).
+//! - Priors are advisory, not incumbents: the optimizer seeds its GP with
+//!   them but only counts live evaluations toward the best-observed value,
+//!   so a stale prior can misdirect early probes but never masquerade as a
+//!   measurement.
+
+use crate::optimizer::Config;
+use std::collections::BTreeMap;
+
+/// Model-family identity: jobs declaring the same id trust each other's
+/// profiling measurements as GP priors.
+pub type FamilyId = u64;
+
+/// One banked profiling measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct FamilyObs {
+    /// configuration that was profiled
+    pub cfg: Config,
+    /// global batch size the measurement was taken under — per-iteration
+    /// time scales with it, so a borrowing phase only trusts
+    /// measurements from the same batch regime (the driver filters)
+    pub global_batch: u32,
+    /// measured per-iteration time (compute + comm, seconds)
+    pub iter_s: f64,
+    /// measured per-iteration cost ($)
+    pub iter_cost: f64,
+}
+
+/// Knobs for a [`PosteriorBank`].
+#[derive(Clone, Debug)]
+pub struct BankConfig {
+    /// observations kept per family (FIFO beyond this)
+    pub max_per_family: usize,
+    /// most observations served as a prior to one optimization run
+    pub max_prior: usize,
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        BankConfig { max_per_family: 32, max_prior: 12 }
+    }
+}
+
+/// The shared measurement store (see the module docs).
+///
+/// # Examples
+///
+/// ```
+/// use smlt::optimizer::Config;
+/// use smlt::warm::{BankConfig, FamilyObs, PosteriorBank};
+///
+/// let mut bank = PosteriorBank::new(BankConfig::default());
+/// bank.deposit(7, FamilyObs {
+///     cfg: Config { workers: 32, mem_mb: 3072 },
+///     global_batch: 256,
+///     iter_s: 1.4,
+///     iter_cost: 0.002,
+/// });
+/// // a later job of family 7 seeds its GP from the banked point
+/// assert_eq!(bank.prior(7).len(), 1);
+/// assert!(bank.prior(8).is_empty(), "families do not mix");
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct PosteriorBank {
+    cfg: BankConfig,
+    families: BTreeMap<FamilyId, Vec<FamilyObs>>,
+    /// measurements deposited over the bank's lifetime
+    pub deposits: u64,
+    /// observations served as priors (warm-posterior evidence)
+    pub prior_served: u64,
+}
+
+impl PosteriorBank {
+    pub fn new(cfg: BankConfig) -> PosteriorBank {
+        PosteriorBank { cfg, ..Default::default() }
+    }
+
+    /// Families with at least one banked measurement.
+    pub fn n_families(&self) -> usize {
+        self.families.len()
+    }
+
+    /// Banked measurements for `family` (newest last).
+    pub fn observations(&self, family: FamilyId) -> &[FamilyObs] {
+        self.families.get(&family).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Record one profiling measurement for `family`, evicting the oldest
+    /// beyond the per-family cap.
+    pub fn deposit(&mut self, family: FamilyId, obs: FamilyObs) {
+        let v = self.families.entry(family).or_default();
+        v.push(obs);
+        if v.len() > self.cfg.max_per_family {
+            v.remove(0);
+        }
+        self.deposits += 1;
+    }
+
+    /// The newest banked measurements for `family`, capped at
+    /// `max_prior` — what a fresh optimization run seeds its GP with.
+    /// Does NOT bump `prior_served`: the borrower still filters these
+    /// (quota-capped space, batch regime) and reports what it actually
+    /// used via [`note_served`](Self::note_served).
+    pub fn prior(&self, family: FamilyId) -> Vec<FamilyObs> {
+        let Some(v) = self.families.get(&family) else {
+            return Vec::new();
+        };
+        let take = v.len().min(self.cfg.max_prior);
+        v[v.len() - take..].to_vec()
+    }
+
+    /// Record that `n` banked observations were actually fed to a GP
+    /// (after the borrower's own filtering).
+    pub fn note_served(&mut self, n: u64) {
+        self.prior_served += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(workers: u32, iter_s: f64) -> FamilyObs {
+        FamilyObs {
+            cfg: Config { workers, mem_mb: 2048 },
+            global_batch: 128,
+            iter_s,
+            iter_cost: 0.001 * iter_s,
+        }
+    }
+
+    #[test]
+    fn per_family_cap_is_fifo() {
+        let mut b = PosteriorBank::new(BankConfig { max_per_family: 3, max_prior: 8 });
+        for i in 0..5 {
+            b.deposit(1, obs(2 + 2 * i, i as f64));
+        }
+        let kept = b.observations(1);
+        assert_eq!(kept.len(), 3);
+        assert_eq!(kept[0].cfg.workers, 6, "oldest two evicted");
+        assert_eq!(b.deposits, 5);
+    }
+
+    #[test]
+    fn prior_serves_newest_and_counts_only_what_was_used() {
+        let mut b = PosteriorBank::new(BankConfig { max_per_family: 10, max_prior: 2 });
+        for i in 0..4 {
+            b.deposit(9, obs(2 + 2 * i, i as f64));
+        }
+        let p = b.prior(9);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].iter_s, 2.0);
+        assert_eq!(p[1].iter_s, 3.0);
+        assert_eq!(b.prior_served, 0, "looking is not using");
+        b.note_served(p.len() as u64);
+        assert_eq!(b.prior_served, 2);
+        assert!(b.prior(42).is_empty());
+        assert_eq!(b.n_families(), 1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Forecast-driven prewarming: pre-provision warm containers ahead of
+//! predicted arrival bursts.
+//!
+//! Reactive warm reuse only helps the *second* fleet of an image; the
+//! first wave of a diurnal burst still pays full cold starts. A
+//! [`PrewarmPolicy`] closes that gap the way provisioned concurrency
+//! does on real platforms: the operator declares which images to keep
+//! warm ([`PrewarmTarget`]) and an arrival forecast (any
+//! [`ArrivalProcess`] — the diurnal schedule for daily load shapes, a
+//! replayed trace for recorded tenants); on a fixed tick the fleet
+//! scheduler tops the pool up to the forecast-implied target, paying
+//! spawn cost now and keep-alive until the burst lands, in exchange for
+//! the burst's fleets launching warm.
+//!
+//! The trade is explicit and measurable: prewarming moves money from
+//! cold-start latency (which threatens deadlines) to keep-alive spend
+//! (which the [`WarmReport`](super::WarmReport) itemizes), and
+//! `benches/fig16_warm_pool.rs` sweeps both sides of it.
+
+use super::pool::ImageId;
+use crate::cluster::ArrivalProcess;
+
+/// One image the operator keeps warm.
+#[derive(Clone, Debug)]
+pub struct PrewarmTarget {
+    /// container image to pre-provision
+    pub image: ImageId,
+    /// memory the prewarmed containers are configured with (MB) — what
+    /// keep-alive bills by
+    pub mem_mb: u32,
+    /// containers one arriving job of this image is expected to want
+    /// (its typical fleet size)
+    pub workers_per_job: u32,
+    /// hard cap on containers kept warm for this image
+    pub max_warm: u32,
+}
+
+/// A forecast-driven prewarming schedule (see the module docs).
+///
+/// # Examples
+///
+/// ```
+/// use smlt::cluster::ArrivalProcess;
+/// use smlt::warm::{PrewarmPolicy, PrewarmTarget};
+///
+/// let policy = PrewarmPolicy {
+///     forecast: ArrivalProcess::Poisson { rate_per_s: 1.0 / 100.0, seed: 1 },
+///     lead_s: 200.0,
+///     tick_s: 60.0,
+///     targets: vec![PrewarmTarget { image: 42, mem_mb: 3072, workers_per_job: 8, max_warm: 64 }],
+/// };
+/// // 2 expected arrivals in the 200 s lead window x 8 workers each
+/// assert_eq!(policy.desired(&policy.targets[0], 0.0), 16);
+/// ```
+#[derive(Clone, Debug)]
+pub struct PrewarmPolicy {
+    /// the operator's model of upcoming job arrivals; deterministic
+    /// schedules double as perfect forecasts, which makes the bench's
+    /// pool-on/pool-off comparison a clean upper bound on prewarming value
+    pub forecast: ArrivalProcess,
+    /// how far ahead the forecast looks (seconds): containers are wanted
+    /// warm for jobs arriving within `[now, now + lead_s]`
+    pub lead_s: f64,
+    /// how often the fleet scheduler re-evaluates the targets (seconds,
+    /// must be > 0)
+    pub tick_s: f64,
+    /// images to keep warm
+    pub targets: Vec<PrewarmTarget>,
+}
+
+impl PrewarmPolicy {
+    /// Containers `target` should have warm at virtual time `now`:
+    /// expected arrivals in the lead window times the per-job fleet size,
+    /// capped at the target's `max_warm`.
+    pub fn desired(&self, target: &PrewarmTarget, now: f64) -> u32 {
+        let expected = self.forecast.expected_arrivals(now, now + self.lead_s.max(0.0));
+        let want = (expected * target.workers_per_job as f64).ceil();
+        (want.max(0.0) as u32).min(target.max_warm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target(max_warm: u32) -> PrewarmTarget {
+        PrewarmTarget { image: 1, mem_mb: 2048, workers_per_job: 10, max_warm }
+    }
+
+    #[test]
+    fn desired_scales_with_forecast_rate() {
+        let p = PrewarmPolicy {
+            forecast: ArrivalProcess::Poisson { rate_per_s: 0.01, seed: 3 },
+            lead_s: 300.0,
+            tick_s: 60.0,
+            targets: vec![target(1000)],
+        };
+        // 3 expected arrivals x 10 workers
+        assert_eq!(p.desired(&p.targets[0], 0.0), 30);
+        assert_eq!(p.desired(&p.targets[0], 1e6), 30, "Poisson is stationary");
+    }
+
+    #[test]
+    fn desired_respects_max_warm() {
+        let p = PrewarmPolicy {
+            forecast: ArrivalProcess::Poisson { rate_per_s: 1.0, seed: 3 },
+            lead_s: 100.0,
+            tick_s: 60.0,
+            targets: vec![target(16)],
+        };
+        assert_eq!(p.desired(&p.targets[0], 0.0), 16);
+    }
+
+    #[test]
+    fn trace_forecast_counts_the_window() {
+        let p = PrewarmPolicy {
+            forecast: ArrivalProcess::Trace(vec![10.0, 20.0, 500.0]),
+            lead_s: 100.0,
+            tick_s: 50.0,
+            targets: vec![target(1000)],
+        };
+        assert_eq!(p.desired(&p.targets[0], 0.0), 20, "two arrivals in [0,100)");
+        assert_eq!(p.desired(&p.targets[0], 450.0), 10, "one in [450,550)");
+        assert_eq!(p.desired(&p.targets[0], 600.0), 0);
+    }
+}

@@ -87,6 +87,7 @@ fn random_fleet(rng: &mut smlt::util::rng::Pcg) -> ClusterSim {
         account_limit,
         storage_saturation_workers: 64.0 + rng.uniform(0.0, 512.0),
         preemption: rng.next_f64() < 0.7,
+        ..Default::default()
     });
     let n_jobs = 2 + rng.below(4) as usize;
     let goals = [
@@ -147,9 +148,13 @@ fn prop_capacity_step_down_conserves_slots() {
         let account_limit = 64 + rng.below(192) as u32;
         let shock_to = 4 + rng.below(12) as u32;
         let shock_at = 60.0 + rng.uniform(0.0, 600.0);
-        let arbiter = match rng.below(3) {
+        let arbiter = match rng.below(4) {
             0 => ArbiterKind::GoalClass,
             1 => ArbiterKind::WeightedFair { starvation_bound_s: f64::INFINITY },
+            2 => ArbiterKind::ClassWeightedFair {
+                starvation_bound_s: f64::INFINITY,
+                class_weight_base: 2.0,
+            },
             _ => ArbiterKind::Drf { starvation_bound_s: f64::INFINITY },
         };
         let mut sim = ClusterSim::new(ClusterParams {
@@ -249,6 +254,62 @@ fn prop_drf_starvation_bound_admits_best_effort() {
 }
 
 #[test]
+fn prop_class_weighted_fair_admits_best_effort_under_deadline_stream() {
+    // the ROADMAP's "fold classes into weights" policy: a Deadline-heavy
+    // mix boosts Deadline tenants' effective weights (8x at base 2.0) but
+    // never makes them absolute — with a finite starvation bound and
+    // preemption, the lone best-effort tenant's longest continuous wait
+    // stays within the bound plus one event's slack, same contract the
+    // DRF property pins down.
+    const BOUND_S: f64 = 900.0;
+    const SLACK_S: f64 = 1800.0;
+    cases(4, |rng| {
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: rng.below(1 << 20),
+            account_limit: 24,
+            preemption: true,
+            arbiter: ArbiterKind::ClassWeightedFair {
+                starvation_bound_s: BOUND_S,
+                class_weight_base: 2.0,
+            },
+            ..Default::default()
+        });
+        let be_seed = 6000 + rng.below(1 << 16);
+        let be = sim.submit_weighted(
+            tiny_job(SystemKind::Smlt, be_seed, Goal::None),
+            0.0,
+            TenantQuota::unlimited(),
+            0.2,
+        );
+        for i in 0..8u64 {
+            sim.submit_weighted(
+                tiny_job(
+                    SystemKind::Smlt,
+                    6500 + 17 * i + rng.below(1 << 12),
+                    Goal::Deadline { t_max_s: 4.0 * 3600.0 },
+                ),
+                i as f64 * 150.0,
+                TenantQuota::unlimited(),
+                1.0,
+            );
+        }
+        let out = sim.run();
+        assert_eq!(out.arbiter, "class-weighted-fair");
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 8, "tenant {} wedged", j.tenant);
+        }
+        let be_job = &out.jobs[be as usize];
+        assert!(
+            be_job.max_wait_streak_s <= BOUND_S + SLACK_S,
+            "best-effort tenant starved under class-weighted fair sharing: \
+             longest continuous wait {:.0}s exceeds the {BOUND_S:.0}s bound \
+             (+{SLACK_S:.0}s event slack)",
+            be_job.max_wait_streak_s
+        );
+    });
+}
+
+#[test]
 fn prop_fairness_arbiters_bit_deterministic() {
     // the new policies and the shock path are still pure functions of the
     // seed: identical fleets, identical bits
@@ -256,6 +317,10 @@ fn prop_fairness_arbiters_bit_deterministic() {
         let case_seed = rng.next_u64();
         for arbiter in [
             ArbiterKind::WeightedFair { starvation_bound_s: 600.0 },
+            ArbiterKind::ClassWeightedFair {
+                starvation_bound_s: 600.0,
+                class_weight_base: 2.0,
+            },
             ArbiterKind::Drf { starvation_bound_s: 600.0 },
         ] {
             let build = |arb: ArbiterKind| {

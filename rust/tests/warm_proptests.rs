@@ -1,0 +1,240 @@
+//! Property tests for the warm-start layer: container conservation under
+//! random churn, bit-deterministic TTL eviction, and — the load-bearing
+//! one — a disabled (or zero-capacity) pool reproducing the pre-warm
+//! fleet bit-for-bit.
+
+mod common;
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
+use smlt::coordinator::{SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::warm::{BankConfig, PoolConfig, WarmParams, WarmPool};
+
+#[test]
+fn prop_pool_conserves_containers_under_churn() {
+    cases(40, |rng| {
+        let cfg = PoolConfig {
+            ttl_s: 10.0 + rng.uniform(0.0, 600.0),
+            per_image_cap: 1 + rng.below(64) as u32,
+            total_cap: 1 + rng.below(128) as u32,
+            ..Default::default()
+        };
+        let mut pool = WarmPool::new(cfg);
+        let mut t = 0.0;
+        let mut offered = 0u64;
+        for _ in 0..300 {
+            t += rng.uniform(0.0, 60.0);
+            let image = rng.below(4);
+            let n = 1 + rng.below(12) as u32;
+            match rng.below(3) {
+                0 => {
+                    offered += n as u64;
+                    pool.checkin(image, 128 + rng.below(8192) as u32, n, t);
+                }
+                1 => {
+                    offered += n as u64;
+                    pool.prewarm(image, 128 + rng.below(8192) as u32, n, t);
+                }
+                _ => {
+                    let got = pool.checkout(image, n, t);
+                    assert!(got <= n);
+                }
+            }
+            // conservation at every event: accepted containers are
+            // parked, reused, or evicted — nothing leaks, nothing forks
+            assert!(
+                pool.conserves(),
+                "checkins {} != parked {} + hits {} + evictions {}",
+                pool.checkins,
+                pool.parked_total(),
+                pool.hits,
+                pool.evictions
+            );
+            assert_eq!(
+                pool.checkins + pool.rejected,
+                offered,
+                "every offered container is accepted or rejected"
+            );
+            assert!(pool.parked_total() <= pool.cfg.total_cap);
+            assert!(pool.parked_peak <= pool.cfg.total_cap);
+            for img in 0..4 {
+                assert!(pool.parked_for(img) <= pool.cfg.per_image_cap);
+            }
+            assert!(pool.keepalive_gb_s.is_finite() && pool.keepalive_gb_s >= 0.0);
+        }
+        pool.drain(t + 1.0);
+        assert_eq!(pool.parked_total(), 0);
+        assert!(pool.conserves(), "conservation must survive the final drain");
+    });
+}
+
+#[test]
+fn prop_ttl_eviction_bit_deterministic() {
+    // the same seeded op sequence must leave bit-identical pool state —
+    // counters and the accrued keep-alive float included
+    cases(20, |rng| {
+        let case_seed = rng.next_u64();
+        let run = || {
+            let mut r = smlt::util::rng::Pcg::new(case_seed);
+            let mut pool = WarmPool::new(PoolConfig {
+                ttl_s: 30.0 + r.uniform(0.0, 300.0),
+                ..Default::default()
+            });
+            let mut t = 0.0;
+            for _ in 0..200 {
+                t += r.uniform(0.0, 90.0);
+                let image = r.below(3);
+                match r.below(3) {
+                    0 => {
+                        pool.checkin(image, 1024 + r.below(4096) as u32, 1 + r.below(8) as u32, t);
+                    }
+                    1 => {
+                        pool.evict_expired(t);
+                    }
+                    _ => {
+                        pool.checkout(image, 1 + r.below(8) as u32, t);
+                    }
+                }
+            }
+            pool
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.checkins, b.checkins);
+        assert_eq!(a.hits, b.hits);
+        assert_eq!(a.misses, b.misses);
+        assert_eq!(a.evictions, b.evictions);
+        assert_eq!(a.rejected, b.rejected);
+        assert_eq!(a.parked_total(), b.parked_total());
+        assert_eq!(
+            a.keepalive_gb_s.to_bits(),
+            b.keepalive_gb_s.to_bits(),
+            "keep-alive accrual must be bit-deterministic"
+        );
+    });
+}
+
+fn small_job(seed: u64) -> SimJob {
+    let mut j = SimJob::new(
+        SystemKind::Smlt,
+        Workloads::static_run(ModelProfile::resnet18(), 10, 128),
+    );
+    j.seed = seed;
+    j
+}
+
+fn run_fleet(warm: WarmParams, case_seed: u64) -> FleetOutcome {
+    let mut r = smlt::util::rng::Pcg::new(case_seed);
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: r.below(1 << 20),
+        account_limit: 32 + r.below(128) as u32,
+        warm,
+        ..Default::default()
+    });
+    let n = 2 + r.below(4) as usize;
+    let jobs: Vec<SimJob> = (0..n).map(|i| small_job(7000 + 13 * i as u64)).collect();
+    sim.submit_all(
+        jobs,
+        &ArrivalProcess::Poisson { rate_per_s: 1.0 / 45.0, seed: r.below(1 << 16) },
+        TenantQuota::unlimited(),
+    );
+    sim.run()
+}
+
+/// Bit-level equality of everything a fleet outcome records per job.
+fn assert_fleets_bit_identical(a: &FleetOutcome, b: &FleetOutcome) {
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+        assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+        assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+        assert_eq!(
+            x.outcome.total_cost().to_bits(),
+            y.outcome.total_cost().to_bits()
+        );
+        assert_eq!(x.outcome.metrics.records.len(), y.outcome.metrics.records.len());
+        for (ra, rb) in x
+            .outcome
+            .metrics
+            .records
+            .iter()
+            .zip(y.outcome.metrics.records.iter())
+        {
+            assert_eq!(ra.t_start.to_bits(), rb.t_start.to_bits());
+            assert_eq!(ra.comm_s.to_bits(), rb.comm_s.to_bits());
+            assert_eq!(ra.workers, rb.workers);
+        }
+    }
+    assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+    assert_eq!(a.peak_in_flight, b.peak_in_flight);
+    assert_eq!(a.denials, b.denials);
+}
+
+#[test]
+fn prop_disabled_pool_is_bit_identical_to_default_fleet() {
+    // the acceptance bar for the whole layer: with the pool off, every
+    // job's trace is bit-for-bit the PR-4 fleet. A zero-capacity pool
+    // must degenerate identically — it accepts nothing and serves
+    // nothing, so not a single RNG draw may shift.
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let default = run_fleet(WarmParams::default(), case_seed);
+        let zero_cap = run_fleet(
+            WarmParams {
+                pool: Some(PoolConfig { total_cap: 0, ..Default::default() }),
+                prewarm: None,
+                bank: None,
+            },
+            case_seed,
+        );
+        assert!(!default.warm.enabled);
+        assert!(zero_cap.warm.enabled);
+        assert_eq!(zero_cap.warm.hits, 0);
+        assert_fleets_bit_identical(&default, &zero_cap);
+    });
+}
+
+#[test]
+fn prop_warm_fleet_bit_deterministic() {
+    // the warm layer joins the simulator's core contract: same seed,
+    // same world — pool, prewarm clock, bank and all
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let warm = || WarmParams {
+            pool: Some(PoolConfig::default()),
+            prewarm: None,
+            bank: Some(BankConfig::default()),
+        };
+        let a = run_fleet(warm(), case_seed);
+        let b = run_fleet(warm(), case_seed);
+        assert_fleets_bit_identical(&a, &b);
+        assert_eq!(a.warm.hits, b.warm.hits);
+        assert_eq!(a.warm.evictions, b.warm.evictions);
+        assert_eq!(
+            a.warm.keepalive_cost.to_bits(),
+            b.warm.keepalive_cost.to_bits()
+        );
+    });
+}
+
+#[test]
+fn prop_warm_fleet_conserves_and_completes() {
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let out = run_fleet(WarmParams::enabled(), case_seed);
+        assert!(out.warm.conserves(), "hits + evictions must cover checkins");
+        assert!(out.peak_in_flight <= out.account_limit);
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 10, "tenant {} wedged", j.tenant);
+            assert!(
+                j.outcome.warm_hits + j.outcome.cold_starts > 0,
+                "every job launches workers"
+            );
+        }
+        // fleet-level hits equal the sum of per-job hits: the pool and
+        // the drivers agree on who got served warm
+        let per_job: u64 = out.jobs.iter().map(|j| j.outcome.warm_hits).sum();
+        assert_eq!(out.warm.hits, per_job);
+    });
+}
