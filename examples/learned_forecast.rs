@@ -1,0 +1,136 @@
+//! Learned-forecast demo: prewarming without an oracle.
+//!
+//! An online-learning tenant mix (short retraining bursts inside
+//! phase-correlated diurnal active windows) arrives on a pooled account
+//! three times: no prewarming, oracle prewarming (the declared arrival
+//! process is trusted as a perfect forecast), and learned prewarming
+//! (an EWMA/Holt estimator per image, fed only with arrivals the fleet
+//! has already observed). The learned run pays a cold opening burst,
+//! then tracks the observed rate — recovering most of the oracle's warm
+//! hits with no knowledge of the schedule at all.
+//!
+//! Also prints the estimator itself at work: the smoothed rate chasing
+//! the true (declared) rate across a diurnal cycle.
+//!
+//! ```text
+//! cargo run --release --example learned_forecast -- --jobs 24 --iters 12
+//! ```
+
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
+use smlt::coordinator::{SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+use smlt::warm::{
+    ForecastConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget, RateEstimator,
+    WarmParams,
+};
+
+fn main() -> smlt::util::error::Result<()> {
+    let args = Args::from_env();
+    let n_jobs = args.get_usize("jobs", 24);
+    let iters = args.get_usize("iters", 12) as u64;
+
+    let arrivals = ArrivalProcess::OnlineLearning {
+        tenants: 4,
+        retrain_every_s: 600.0,
+        jobs_per_burst: 3,
+        burst_gap_s: 20.0,
+        period_s: 3600.0,
+        active_frac: 0.3,
+        phase_spread_s: 300.0,
+        seed: 11,
+    };
+
+    let mk_job = |i: usize| {
+        let mut j = SimJob::new(
+            SystemKind::Smlt,
+            Workloads::static_run(ModelProfile::resnet18(), iters, 128),
+        );
+        j.seed = 0x17EA + i as u64;
+        j
+    };
+    let image = mk_job(0).image_id();
+
+    // ---- the estimator at work: smoothed vs true rate over one cycle
+    let mut est = RateEstimator::new(ForecastConfig::default());
+    let times = arrivals.times(n_jobs.max(64));
+    let mut fed = 0usize;
+    println!("estimator vs declared mean rate (arrivals/hour):");
+    for tick in (0..=10).map(|k| k as f64 * 360.0) {
+        while fed < times.len() && times[fed] <= tick {
+            est.observe(times[fed]);
+            fed += 1;
+        }
+        est.advance_to(tick);
+        println!(
+            "  t={:>5.0}s  learned {:>5.1}/h   true mean {:>5.1}/h",
+            tick,
+            3600.0 * est.rate_per_s(),
+            3600.0 * arrivals.rate_at(tick),
+        );
+    }
+
+    // ---- three fleets: no prewarm / oracle / learned
+    let run = |mode: &str| -> FleetOutcome {
+        let policy = |source: ForecastSource| PrewarmPolicy {
+            forecast: arrivals.clone(),
+            source,
+            lead_s: 600.0,
+            tick_s: 120.0,
+            targets: vec![PrewarmTarget {
+                image,
+                mem_mb: 3072,
+                workers_per_job: 24,
+                max_warm: 256,
+            }],
+        };
+        let prewarm = match mode {
+            "none" => None,
+            "oracle" => Some(policy(ForecastSource::Oracle)),
+            "learned" => Some(policy(ForecastSource::Learned(ForecastConfig::default()))),
+            _ => unreachable!(),
+        };
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: 31,
+            account_limit: 512,
+            warm: WarmParams {
+                pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
+                prewarm,
+                bank: None,
+            },
+            ..Default::default()
+        });
+        let jobs: Vec<SimJob> = (0..n_jobs).map(mk_job).collect();
+        sim.submit_all(jobs, &arrivals, TenantQuota::unlimited());
+        sim.run()
+    };
+
+    let mut t = Table::new(
+        &format!("{n_jobs} jobs on an online-learning arrival mix"),
+        &["mode", "cold", "warm hits", "hit%", "prewarmed", "warm $", "mean dur s", "total $"],
+    );
+    for mode in ["none", "oracle", "learned"] {
+        let out = run(mode);
+        let cold: u64 = out.jobs.iter().map(|j| j.outcome.cold_starts).sum();
+        t.row(&[
+            mode.to_string(),
+            cold.to_string(),
+            out.warm.hits.to_string(),
+            format!("{:.0}%", 100.0 * out.warm.hit_rate()),
+            out.warm.prewarm_spawns.to_string(),
+            format!("{:.3}", out.warm.total_cost()),
+            format!("{:.0}", out.mean_duration_s()),
+            format!("{:.2}", out.total_cost()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n-> 'oracle' knows the arrival law ahead of time; 'learned' discovers\n   \
+         it from observed arrivals only (cold on the first burst, warm on the\n   \
+         rest) and needs no declared schedule at all — the adaptive behavior\n   \
+         a real platform can actually ship."
+    );
+    Ok(())
+}

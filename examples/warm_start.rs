@@ -19,7 +19,9 @@ use smlt::metrics::BillingReport;
 use smlt::perfmodel::ModelProfile;
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
-use smlt::warm::{BankConfig, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams};
+use smlt::warm::{
+    BankConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams,
+};
 
 fn main() -> smlt::util::error::Result<()> {
     let args = Args::from_env();
@@ -59,6 +61,7 @@ fn main() -> smlt::util::error::Result<()> {
         pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
         prewarm: Some(PrewarmPolicy {
             forecast: ArrivalProcess::Trace(arrivals.clone()),
+            source: ForecastSource::Oracle,
             lead_s: 600.0,
             tick_s: 120.0,
             targets: vec![PrewarmTarget {

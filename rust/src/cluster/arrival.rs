@@ -1,7 +1,7 @@
 //! Job arrival processes for the multi-tenant cluster simulation.
 //!
 //! The paper's platform hosts many concurrent design-and-training
-//! workflows; how they *arrive* shapes contention. Four generators,
+//! workflows; how they *arrive* shapes contention. Five generators,
 //! all deterministic given their inputs:
 //!
 //! - [`ArrivalProcess::Batch`] — everything submitted at t=0 (worst-case
@@ -11,6 +11,14 @@
 //! - [`ArrivalProcess::Diurnal`] — a sinusoidally-modulated Poisson
 //!   process (daily load shape: quiet troughs, predictable bursts — the
 //!   regime forecast-driven prewarming exists for),
+//! - [`ArrivalProcess::OnlineLearning`] — per-tenant retraining streams:
+//!   each tenant submits short bursts of jobs, but only inside its
+//!   diurnal **active window**; tenant phases cluster (phase-correlated
+//!   idle gaps — everyone sleeps at roughly the same time), so the fleet
+//!   sees spiky bursts separated by deep, hard-to-time silences. The
+//!   adversarial regime for forecasting: the *mean* rate (what an oracle
+//!   integrates) smears the bursts an online estimator can actually see
+//!   forming,
 //! - [`ArrivalProcess::Trace`] — explicit submission offsets (replay of a
 //!   recorded tenant schedule).
 //!
@@ -41,9 +49,60 @@ pub enum ArrivalProcess {
         peak_at_s: f64,
         seed: u64,
     },
+    /// per-tenant online-learning (periodic retraining) streams: each of
+    /// `tenants` tenants starts retraining bursts at mean interval
+    /// `retrain_every_s` of **active** time, each burst submitting
+    /// `jobs_per_burst` jobs spaced `burst_gap_s` apart; a tenant is only
+    /// active for the first `active_frac` of each `period_s` window,
+    /// phase-shifted by at most `phase_spread_s` (small spread = strongly
+    /// phase-correlated idle gaps). Deterministic given the seed.
+    OnlineLearning {
+        tenants: u32,
+        /// mean active-time seconds between one tenant's bursts
+        retrain_every_s: f64,
+        /// jobs submitted per retraining burst
+        jobs_per_burst: u32,
+        /// spacing between a burst's job submissions (seconds)
+        burst_gap_s: f64,
+        /// diurnal period (seconds)
+        period_s: f64,
+        /// fraction of each period a tenant is active, in (0, 1]
+        active_frac: f64,
+        /// tenant activity phases drawn uniformly from `[0, phase_spread_s]`
+        phase_spread_s: f64,
+        seed: u64,
+    },
     /// explicit arrival offsets (seconds); padded with its last entry if
     /// shorter than the number of jobs
     Trace(Vec<f64>),
+}
+
+/// Per-tenant activity-phase offsets for [`ArrivalProcess::OnlineLearning`]
+/// — shared by the sampler and the closed-form oracle so both describe
+/// the same process.
+fn online_learning_phases(tenants: u32, phase_spread_s: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg::new(seed ^ 0x01EA);
+    (0..tenants.max(1))
+        .map(|_| rng.uniform(0.0, phase_spread_s.max(0.0).max(1e-12)))
+        .collect()
+}
+
+/// Length of `[t0, t1)` ∩ `{t : ((t − phase) mod period) < width}` — how
+/// long a periodic activity window overlaps a query window.
+fn periodic_overlap(t0: f64, t1: f64, phase: f64, period: f64, width: f64) -> f64 {
+    if t1 <= t0 || width <= 0.0 {
+        return 0.0;
+    }
+    if width >= period {
+        return t1 - t0;
+    }
+    // F(t) = measure of {s ∈ [0, t) : s mod period < width}, valid for
+    // any real t (floor rounds toward −∞)
+    let f = |t: f64| {
+        let k = (t / period).floor();
+        k * width + (t - k * period).min(width)
+    };
+    f(t1 - phase) - f(t0 - phase)
 }
 
 impl ArrivalProcess {
@@ -67,6 +126,30 @@ impl ArrivalProcess {
                 let amp = 0.5 * (peak - base);
                 let period = period_s.max(1e-9);
                 (mean + amp * (TAU * (t - peak_at_s) / period).cos()).max(0.0)
+            }
+            ArrivalProcess::OnlineLearning {
+                tenants,
+                retrain_every_s,
+                jobs_per_burst,
+                period_s,
+                active_frac,
+                phase_spread_s,
+                seed,
+                ..
+            } => {
+                // mean submission rate: each *active* tenant starts bursts
+                // at 1/retrain_every_s, each worth jobs_per_burst jobs
+                let period = period_s.max(1e-9);
+                let width = active_frac.clamp(0.01, 1.0) * period;
+                let per_active = (*jobs_per_burst).max(1) as f64 / retrain_every_s.max(1e-9);
+                online_learning_phases(*tenants, *phase_spread_s, *seed)
+                    .iter()
+                    .filter(|&&phase| {
+                        let r = t - phase - ((t - phase) / period).floor() * period;
+                        r < width
+                    })
+                    .count() as f64
+                    * per_active
             }
             ArrivalProcess::Trace(_) => 0.0,
         }
@@ -100,6 +183,29 @@ impl ArrivalProcess {
                 let w = TAU / period;
                 mean * (t1 - t0)
                     + amp / w * ((w * (t1 - peak_at_s)).sin() - (w * (t0 - peak_at_s)).sin())
+            }
+            ArrivalProcess::OnlineLearning {
+                tenants,
+                retrain_every_s,
+                jobs_per_burst,
+                period_s,
+                active_frac,
+                phase_spread_s,
+                seed,
+                ..
+            } => {
+                // closed-form oracle: per tenant, (active seconds inside
+                // the window) × burst-start rate × jobs per burst. This is
+                // the *mean* — the oracle knows the activity windows but
+                // not the realized burst times inside them.
+                let period = period_s.max(1e-9);
+                let width = active_frac.clamp(0.01, 1.0) * period;
+                let per_active = (*jobs_per_burst).max(1) as f64 / retrain_every_s.max(1e-9);
+                online_learning_phases(*tenants, *phase_spread_s, *seed)
+                    .iter()
+                    .map(|&phase| periodic_overlap(t0, t1, phase, period, width))
+                    .sum::<f64>()
+                    * per_active
             }
             ArrivalProcess::Trace(offsets) => offsets
                 .iter()
@@ -153,6 +259,46 @@ impl ArrivalProcess {
                     }
                 }
                 out
+            }
+            ArrivalProcess::OnlineLearning {
+                tenants,
+                retrain_every_s,
+                jobs_per_burst,
+                burst_gap_s,
+                period_s,
+                active_frac,
+                phase_spread_s,
+                seed,
+            } => {
+                // per tenant: burst starts are a Poisson process on the
+                // tenant's *active-time* axis, mapped to wall time by
+                // packing each `width` of active seconds into the front
+                // of one period; each burst emits jobs_per_burst jobs
+                let period = period_s.max(1e-9);
+                let width = active_frac.clamp(0.01, 1.0) * period;
+                let every = retrain_every_s.max(1e-9);
+                let per_burst = (*jobs_per_burst).max(1);
+                let gap = burst_gap_s.max(0.0);
+                let phases = online_learning_phases(*tenants, *phase_spread_s, *seed);
+                let mut all: Vec<f64> = Vec::with_capacity(n * 2);
+                for (k, &phase) in phases.iter().enumerate() {
+                    let mut rng =
+                        Pcg::new(seed ^ 0x01EB ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    let mut active_t = 0.0; // cumulative active-time clock
+                    let mut emitted = 0usize;
+                    while emitted < n {
+                        active_t += rng.exponential(1.0 / every);
+                        let cycles = (active_t / width).floor();
+                        let wall = phase + cycles * period + (active_t - cycles * width);
+                        for j in 0..per_burst {
+                            all.push(wall + j as f64 * gap);
+                            emitted += 1;
+                        }
+                    }
+                }
+                all.sort_by(|a, b| a.partial_cmp(b).expect("NaN arrival time"));
+                all.truncate(n);
+                all
             }
             ArrivalProcess::Trace(offsets) => {
                 let mut sorted: Vec<f64> = offsets.iter().map(|t| t.max(0.0)).collect();
@@ -241,6 +387,93 @@ mod tests {
         assert_eq!(t.expected_arrivals(0.0, 20.0), 2.0);
         assert_eq!(t.expected_arrivals(25.0, 30.0), 1.0);
         assert_eq!(ArrivalProcess::Batch.expected_arrivals(0.0, 100.0), 0.0);
+    }
+
+    fn online() -> ArrivalProcess {
+        ArrivalProcess::OnlineLearning {
+            tenants: 4,
+            retrain_every_s: 600.0,
+            jobs_per_burst: 3,
+            burst_gap_s: 20.0,
+            period_s: 7200.0,
+            active_frac: 0.3,
+            phase_spread_s: 600.0,
+            seed: 17,
+        }
+    }
+
+    #[test]
+    fn online_learning_deterministic_ascending_and_bursty() {
+        let p = online();
+        let a = p.times(200);
+        assert_eq!(a, p.times(200), "same seed, same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(a.len(), 200);
+        // bursty: many gaps are the intra-burst spacing or less, while
+        // the idle phase forces some gaps of diurnal magnitude
+        let gaps: Vec<f64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+        let tight = gaps.iter().filter(|&&g| g <= 20.0).count();
+        assert!(tight * 3 > gaps.len(), "{tight}/{} tight gaps", gaps.len());
+        assert!(
+            gaps.iter().any(|&g| g > 1000.0),
+            "no deep idle gap in {} gaps",
+            gaps.len()
+        );
+    }
+
+    #[test]
+    fn online_learning_idle_phase_is_silent() {
+        // active windows all start within phase_spread of the period
+        // boundary and last active_frac*period; bursts can spill at most
+        // jobs_per_burst*burst_gap past the window. The rest of the
+        // period must be dead silent — the phase-correlated idle gap.
+        let p = online();
+        let a = p.times(400);
+        let dead_from = 600.0 + 0.3 * 7200.0 + 3.0 * 20.0; // spread+active+spill
+        for &t in &a {
+            let r = t % 7200.0;
+            assert!(
+                r < dead_from,
+                "arrival at {t} (phase {r}) inside the idle window [{dead_from}, 7200)"
+            );
+        }
+        // the oracle agrees: expected arrivals in the dead zone are zero
+        let dead = p.expected_arrivals(dead_from, 7200.0);
+        assert!(dead.abs() < 1e-9, "oracle put {dead} arrivals in the idle gap");
+    }
+
+    #[test]
+    fn online_learning_oracle_integrates_the_mean_rate() {
+        let p = online();
+        // one full period: 4 tenants x (0.3*7200 active s) / 600 s per
+        // burst x 3 jobs = 43.2 expected jobs
+        let per_period = p.expected_arrivals(0.0, 7200.0);
+        assert!((per_period - 43.2).abs() < 1e-6, "{per_period}");
+        // periodic: any full-period window integrates the same
+        let shifted = p.expected_arrivals(500.0, 7700.0);
+        assert!((shifted - per_period).abs() < 1e-6);
+        // rate_at is the indicator sum: zero deep in the idle phase,
+        // positive at the start of the period
+        assert_eq!(p.rate_at(5000.0), 0.0);
+        assert!(p.rate_at(700.0) > 0.0);
+        // empty window
+        assert_eq!(p.expected_arrivals(100.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn online_learning_realized_count_tracks_the_oracle() {
+        // over many periods, the realized arrival count inside a window
+        // should be near the closed-form expectation (law of large
+        // numbers at trace scale — loose 35% tolerance)
+        let p = online();
+        let a = p.times(600);
+        let horizon = 10.0 * 7200.0;
+        let realized = a.iter().filter(|&&t| t < horizon).count() as f64;
+        let expected = p.expected_arrivals(0.0, horizon);
+        assert!(
+            (realized - expected).abs() < 0.35 * expected,
+            "realized {realized} vs expected {expected}"
+        );
     }
 
     #[test]

@@ -38,8 +38,15 @@
 //!   a [`PrewarmPolicy`](crate::warm::PrewarmPolicy) tops images up
 //!   ahead of forecast bursts on a fixed virtual-time tick grid, and the
 //!   [`PosteriorBank`](crate::warm::PosteriorBank) carries profiling
-//!   measurements between same-family jobs. All of it is off by default
-//!   and the disabled path is bit-identical to the pre-warm fleet.
+//!   measurements between same-family jobs. The prewarm forecast comes
+//!   from the declared schedule
+//!   ([`ForecastSource::Oracle`](crate::warm::ForecastSource), the
+//!   default — bit-identical to the pre-forecast layer) or from online
+//!   EWMA/Holt estimators the scheduler feeds with each *observed*
+//!   arrival before the tick that could first see it
+//!   ([`ForecastSource::Learned`](crate::warm::ForecastSource) — no
+//!   lookahead). All of it is off by default and the disabled path is
+//!   bit-identical to the pre-warm fleet.
 //!
 //! [`JobDriver`]: crate::coordinator::simrun::JobDriver
 
@@ -49,7 +56,7 @@ use super::capacity::CapacityTrace;
 use super::quota::TenantQuota;
 use super::{ClusterEnv, TenantId};
 use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
-use crate::warm::{WarmParams, WarmReport, WarmState};
+use crate::warm::{ForecastBank, ForecastSource, ImageId, WarmParams, WarmReport, WarmState};
 
 /// Knobs for a [`ClusterSim`] run.
 #[derive(Clone, Debug)]
@@ -306,6 +313,28 @@ impl ClusterSim {
         // forecast-driven prewarming fires on a fixed virtual-time grid
         let prewarm = self.params.warm.prewarm.clone();
         let mut next_prewarm_s = 0.0f64;
+        // learned forecasting: an online per-image rate estimator fed by
+        // *observed* arrivals only — arrivals are folded in strictly
+        // before the tick that could first see them, so the learned path
+        // never looks ahead of the virtual clock. Oracle policies build
+        // none of this and take exactly the pre-forecast code path.
+        let mut learned: Option<ForecastBank> = match &prewarm {
+            Some(p) => match p.source {
+                ForecastSource::Learned(cfg) => Some(ForecastBank::new(cfg)),
+                ForecastSource::Oracle => None,
+            },
+            None => None,
+        };
+        let mut arrival_feed: Vec<(f64, ImageId)> = Vec::new();
+        if learned.is_some() {
+            arrival_feed = self
+                .jobs
+                .iter()
+                .map(|s| (s.arrive_s, s.driver.job.image_id()))
+                .collect();
+            arrival_feed.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN arrival time"));
+        }
+        let mut next_arrival = 0usize;
 
         loop {
             if self.jobs.iter().all(|s| s.finished) {
@@ -324,8 +353,21 @@ impl ClusterSim {
             if let Some(policy) = &prewarm {
                 let cold_median = self.env.platform.limits.cold_start_median_s;
                 while next_prewarm_s <= frontier {
+                    if let Some(bank) = learned.as_mut() {
+                        // feed the estimator every arrival observed by
+                        // this tick, then fold in the elapsed (possibly
+                        // idle) bins — observe → update EWMA → forecast
+                        while next_arrival < arrival_feed.len()
+                            && arrival_feed[next_arrival].0 <= next_prewarm_s
+                        {
+                            let (at, image) = arrival_feed[next_arrival];
+                            bank.observe(image, at);
+                            next_arrival += 1;
+                        }
+                        bank.advance_to(next_prewarm_s);
+                    }
                     for t in &policy.targets {
-                        let desired = policy.desired(t, next_prewarm_s);
+                        let desired = policy.desired_from(learned.as_ref(), t, next_prewarm_s);
                         self.env
                             .warm
                             .prewarm_to(t.image, t.mem_mb, desired, next_prewarm_s, cold_median);
@@ -983,6 +1025,7 @@ mod tests {
                 pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
                 prewarm: Some(PrewarmPolicy {
                     forecast: ArrivalProcess::Trace(arrivals.clone()),
+                    source: ForecastSource::Oracle,
                     lead_s: 300.0,
                     tick_s: 60.0,
                     targets: vec![PrewarmTarget {
@@ -1008,6 +1051,50 @@ mod tests {
         );
         for j in &out.jobs {
             assert_eq!(j.outcome.iters_done, 12);
+        }
+    }
+
+    #[test]
+    fn learned_prewarm_learns_a_steady_stream_and_serves_it_warm() {
+        use crate::warm::{ForecastConfig, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams};
+        // a steady same-image stream with NO oracle: the policy's declared
+        // forecast is Batch (which forecasts nothing), so every prewarmed
+        // container must come from the learned estimator tracking the
+        // observed arrivals
+        let arrivals: Vec<f64> = (0..10).map(|i| 200.0 + i as f64 * 300.0).collect();
+        let image = small_job(0).image_id();
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 512,
+            warm: WarmParams {
+                pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
+                prewarm: Some(PrewarmPolicy {
+                    forecast: ArrivalProcess::Batch,
+                    source: ForecastSource::Learned(ForecastConfig::default()),
+                    lead_s: 600.0,
+                    tick_s: 60.0,
+                    targets: vec![PrewarmTarget {
+                        image,
+                        mem_mb: 3072,
+                        workers_per_job: 16,
+                        max_warm: 128,
+                    }],
+                }),
+                bank: None,
+            },
+            ..Default::default()
+        });
+        for (i, at) in arrivals.iter().enumerate() {
+            sim.submit(small_job(900 + i as u64), *at, TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        assert!(
+            out.warm.prewarm_spawns > 0,
+            "the learned forecast must trigger spawns once the stream is observed"
+        );
+        assert!(out.warm.hits > 0, "learned prewarming must serve warm containers");
+        assert!(out.warm.conserves());
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 12, "tenant {} wedged", j.tenant);
         }
     }
 

@@ -7,7 +7,7 @@
 //! dynamic resource demands. Three pieces:
 //!
 //! - [`arrival`] — deterministic job arrival processes (batch / Poisson /
-//!   trace replay),
+//!   diurnal / per-tenant online-learning bursts / trace replay),
 //! - [`quota`] — the shared account concurrency pool with per-tenant
 //!   quotas and lease-based conservation invariants (limits and quotas
 //!   can now move mid-run under a reclaim-first contract),

@@ -531,14 +531,22 @@ impl JobDriver {
             // from the same global-batch regime (per-iteration time is
             // batch-dependent; a dynamic-batching job must not treat its
             // own earlier phases as a warm posterior for a new batch).
-            let prior: Vec<(Config, f64)> = match self.job.family {
+            // Each point carries a staleness factor: its GP noise is
+            // inflated with the measurement's age, so an old banked point
+            // widens the posterior instead of anchoring it (1.0 — full
+            // trust — under the default bank config).
+            let prior: Vec<(Config, f64, f64)> = match self.job.family {
                 Some(fam) if self.job.system.is_serverless() => env
                     .warm
                     .bank_prior(fam)
                     .iter()
                     .filter(|o| space.contains(o.cfg) && o.global_batch == phase.global_batch)
                     .map(|o| {
-                        (o.cfg, goal_score(self.job.goal, o.iter_s, o.iter_cost, phase.iters))
+                        (
+                            o.cfg,
+                            goal_score(self.job.goal, o.iter_s, o.iter_cost, phase.iters),
+                            env.warm.bank_noise_inflation((self.t_now - o.at_s).max(0.0)),
+                        )
                     })
                     .collect(),
                 _ => Vec::new(),
@@ -593,7 +601,7 @@ impl JobDriver {
                 }
             };
             let bo = BayesOpt::new(space, params);
-            let res = bo.run_with_prior(&mut obj, &prior);
+            let res = bo.run_with_weighted_prior(&mut obj, &prior);
             self.bo_probes += res.evaluations as u64;
             // profiling wall time + money
             self.profiling_time_s += res.profiling_s;
@@ -630,6 +638,7 @@ impl JobDriver {
                                 global_batch: phase.global_batch,
                                 iter_s: comp + comm,
                                 iter_cost: obj.model.iter_cost(*c),
+                                at_s: self.t_now,
                             },
                         );
                     }
@@ -775,8 +784,11 @@ impl JobDriver {
         // when disabled — the bit-identical golden path); those workers
         // sample a warm-start delay instead of a cold start
         let hits = if self.job.system.is_serverless() {
+            // under memory-keyed matching only containers parked with the
+            // fleet's own memory size serve (exact Lambda semantics); the
+            // default pool matches by image alone
             env.warm
-                .checkout(self.job.image_id(), self.cfg.workers, self.t_now)
+                .checkout(self.job.image_id(), self.cfg.mem_mb, self.cfg.workers, self.t_now)
         } else {
             0
         };
@@ -1254,11 +1266,20 @@ mod tests {
             }
             outs.push(d.into_outcome());
         }
+        // directional bound, not strict: the first full-budget search may
+        // legally stop early (EI tolerance) at or under the refresh
+        // budget, in which case the warm run matches rather than beats it
         assert!(
-            outs[1].bo_probes < outs[0].bo_probes,
-            "warm posterior must cut live probes: {} vs {}",
+            outs[1].bo_probes <= outs[0].bo_probes,
+            "warm posterior must never cost extra probes: {} vs {}",
             outs[1].bo_probes,
             outs[0].bo_probes
+        );
+        // the refresh budget (6) caps the warm search outright
+        assert!(
+            outs[1].bo_probes <= 6,
+            "warm search exceeded the refresh budget: {}",
+            outs[1].bo_probes
         );
         assert_eq!(outs[0].iters_done, outs[1].iters_done);
         let bank = env.warm.bank().expect("bank enabled");

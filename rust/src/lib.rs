@@ -25,16 +25,20 @@
 //!   (static / dynamic batching / online learning / NAS), and the
 //!   reentrant per-job simulation driver (`JobDriver`).
 //! - [`cluster`] — multi-tenant fleet layer: job arrival processes
-//!   (batch / Poisson / diurnal / trace), shared account concurrency pool
+//!   (batch / Poisson / diurnal / online-learning / trace), shared
+//!   account concurrency pool
 //!   with per-tenant quotas, pluggable slot arbitration (goal-class
 //!   priority, weighted fair sharing, class-aware fair sharing, DRF —
 //!   each with a configurable starvation bound), capacity traces that
 //!   step the account limit mid-run (spot-capacity shocks with lease
 //!   reclamation), preemption, and quota-aware re-optimization.
 //! - [`warm`] — warm-start layer: fleet-wide warm-container pool (TTL
-//!   eviction, keep-alive billing, warm-vs-cold init distributions),
-//!   forecast-driven prewarming, and the cross-job profiling-posterior
-//!   bank that seeds repeat jobs' Bayesian searches.
+//!   eviction, keep-alive billing, warm-vs-cold init distributions,
+//!   optional exact-Lambda memory-keyed matching), forecast-driven
+//!   prewarming from the declared schedule (oracle) or from learned
+//!   online EWMA/Holt arrival estimates, and the cross-job
+//!   profiling-posterior bank (with age-based staleness discounting)
+//!   that seeds repeat jobs' Bayesian searches.
 //! - [`baselines`] — Siren, Cirrus, LambdaML, MLCD, IaaS comparators.
 //! - [`metrics`] — run recorders, CSV emission, and per-tenant
 //!   fairness / shock-degradation roll-ups.

@@ -41,6 +41,31 @@ pub struct TenantBill {
 }
 
 /// The fleet invoice: per-tenant bills + the account-level warm spend.
+///
+/// # Examples
+///
+/// ```
+/// use smlt::baselines::SystemKind;
+/// use smlt::cluster::{ClusterParams, ClusterSim, TenantQuota};
+/// use smlt::coordinator::{SimJob, Workloads};
+/// use smlt::metrics::BillingReport;
+/// use smlt::perfmodel::ModelProfile;
+///
+/// let mut sim = ClusterSim::new(ClusterParams::default());
+/// for i in 0..2u64 {
+///     let mut job = SimJob::new(
+///         SystemKind::Smlt,
+///         Workloads::static_run(ModelProfile::resnet18(), 6, 128),
+///     );
+///     job.seed = 40 + i;
+///     sim.submit(job, i as f64 * 100.0, TenantQuota::unlimited());
+/// }
+/// let out = sim.run();
+/// let bill = BillingReport::from_fleet(&out);
+/// assert_eq!(bill.tenants.len(), 2);
+/// // the invoice reconciles bit-for-bit with the fleet's headline cost
+/// assert_eq!(bill.grand_total.to_bits(), out.total_cost().to_bits());
+/// ```
 #[derive(Clone, Debug)]
 pub struct BillingReport {
     /// per-tenant invoices, indexed like the outcome's job list

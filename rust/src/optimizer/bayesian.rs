@@ -79,6 +79,24 @@ impl BayesOpt {
     /// current (possibly quota-shrunken) space are ignored. An empty
     /// prior is bit-identical to [`run`](Self::run).
     pub fn run_with_prior(&self, obj: &mut dyn Objective, prior: &[(Config, f64)]) -> BoResult {
+        let flat: Vec<(Config, f64, f64)> = prior.iter().map(|&(c, y)| (c, y, 1.0)).collect();
+        self.run_with_weighted_prior(obj, &flat)
+    }
+
+    /// [`run_with_prior`](Self::run_with_prior) where each prior point
+    /// carries a **noise-inflation factor** (≥ 1): the point enters the
+    /// GP with its noise variance multiplied by the factor, so a stale
+    /// banked measurement widens the posterior instead of anchoring it
+    /// (see [`staleness_inflation`](crate::warm::staleness_inflation)).
+    /// A factor of exactly 1.0 is bit-identical to
+    /// [`run_with_prior`](Self::run_with_prior); factors below 1 are
+    /// clamped up to 1 (a prior is never trusted *more* than a live
+    /// probe).
+    pub fn run_with_weighted_prior(
+        &self,
+        obj: &mut dyn Objective,
+        prior: &[(Config, f64, f64)],
+    ) -> BoResult {
         let mut rng = Pcg::new(self.params.seed);
         let mut gp = Gp::default();
         let mut trace: Vec<(Config, f64)> = Vec::new();
@@ -91,11 +109,15 @@ impl BayesOpt {
         // invariant under the monotone transform.
         let warp = |y: f64| (y.max(1e-12)).ln();
         let mut prior_n = 0u32;
-        for (c, y) in prior {
+        for (c, y, inflate) in prior {
             if !self.space.contains(*c) {
                 continue;
             }
-            gp.observe(self.space.normalize(*c).to_vec(), warp(*y));
+            // inflation factor f ≥ 1 → extra (f−1)·noise on the diagonal;
+            // f = 1 adds exactly 0.0, keeping the unweighted path
+            // bit-identical
+            let extra = (inflate.max(1.0) - 1.0) * gp.noise_var;
+            gp.observe_noisy(self.space.normalize(*c).to_vec(), warp(*y), extra);
             prior_n += 1;
         }
         let mut evaluate =
@@ -277,6 +299,64 @@ mod tests {
         // a non-empty prior collapses the random warm-up to one probe, so
         // the acquisition loop ran informed from the second evaluation on
         assert!(warm.evaluations >= 1);
+    }
+
+    #[test]
+    fn unit_weight_prior_is_bit_identical_to_run_with_prior() {
+        let space = ConfigSpace::default();
+        let bo = BayesOpt::new(
+            space,
+            BoParams { n_init: 1, max_iters: 6, ..Default::default() },
+        );
+        let mut donor = Bowl { evals: 0 };
+        let prior: Vec<(Config, f64)> = [(20u32, 1024u32), (60, 4096), (140, 8192)]
+            .iter()
+            .map(|&(w, m)| {
+                let c = Config { workers: w, mem_mb: m };
+                (c, donor.eval(c))
+            })
+            .collect();
+        let weighted: Vec<(Config, f64, f64)> =
+            prior.iter().map(|&(c, y)| (c, y, 1.0)).collect();
+        let a = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
+        let b = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &weighted);
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.profiling_s.to_bits(), b.profiling_s.to_bits());
+        // sub-unit factors clamp up to full trust, never below
+        let clamped: Vec<(Config, f64, f64)> =
+            prior.iter().map(|&(c, y)| (c, y, 0.25)).collect();
+        let c = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &clamped);
+        assert_eq!(a.trace, c.trace);
+    }
+
+    #[test]
+    fn inflated_prior_still_respects_budget_and_finds_optimum() {
+        // a *stale* prior (heavy noise inflation) must neither panic nor
+        // blow the refresh budget; the search still lands near the bowl's
+        // bottom because live probes override the widened prior
+        let space = ConfigSpace::default();
+        let mut donor = Bowl { evals: 0 };
+        let prior: Vec<(Config, f64, f64)> = [
+            (10u32, 512u32),
+            (40, 2048),
+            (60, 4096),
+            (120, 8192),
+        ]
+        .iter()
+        .map(|&(w, m)| {
+            let c = Config { workers: w, mem_mb: m };
+            (c, donor.eval(c), 1024.0)
+        })
+        .collect();
+        let bo = BayesOpt::new(
+            space,
+            BoParams { n_init: 2, max_iters: 8, ..Default::default() },
+        );
+        let res = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &prior);
+        assert!(res.evaluations <= 8);
+        assert!(res.best_value.is_finite());
+        assert!(res.best_value < 5.0, "found {:?} = {}", res.best, res.best_value);
     }
 
     #[test]

@@ -14,6 +14,9 @@ pub struct Gp {
     pub noise_var: f64,
     xs: Vec<Vec<f64>>,
     ys: Vec<f64>,
+    /// per-observation extra noise variance added on top of `noise_var`
+    /// (0 for live measurements; staleness-discounted priors inflate it)
+    extra_noise: Vec<f64>,
     y_mean: f64,
     y_std: f64,
     /// Cholesky factor of K + noise*I (lower triangular, row-major)
@@ -36,6 +39,7 @@ impl Gp {
             noise_var,
             xs: Vec::new(),
             ys: Vec::new(),
+            extra_noise: Vec::new(),
             y_mean: 0.0,
             y_std: 1.0,
             chol: Vec::new(),
@@ -54,8 +58,20 @@ impl Gp {
 
     /// Add one observation and refit.
     pub fn observe(&mut self, x: Vec<f64>, y: f64) {
+        self.observe_noisy(x, y, 0.0);
+    }
+
+    /// Add one observation carrying `extra_noise_var` of additional noise
+    /// variance on its kernel diagonal, and refit. Inflated noise makes
+    /// the point *advisory*: the posterior mean is pulled toward it less,
+    /// and the posterior variance near it stays wider — how
+    /// staleness-discounted priors from the
+    /// [`PosteriorBank`](crate::warm::PosteriorBank) enter the GP.
+    /// `extra_noise_var = 0` is exactly [`observe`](Self::observe).
+    pub fn observe_noisy(&mut self, x: Vec<f64>, y: f64, extra_noise_var: f64) {
         self.xs.push(x);
         self.ys.push(y);
+        self.extra_noise.push(extra_noise_var.max(0.0));
         self.refit();
     }
 
@@ -78,7 +94,7 @@ impl Gp {
                 k[i * n + j] = v;
                 k[j * n + i] = v;
             }
-            k[i * n + i] += self.noise_var;
+            k[i * n + i] += self.noise_var + self.extra_noise[i];
         }
         self.chol = cholesky(&k, n).expect("GP kernel matrix not PD");
         // alpha = K^-1 y_standardized
@@ -224,6 +240,40 @@ mod tests {
         let (_, s_near) = gp.predict(&[0.05, 0.05]);
         let (_, s_far) = gp.predict(&[1.0, 1.0]);
         assert!(s_far > s_near * 2.0, "{s_far} vs {s_near}");
+    }
+
+    #[test]
+    fn noisy_observations_are_advisory() {
+        // same data, one conflicting point: with large extra noise the
+        // conflicting point barely moves the posterior; with none it does
+        let fit = |extra: f64| {
+            let mut gp = Gp::new(0.3, 1.0, 1e-4);
+            gp.observe(vec![0.2], 1.0);
+            gp.observe(vec![0.8], 1.0);
+            gp.observe_noisy(vec![0.5], 5.0, extra);
+            let (m, s) = gp.predict(&[0.5]);
+            (m, s)
+        };
+        let (m_trusted, s_trusted) = fit(0.0);
+        let (m_stale, s_stale) = fit(100.0);
+        // trusted: posterior interpolates the 5.0 point closely
+        assert!((m_trusted - 5.0).abs() < 0.5, "trusted mean {m_trusted}");
+        // stale: pulled far less toward the conflicting value...
+        assert!(
+            (m_stale - 5.0).abs() > 2.0 * (m_trusted - 5.0).abs(),
+            "stale mean {m_stale} vs trusted {m_trusted}"
+        );
+        // ...and the posterior stays wider there
+        assert!(s_stale > s_trusted, "{s_stale} vs {s_trusted}");
+        // zero extra noise is bit-identical to a plain observation
+        let mut a = Gp::default();
+        a.observe(vec![0.3], 2.0);
+        let mut b = Gp::default();
+        b.observe_noisy(vec![0.3], 2.0, 0.0);
+        let (ma, sa) = a.predict(&[0.6]);
+        let (mb, sb) = b.predict(&[0.6]);
+        assert_eq!(ma.to_bits(), mb.to_bits());
+        assert_eq!(sa.to_bits(), sb.to_bits());
     }
 
     #[test]

@@ -1,0 +1,438 @@
+//! Learned arrival forecasting: online EWMA/Holt rate estimation per
+//! container image.
+//!
+//! PR 5's prewarmer consumed an **oracle** forecast — the declared
+//! [`ArrivalProcess`](crate::cluster::ArrivalProcess) answering
+//! `expected_arrivals` over the lead window, i.e. the operator is assumed
+//! to know the true arrival law. Real platforms do not: the adaptation
+//! the paper claims has to come from *observing* the stream. This module
+//! supplies that learned path:
+//!
+//! - [`RateEstimator`] — a Holt-style double-exponential smoother over
+//!   fixed-width arrival-count bins: a **level** (smoothed arrivals per
+//!   bin) and an optional **trend** (per-bin drift), updated as virtual
+//!   time crosses bin boundaries. With `beta = 0` it degenerates to a
+//!   plain EWMA of per-bin counts.
+//! - [`ForecastBank`] — one estimator per container image, fed by the
+//!   fleet scheduler with every *observed* job arrival
+//!   ([`ClusterSim::run`](crate::cluster::ClusterSim::run)) and advanced
+//!   to each prewarm tick, so a forecast never sees the future.
+//! - [`ForecastSource`] — the knob on
+//!   [`PrewarmPolicy`](super::PrewarmPolicy): `Oracle` (the default;
+//!   bit-identical to the PR-5 path) vs `Learned` (EWMA/Holt estimates
+//!   replace the declared schedule).
+//!
+//! A cold estimator (no completed bin yet) forecasts **zero** — the
+//! learned prewarmer spends nothing until it has evidence, which is the
+//! honest counterpart of the oracle's perfect first-burst coverage and
+//! exactly the gap `benches/fig17_learned_forecast.rs` measures.
+
+use super::pool::ImageId;
+use std::collections::BTreeMap;
+
+/// Where a [`PrewarmPolicy`](super::PrewarmPolicy) gets its arrival
+/// forecast from.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ForecastSource {
+    /// The declared [`ArrivalProcess`](crate::cluster::ArrivalProcess) is
+    /// its own (perfect) forecast — the pre-learned behavior,
+    /// bit-identical (and therefore the default).
+    #[default]
+    Oracle,
+    /// An online [`RateEstimator`] per target image, fed by observed
+    /// arrivals only (no lookahead), with the given smoothing knobs.
+    Learned(ForecastConfig),
+}
+
+/// Smoothing knobs for a [`RateEstimator`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ForecastConfig {
+    /// arrival-count bin width (seconds); the estimator's time
+    /// resolution. Clamped to ≥ 1 s at estimator construction: bins are
+    /// folded one at a time as virtual time crosses them, so a tiny
+    /// width would turn a long simulated horizon into a pathological
+    /// number of folds rather than a finer estimate.
+    pub bin_s: f64,
+    /// level smoothing factor in (0, 1]: weight of the newest completed
+    /// bin's count (higher = faster reaction, noisier estimate)
+    pub alpha: f64,
+    /// trend smoothing factor in [0, 1): weight of the newest level change
+    /// in the Holt trend term (0 disables the trend — pure EWMA)
+    pub beta: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig { bin_s: 120.0, alpha: 0.35, beta: 0.10 }
+    }
+}
+
+/// ∫₀ʰ max(0, l + b·x) dx — the Holt extrapolation integrated over a
+/// forecast horizon, clamped so a negative trend can never forecast
+/// negative arrivals.
+fn clamped_linear_integral(l: f64, b: f64, h: f64) -> f64 {
+    if h <= 0.0 {
+        return 0.0;
+    }
+    let f = |x: f64| l * x + 0.5 * b * x * x;
+    if b.abs() < 1e-18 {
+        return l.max(0.0) * h;
+    }
+    let x0 = -l / b; // where l + b·x crosses zero
+    if b > 0.0 {
+        if x0 <= 0.0 {
+            f(h)
+        } else if x0 >= h {
+            0.0
+        } else {
+            f(h) - f(x0)
+        }
+    } else if x0 <= 0.0 {
+        0.0
+    } else if x0 >= h {
+        f(h)
+    } else {
+        f(x0)
+    }
+}
+
+/// Online Holt-style arrival-rate estimator (see the module docs).
+///
+/// Bins are aligned to the virtual-time origin (`⌊t/bin_s⌋·bin_s`), so
+/// the same arrival stream always produces the same estimate — the
+/// estimator is as deterministic as everything else in the simulator.
+///
+/// # Examples
+///
+/// ```
+/// use smlt::warm::{ForecastConfig, RateEstimator};
+///
+/// let mut est = RateEstimator::new(ForecastConfig::default());
+/// // one arrival per 120 s bin, observed for 20 minutes
+/// for k in 0..10 {
+///     est.observe(60.0 + k as f64 * 120.0);
+/// }
+/// est.advance_to(1200.0);
+/// // the EWMA converges to the true rate of 1 arrival / 120 s
+/// assert!((est.rate_per_s() - 1.0 / 120.0).abs() < 1e-9);
+/// // ...and forecasts ~5 arrivals over a 600 s lead window
+/// assert!((est.expected_arrivals(600.0) - 5.0).abs() < 0.1);
+/// ```
+#[derive(Clone, Debug)]
+pub struct RateEstimator {
+    cfg: ForecastConfig,
+    /// smoothed arrivals per bin (Holt level)
+    level: f64,
+    /// smoothed per-bin drift (Holt trend)
+    trend: f64,
+    /// start of the current (incomplete) bin
+    bin_start_s: f64,
+    /// arrivals counted in the current bin so far
+    bin_count: u32,
+    /// completed bins folded into the estimate
+    bins_seen: u64,
+    /// total arrivals observed over the estimator's lifetime
+    pub observed: u64,
+}
+
+impl RateEstimator {
+    /// A cold estimator: forecasts zero until its first bin completes.
+    pub fn new(cfg: ForecastConfig) -> RateEstimator {
+        RateEstimator {
+            cfg: ForecastConfig {
+                // ≥ 1 s: bin folds are amortized one per elapsed bin, so
+                // this bounds total work by the simulated horizon in
+                // seconds (a 0.0 width would otherwise spin ~forever on
+                // the first advance)
+                bin_s: cfg.bin_s.max(1.0),
+                alpha: cfg.alpha.clamp(1e-6, 1.0),
+                beta: cfg.beta.clamp(0.0, 1.0 - 1e-6),
+            },
+            level: 0.0,
+            trend: 0.0,
+            bin_start_s: f64::NAN, // set by the first observation
+            bin_count: 0,
+            bins_seen: 0,
+            observed: 0,
+        }
+    }
+
+    /// Completed bins folded into the estimate so far.
+    pub fn bins_seen(&self) -> u64 {
+        self.bins_seen
+    }
+
+    /// Fold every bin that ends at or before `t` into the level/trend.
+    fn complete_bins_until(&mut self, t: f64) {
+        if self.bin_start_s.is_nan() {
+            return; // nothing observed yet: no bin grid to advance
+        }
+        while self.bin_start_s + self.cfg.bin_s <= t {
+            let c = self.bin_count as f64;
+            if self.bins_seen == 0 {
+                // first completed bin initializes the level outright
+                self.level = c;
+                self.trend = 0.0;
+            } else {
+                let prev = self.level;
+                self.level =
+                    self.cfg.alpha * c + (1.0 - self.cfg.alpha) * (self.level + self.trend);
+                self.trend =
+                    self.cfg.beta * (self.level - prev) + (1.0 - self.cfg.beta) * self.trend;
+            }
+            self.bins_seen += 1;
+            self.bin_count = 0;
+            self.bin_start_s += self.cfg.bin_s;
+        }
+    }
+
+    /// Record one observed arrival at virtual time `t`. Arrivals must be
+    /// fed in non-decreasing time order (the fleet scheduler's feed is).
+    pub fn observe(&mut self, t: f64) {
+        if self.bin_start_s.is_nan() {
+            // align the bin grid to the virtual-time origin so identical
+            // streams land in identical bins regardless of who asks first
+            self.bin_start_s = (t.max(0.0) / self.cfg.bin_s).floor() * self.cfg.bin_s;
+        }
+        self.complete_bins_until(t);
+        self.bin_count += 1;
+        self.observed += 1;
+    }
+
+    /// Advance the estimator's clock to `t` without an arrival (folds the
+    /// empty bins in — idle gaps *are* evidence of a falling rate).
+    pub fn advance_to(&mut self, t: f64) {
+        self.complete_bins_until(t);
+    }
+
+    /// Current smoothed arrival rate (arrivals per second).
+    pub fn rate_per_s(&self) -> f64 {
+        if self.bins_seen == 0 {
+            0.0
+        } else {
+            self.level.max(0.0) / self.cfg.bin_s
+        }
+    }
+
+    /// Forecast arrivals over the next `horizon_s` seconds: the Holt
+    /// level + trend extrapolated over the horizon (clamped at zero).
+    /// A cold estimator (no completed bin) forecasts 0.
+    pub fn expected_arrivals(&self, horizon_s: f64) -> f64 {
+        if self.bins_seen == 0 || horizon_s <= 0.0 {
+            return 0.0;
+        }
+        clamped_linear_integral(self.level, self.trend, horizon_s / self.cfg.bin_s).max(0.0)
+    }
+}
+
+/// One [`RateEstimator`] per container image: the learned counterpart of
+/// the oracle's declared arrival schedule. The fleet scheduler feeds it
+/// every observed arrival and advances it to each prewarm tick, then
+/// [`PrewarmPolicy::desired_from`](super::PrewarmPolicy::desired_from)
+/// reads the per-image forecast.
+///
+/// # Examples
+///
+/// ```
+/// use smlt::warm::{ForecastBank, ForecastConfig};
+///
+/// let mut bank = ForecastBank::new(ForecastConfig::default());
+/// for k in 0..10 {
+///     bank.observe(42, 60.0 + k as f64 * 120.0);
+/// }
+/// bank.advance_to(1200.0);
+/// // ~5 arrivals of image 42 forecast over a 600 s lead window...
+/// assert!((bank.expected_arrivals(42, 600.0) - 5.0).abs() < 0.1);
+/// // ...and nothing for an image never observed
+/// assert_eq!(bank.expected_arrivals(7, 600.0), 0.0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ForecastBank {
+    cfg: ForecastConfig,
+    per_image: BTreeMap<ImageId, RateEstimator>,
+}
+
+impl ForecastBank {
+    /// An empty bank; estimators appear as images are first observed.
+    pub fn new(cfg: ForecastConfig) -> ForecastBank {
+        ForecastBank { cfg, per_image: BTreeMap::new() }
+    }
+
+    /// Record one observed arrival of `image` at virtual time `t`.
+    pub fn observe(&mut self, image: ImageId, t: f64) {
+        self.per_image
+            .entry(image)
+            .or_insert_with(|| RateEstimator::new(self.cfg))
+            .observe(t);
+    }
+
+    /// Advance every estimator's clock to `t` (fold in the idle bins).
+    pub fn advance_to(&mut self, t: f64) {
+        for est in self.per_image.values_mut() {
+            est.advance_to(t);
+        }
+    }
+
+    /// Forecast arrivals of `image` over the next `horizon_s` seconds
+    /// (0 for an image never observed).
+    pub fn expected_arrivals(&self, image: ImageId, horizon_s: f64) -> f64 {
+        self.per_image
+            .get(&image)
+            .map_or(0.0, |e| e.expected_arrivals(horizon_s))
+    }
+
+    /// The estimator for `image`, if any arrival has been observed.
+    pub fn estimator(&self, image: ImageId) -> Option<&RateEstimator> {
+        self.per_image.get(&image)
+    }
+
+    /// Total arrivals observed across all images.
+    pub fn observed(&self) -> u64 {
+        self.per_image.values().map(|e| e.observed).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_estimator_forecasts_nothing() {
+        let est = RateEstimator::new(ForecastConfig::default());
+        assert_eq!(est.rate_per_s(), 0.0);
+        assert_eq!(est.expected_arrivals(600.0), 0.0);
+        assert_eq!(est.bins_seen(), 0);
+    }
+
+    #[test]
+    fn steady_stream_converges_to_true_rate() {
+        // 3 arrivals per 100 s bin, fed for 50 bins
+        let mut est = RateEstimator::new(ForecastConfig { bin_s: 100.0, alpha: 0.3, beta: 0.0 });
+        for k in 0..150 {
+            est.observe(k as f64 * 100.0 / 3.0);
+        }
+        est.advance_to(5000.0);
+        let true_rate = 3.0 / 100.0;
+        assert!(
+            (est.rate_per_s() - true_rate).abs() < 0.2 * true_rate,
+            "estimated {} vs true {}",
+            est.rate_per_s(),
+            true_rate
+        );
+        assert_eq!(est.observed, 150);
+    }
+
+    #[test]
+    fn idle_gaps_pull_the_estimate_down() {
+        let mut est = RateEstimator::new(ForecastConfig::default());
+        for k in 0..20 {
+            est.observe(k as f64 * 60.0); // busy: 2 per bin
+        }
+        est.advance_to(1200.0);
+        let busy = est.rate_per_s();
+        assert!(busy > 0.0);
+        // a long silent stretch: the EWMA must decay toward zero
+        est.advance_to(1200.0 + 40.0 * 120.0);
+        assert!(
+            est.rate_per_s() < 0.05 * busy,
+            "idle decay: {} vs busy {}",
+            est.rate_per_s(),
+            busy
+        );
+    }
+
+    #[test]
+    fn trend_term_extrapolates_a_ramp() {
+        // per-bin counts 1,2,3,...: with a trend term the forecast over
+        // the next bins must exceed the pure-level forecast
+        let holt = |beta: f64| {
+            let mut est =
+                RateEstimator::new(ForecastConfig { bin_s: 100.0, alpha: 0.5, beta });
+            let mut t = 0.0;
+            for c in 1..=12u32 {
+                for _ in 0..c {
+                    est.observe(t);
+                    t += 100.0 / c as f64;
+                }
+            }
+            est.advance_to(1200.0);
+            est.expected_arrivals(500.0)
+        };
+        assert!(holt(0.3) > holt(0.0), "{} vs {}", holt(0.3), holt(0.0));
+    }
+
+    #[test]
+    fn negative_trend_never_forecasts_negative_arrivals() {
+        let mut est = RateEstimator::new(ForecastConfig { bin_s: 100.0, alpha: 0.6, beta: 0.5 });
+        // a burst then silence: trend goes negative
+        for k in 0..30 {
+            est.observe(k as f64 * 10.0);
+        }
+        est.advance_to(3000.0);
+        for h in [10.0, 100.0, 1000.0, 100_000.0] {
+            assert!(est.expected_arrivals(h) >= 0.0, "horizon {h}");
+        }
+    }
+
+    #[test]
+    fn degenerate_bin_width_is_clamped_not_spun() {
+        // a zero/negative bin width must clamp to the 1 s floor, so a
+        // long advance folds ~1e6 bins, not ~1e15
+        for bin_s in [0.0, -5.0, 1e-12] {
+            let mut est = RateEstimator::new(ForecastConfig { bin_s, alpha: 0.3, beta: 0.0 });
+            est.observe(0.0);
+            est.advance_to(1_000_000.0);
+            assert_eq!(est.bins_seen(), 1_000_000);
+            assert!(est.rate_per_s() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn estimator_is_deterministic() {
+        let run = || {
+            let mut est = RateEstimator::new(ForecastConfig::default());
+            let mut t = 0.0;
+            let mut r = crate::util::rng::Pcg::new(99);
+            for _ in 0..200 {
+                t += r.exponential(0.02);
+                est.observe(t);
+            }
+            est.advance_to(t + 500.0);
+            (est.rate_per_s(), est.expected_arrivals(600.0))
+        };
+        let (ra, ea) = run();
+        let (rb, eb) = run();
+        assert_eq!(ra.to_bits(), rb.to_bits());
+        assert_eq!(ea.to_bits(), eb.to_bits());
+    }
+
+    #[test]
+    fn bank_keeps_images_separate() {
+        let mut bank = ForecastBank::new(ForecastConfig::default());
+        for k in 0..10 {
+            bank.observe(1, k as f64 * 120.0);
+        }
+        bank.observe(2, 0.0);
+        bank.advance_to(1200.0);
+        assert!(bank.expected_arrivals(1, 600.0) > 1.0);
+        assert!(bank.expected_arrivals(1, 600.0) > bank.expected_arrivals(2, 600.0));
+        assert_eq!(bank.expected_arrivals(3, 600.0), 0.0, "unseen image");
+        assert_eq!(bank.observed(), 11);
+        assert!(bank.estimator(1).is_some() && bank.estimator(3).is_none());
+    }
+
+    #[test]
+    fn clamped_integral_cases() {
+        // constant positive / constant negative
+        assert!((clamped_linear_integral(2.0, 0.0, 3.0) - 6.0).abs() < 1e-12);
+        assert_eq!(clamped_linear_integral(-2.0, 0.0, 3.0), 0.0);
+        // rising from negative: only the positive tail counts
+        let v = clamped_linear_integral(-1.0, 1.0, 3.0);
+        assert!((v - 2.0).abs() < 1e-12, "∫₁³ (x-1) dx = 2, got {v}");
+        // falling to zero mid-horizon: area of the triangle
+        let w = clamped_linear_integral(2.0, -1.0, 10.0);
+        assert!((w - 2.0).abs() < 1e-12, "triangle area 2, got {w}");
+        // empty horizon
+        assert_eq!(clamped_linear_integral(5.0, 1.0, 0.0), 0.0);
+    }
+}

@@ -7,17 +7,24 @@
 //! hosting many* workflows those costs are largely avoidable — containers
 //! from a retiring fleet can serve the next launch of the same image, and
 //! a job's profiling measurements can seed the next same-family job's
-//! optimizer. Three pieces:
+//! optimizer. Four pieces:
 //!
 //! - [`pool`] — the [`WarmPool`]: fleet-wide warm-container inventory
-//!   keyed by image, with TTL eviction, capacity caps, and keep-alive
-//!   (GB-second) accounting,
+//!   keyed by image (optionally by image **and memory size** — exact
+//!   Lambda matching semantics, a config-gated ablation), with TTL
+//!   eviction, capacity caps, and keep-alive (GB-second) accounting,
 //! - [`prewarm`] — [`PrewarmPolicy`]: arrival-forecast-driven
 //!   pre-provisioning (trade keep-alive spend for cold-start latency
 //!   ahead of predicted bursts),
+//! - [`forecast`] — the [`ForecastSource`] behind a prewarm policy:
+//!   `Oracle` (the declared schedule trusted as a perfect forecast — the
+//!   bit-identical default) or `Learned` (an online EWMA/Holt
+//!   [`RateEstimator`] per image, fed by observed arrivals only),
 //! - [`posterior`] — the [`PosteriorBank`]: goal-agnostic profiling
 //!   measurements shared across jobs declaring the same model family, so
-//!   a repeat job's Bayesian search converges in fewer live probes.
+//!   a repeat job's Bayesian search converges in fewer live probes;
+//!   banked points age, and a borrowing job's GP discounts them by
+//!   inflating their noise with bank age (staleness discounting).
 //!
 //! [`WarmState`] bundles all three into the piece of shared world state
 //! the cluster layer carries ([`ClusterEnv::warm`]); the **disabled**
@@ -29,12 +36,14 @@
 //! [`ClusterEnv::warm`]: crate::cluster::ClusterEnv
 //! [`ClusterParams::warm`]: crate::cluster::ClusterParams
 
+pub mod forecast;
 pub mod pool;
 pub mod posterior;
 pub mod prewarm;
 
+pub use forecast::{ForecastBank, ForecastConfig, ForecastSource, RateEstimator};
 pub use pool::{ImageId, PoolConfig, WarmPool};
-pub use posterior::{BankConfig, FamilyId, FamilyObs, PosteriorBank};
+pub use posterior::{staleness_inflation, BankConfig, FamilyId, FamilyObs, PosteriorBank};
 pub use prewarm::{PrewarmPolicy, PrewarmTarget};
 
 use crate::costmodel::Pricing;
@@ -122,10 +131,13 @@ impl WarmState {
         self.bank.as_ref()
     }
 
-    /// Take up to `want` warm containers of `image`; 0 when disabled.
-    pub fn checkout(&mut self, image: ImageId, want: u32, now: f64) -> u32 {
+    /// Take up to `want` warm containers of `image` for a fleet whose
+    /// containers are configured with `mem_mb`; 0 when disabled. The
+    /// memory only matters under [`PoolConfig::match_memory`] (exact
+    /// Lambda semantics) — the default pool matches by image alone.
+    pub fn checkout(&mut self, image: ImageId, mem_mb: u32, want: u32, now: f64) -> u32 {
         match self.pool.as_mut() {
-            Some(p) if want > 0 => p.checkout(image, want, now),
+            Some(p) if want > 0 => p.checkout(image, mem_mb, want, now),
             _ => 0,
         }
     }
@@ -148,13 +160,21 @@ impl WarmState {
     pub fn prewarm_to(&mut self, image: ImageId, mem_mb: u32, desired: u32, now: f64, cold_median_s: f64) {
         let Some(p) = self.pool.as_mut() else { return };
         p.evict_expired(now);
-        let have = p.parked_for(image);
+        // count only containers that could actually serve the target:
+        // under match_memory, same-image containers of another size are
+        // not inventory for this (image, mem) pair — without this, a few
+        // wrong-size retirees would suppress the top-up entirely
+        let have = p.parked_matching(image, mem_mb);
         let desired = desired.min(p.cfg.per_image_cap);
         if desired <= have {
             return;
         }
+        // clamp to the caps' actual room (per-image room also counts the
+        // non-matching sizes) so an over-cap target does not re-attempt
+        // (and re-reject) the impossible remainder on every tick
+        let image_room = p.cfg.per_image_cap.saturating_sub(p.parked_for(image));
         let total_room = p.cfg.total_cap.saturating_sub(p.parked_total());
-        let want = (desired - have).min(total_room);
+        let want = (desired - have).min(image_room).min(total_room);
         if want == 0 {
             return;
         }
@@ -195,6 +215,14 @@ impl WarmState {
         if let Some(b) = self.bank.as_mut() {
             b.deposit(family, obs);
         }
+    }
+
+    /// GP-noise inflation factor for a banked observation `age_s` old
+    /// (staleness discounting; exactly 1.0 when the bank is disabled or
+    /// its [`BankConfig::noise_doubling_s`] is infinite — the
+    /// bit-identical default).
+    pub fn bank_noise_inflation(&self, age_s: f64) -> f64 {
+        self.bank.as_ref().map_or(1.0, |b| b.noise_inflation(age_s))
     }
 
     /// Bill containers still parked at end of run (see [`WarmPool::drain`]).
@@ -304,9 +332,9 @@ mod tests {
     #[test]
     fn disabled_state_is_a_strict_noop() {
         let mut w = WarmState::disabled();
-        assert_eq!(w.checkout(1, 8, 0.0), 0);
+        assert_eq!(w.checkout(1, 2048, 8, 0.0), 0);
         w.checkin(1, 2048, 8, 0.0);
-        assert_eq!(w.checkout(1, 8, 1.0), 0, "check-ins vanish");
+        assert_eq!(w.checkout(1, 2048, 8, 1.0), 0, "check-ins vanish");
         assert!(w.bank_prior(1).is_empty());
         w.prewarm_to(1, 2048, 16, 0.0, 0.35);
         w.finalize(100.0);
@@ -322,7 +350,7 @@ mod tests {
     fn enabled_state_round_trips_containers() {
         let mut w = WarmState::new(&WarmParams::enabled());
         w.checkin(1, 1024, 8, 0.0);
-        assert_eq!(w.checkout(1, 6, 10.0), 6);
+        assert_eq!(w.checkout(1, 1024, 6, 10.0), 6);
         w.finalize(50.0);
         let r = w.report();
         assert!(r.enabled);
@@ -331,6 +359,23 @@ mod tests {
         assert_eq!(r.evictions, 2, "drain evicts the stragglers");
         assert!(r.keepalive_cost > 0.0);
         assert_eq!(r.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn memory_keyed_prewarm_counts_only_servable_inventory() {
+        let mut w = WarmState::new(&WarmParams {
+            pool: Some(PoolConfig { match_memory: true, ..Default::default() }),
+            prewarm: None,
+            bank: None,
+        });
+        // wrong-size retirees of the same image are NOT inventory for a
+        // 3072 MB target: the top-up must still spawn all 8
+        w.checkin(1, 1024, 10, 0.0);
+        w.prewarm_to(1, 3072, 8, 1.0, 0.35);
+        assert_eq!(w.report().prewarm_spawns, 8);
+        assert_eq!(w.checkout(1, 3072, 8, 2.0), 8, "the burst launches warm");
+        // and the 1024 MB containers still serve their own size
+        assert_eq!(w.checkout(1, 1024, 10, 3.0), 10);
     }
 
     #[test]
@@ -344,6 +389,6 @@ mod tests {
         w.prewarm_to(5, 2048, 10, 1.0, 0.35);
         assert_eq!(w.report().prewarm_spawns, 10);
         assert_eq!(w.spawn_cost, cost_before);
-        assert_eq!(w.checkout(5, 10, 2.0), 10);
+        assert_eq!(w.checkout(5, 2048, 10, 2.0), 10);
     }
 }

@@ -56,6 +56,13 @@ pub struct PoolConfig {
     /// reloads). A partially warm fleet pays full init — training is
     /// gang-scheduled, so the barrier waits for its coldest worker.
     pub warm_init_fraction: f64,
+    /// exact Lambda matching semantics: a parked container only serves a
+    /// checkout requesting the **same memory size** it was configured
+    /// with (real platforms cannot resize a resident sandbox). `false`
+    /// (the default, and the pre-existing behavior) matches by image
+    /// alone — the optimistic ablation where re-optimized fleets always
+    /// reuse their older, differently-sized containers.
+    pub match_memory: bool,
 }
 
 impl Default for PoolConfig {
@@ -67,6 +74,7 @@ impl Default for PoolConfig {
             warm_start_median_s: 0.02,
             warm_start_sigma: 0.30,
             warm_init_fraction: 0.10,
+            match_memory: false,
         }
     }
 }
@@ -92,11 +100,11 @@ struct Parked {
 /// // a retiring 8-worker fleet parks its containers at t=100s
 /// pool.checkin(42, 3072, 8, 100.0);
 /// // a 4-worker launch of the same image at t=200s reuses four of them
-/// assert_eq!(pool.checkout(42, 4, 200.0), 4);
+/// assert_eq!(pool.checkout(42, 3072, 4, 200.0), 4);
 /// // a different image finds nothing warm
-/// assert_eq!(pool.checkout(7, 4, 200.0), 0);
+/// assert_eq!(pool.checkout(7, 3072, 4, 200.0), 0);
 /// // past the TTL the rest are evicted instead of reused
-/// assert_eq!(pool.checkout(42, 4, 500.0), 0);
+/// assert_eq!(pool.checkout(42, 3072, 4, 500.0), 0);
 /// assert_eq!(pool.evictions, 4);
 /// ```
 #[derive(Clone, Debug)]
@@ -151,6 +159,22 @@ impl WarmPool {
     /// Containers currently parked for `image`.
     pub fn parked_for(&self, image: ImageId) -> u32 {
         self.per_image.get(&image).copied().unwrap_or(0)
+    }
+
+    /// Containers currently parked that could actually serve a checkout
+    /// of (`image`, `mem_mb`): equal to [`parked_for`](Self::parked_for)
+    /// unless [`PoolConfig::match_memory`] restricts matches to the
+    /// exact memory size — what a prewarm top-up must count as existing
+    /// inventory, lest same-image containers of another size suppress
+    /// provisioning the size the target needs.
+    pub fn parked_matching(&self, image: ImageId, mem_mb: u32) -> u32 {
+        if !self.cfg.match_memory {
+            return self.parked_for(image);
+        }
+        self.parked
+            .iter()
+            .filter(|c| c.image == image && c.mem_mb == mem_mb)
+            .count() as u32
     }
 
     /// Keep-alive a container accrued from `since_s` to `leave_s`,
@@ -214,16 +238,21 @@ impl WarmPool {
     }
 
     /// Take up to `want` warm containers of `image` for a fleet launching
-    /// at `now`, most-recently-parked first (freshest residual TTL).
+    /// at `now` whose containers are configured with `mem_mb`,
+    /// most-recently-parked first (freshest residual TTL). Under
+    /// [`PoolConfig::match_memory`] only containers parked with exactly
+    /// `mem_mb` match (Lambda semantics); otherwise any memory serves.
     /// Returns the number actually taken; the shortfall is counted as
     /// misses (cold starts).
-    pub fn checkout(&mut self, image: ImageId, want: u32, now: f64) -> u32 {
+    pub fn checkout(&mut self, image: ImageId, mem_mb: u32, want: u32, now: f64) -> u32 {
         self.evict_expired(now);
         let mut taken = 0;
         let mut i = self.parked.len();
         while taken < want && i > 0 {
             i -= 1;
-            if self.parked[i].image != image {
+            if self.parked[i].image != image
+                || (self.cfg.match_memory && self.parked[i].mem_mb != mem_mb)
+            {
                 continue;
             }
             let c = self.parked.remove(i);
@@ -266,8 +295,8 @@ mod tests {
     fn hit_then_miss_accounting() {
         let mut p = pool(600.0);
         assert_eq!(p.checkin(1, 2048, 6, 0.0), 6);
-        assert_eq!(p.checkout(1, 4, 10.0), 4);
-        assert_eq!(p.checkout(1, 4, 10.0), 2, "only two left");
+        assert_eq!(p.checkout(1, 2048, 4, 10.0), 4);
+        assert_eq!(p.checkout(1, 2048, 4, 10.0), 2, "only two left");
         assert_eq!(p.hits, 6);
         assert_eq!(p.misses, 2);
         assert_eq!(p.parked_total(), 0);
@@ -279,7 +308,7 @@ mod tests {
         let mut p = pool(600.0);
         p.checkin(1, 1024, 3, 0.0);
         p.checkin(2, 1024, 3, 0.0);
-        assert_eq!(p.checkout(1, 5, 1.0), 3);
+        assert_eq!(p.checkout(1, 1024, 5, 1.0), 3);
         assert_eq!(p.parked_for(2), 3);
         assert!(p.conserves());
     }
@@ -288,7 +317,7 @@ mod tests {
     fn ttl_evicts_and_bills_exactly_ttl() {
         let mut p = pool(100.0);
         p.checkin(1, 1024, 2, 0.0);
-        assert_eq!(p.checkout(1, 2, 100.0), 0, "expired at exactly ttl");
+        assert_eq!(p.checkout(1, 1024, 2, 100.0), 0, "expired at exactly ttl");
         assert_eq!(p.evictions, 2);
         // 2 containers x 100 s x 1 GB
         assert!((p.keepalive_gb_s - 200.0).abs() < 1e-9);
@@ -315,9 +344,9 @@ mod tests {
         p.checkin(1, 1024, 1, 90.0);
         // at t=95 both are alive; the t=90 container is taken first and
         // bills 5 s, the t=0 one stays (and expires 5 s later)
-        assert_eq!(p.checkout(1, 1, 95.0), 1);
+        assert_eq!(p.checkout(1, 1024, 1, 95.0), 1);
         assert!((p.keepalive_gb_s - 5.0).abs() < 1e-9);
-        assert_eq!(p.checkout(1, 1, 101.0), 0);
+        assert_eq!(p.checkout(1, 1024, 1, 101.0), 0);
         assert_eq!(p.evictions, 1);
     }
 
@@ -337,7 +366,44 @@ mod tests {
         let mut p = pool(600.0);
         // parked by a driver whose clock ran ahead of the checkout's
         p.checkin(1, 1024, 1, 500.0);
-        assert_eq!(p.checkout(1, 1, 400.0), 1);
+        assert_eq!(p.checkout(1, 1024, 1, 400.0), 1);
         assert_eq!(p.keepalive_gb_s, 0.0, "negative dwell clamps to zero");
+    }
+
+    #[test]
+    fn memory_keyed_matching_requires_exact_memory() {
+        let mut p = WarmPool::new(PoolConfig { match_memory: true, ..Default::default() });
+        p.checkin(1, 1024, 3, 0.0);
+        p.checkin(1, 3072, 2, 0.0);
+        // a 3072 MB fleet only matches the 3072 MB containers
+        assert_eq!(p.checkout(1, 3072, 4, 1.0), 2);
+        assert_eq!(p.misses, 2);
+        // the 1024 MB ones are still parked, and serve their own size
+        assert_eq!(p.parked_for(1), 3);
+        assert_eq!(p.checkout(1, 1024, 3, 2.0), 3);
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn default_matching_ignores_memory() {
+        let mut p = pool(600.0);
+        p.checkin(1, 1024, 2, 0.0);
+        assert_eq!(p.checkout(1, 8192, 2, 1.0), 2, "image-only matching");
+        assert!(p.conserves());
+    }
+
+    #[test]
+    fn parked_matching_respects_the_memory_gate() {
+        let mut p = WarmPool::new(PoolConfig { match_memory: true, ..Default::default() });
+        p.checkin(1, 1024, 3, 0.0);
+        p.checkin(1, 3072, 2, 0.0);
+        assert_eq!(p.parked_for(1), 5);
+        assert_eq!(p.parked_matching(1, 3072), 2);
+        assert_eq!(p.parked_matching(1, 1024), 3);
+        assert_eq!(p.parked_matching(1, 8192), 0);
+        // with the gate off, any memory counts
+        let mut q = pool(600.0);
+        q.checkin(1, 1024, 3, 0.0);
+        assert_eq!(q.parked_matching(1, 8192), 3);
     }
 }

@@ -22,6 +22,14 @@
 //!   them but only counts live evaluations toward the best-observed value,
 //!   so a stale prior can misdirect early probes but never masquerade as a
 //!   measurement.
+//! - Priors **age**: a measurement banked hours ago reflects a platform
+//!   state (calibration drift, contention regime) the borrowing job may
+//!   no longer see. Rather than trusting arbitrarily stale points at face
+//!   value, the borrower inflates each point's GP noise by
+//!   [`staleness_inflation`] — doubling every
+//!   [`BankConfig::noise_doubling_s`] of age — so old evidence widens the
+//!   posterior instead of anchoring it. The default doubling time is
+//!   infinite (no discounting, bit-identical to the pre-staleness layer).
 
 use crate::optimizer::Config;
 use std::collections::BTreeMap;
@@ -43,6 +51,9 @@ pub struct FamilyObs {
     pub iter_s: f64,
     /// measured per-iteration cost ($)
     pub iter_cost: f64,
+    /// fleet virtual time the measurement was taken — what staleness
+    /// discounting ages the observation against
+    pub at_s: f64,
 }
 
 /// Knobs for a [`PosteriorBank`].
@@ -52,12 +63,30 @@ pub struct BankConfig {
     pub max_per_family: usize,
     /// most observations served as a prior to one optimization run
     pub max_prior: usize,
+    /// staleness discounting: a banked observation's GP noise doubles
+    /// every this many seconds of age (`f64::INFINITY`, the default,
+    /// disables discounting — every prior is trusted at face value, the
+    /// bit-identical pre-staleness behavior)
+    pub noise_doubling_s: f64,
 }
 
 impl Default for BankConfig {
     fn default() -> Self {
-        BankConfig { max_per_family: 32, max_prior: 12 }
+        BankConfig { max_per_family: 32, max_prior: 12, noise_doubling_s: f64::INFINITY }
     }
+}
+
+/// GP-noise inflation factor for an observation `age_s` old under a
+/// doubling time of `doubling_s`: `2^(age/doubling)`, so trust halves
+/// per doubling time. Exactly 1.0 at age 0 or with an infinite (or
+/// non-positive) doubling time; monotone non-decreasing in age; capped
+/// at `2^40` so an ancient point degrades to "almost no evidence"
+/// without overflowing the kernel matrix.
+pub fn staleness_inflation(age_s: f64, doubling_s: f64) -> f64 {
+    if !doubling_s.is_finite() || doubling_s <= 0.0 {
+        return 1.0;
+    }
+    (age_s.max(0.0) / doubling_s).min(40.0).exp2()
 }
 
 /// The shared measurement store (see the module docs).
@@ -74,6 +103,7 @@ impl Default for BankConfig {
 ///     global_batch: 256,
 ///     iter_s: 1.4,
 ///     iter_cost: 0.002,
+///     at_s: 120.0,
 /// });
 /// // a later job of family 7 seeds its GP from the banked point
 /// assert_eq!(bank.prior(7).len(), 1);
@@ -133,6 +163,13 @@ impl PosteriorBank {
     pub fn note_served(&mut self, n: u64) {
         self.prior_served += n;
     }
+
+    /// GP-noise inflation for an observation `age_s` old under this
+    /// bank's [`BankConfig::noise_doubling_s`] (see
+    /// [`staleness_inflation`]).
+    pub fn noise_inflation(&self, age_s: f64) -> f64 {
+        staleness_inflation(age_s, self.cfg.noise_doubling_s)
+    }
 }
 
 #[cfg(test)]
@@ -145,12 +182,17 @@ mod tests {
             global_batch: 128,
             iter_s,
             iter_cost: 0.001 * iter_s,
+            at_s: 0.0,
         }
     }
 
     #[test]
     fn per_family_cap_is_fifo() {
-        let mut b = PosteriorBank::new(BankConfig { max_per_family: 3, max_prior: 8 });
+        let mut b = PosteriorBank::new(BankConfig {
+            max_per_family: 3,
+            max_prior: 8,
+            ..Default::default()
+        });
         for i in 0..5 {
             b.deposit(1, obs(2 + 2 * i, i as f64));
         }
@@ -162,7 +204,11 @@ mod tests {
 
     #[test]
     fn prior_serves_newest_and_counts_only_what_was_used() {
-        let mut b = PosteriorBank::new(BankConfig { max_per_family: 10, max_prior: 2 });
+        let mut b = PosteriorBank::new(BankConfig {
+            max_per_family: 10,
+            max_prior: 2,
+            ..Default::default()
+        });
         for i in 0..4 {
             b.deposit(9, obs(2 + 2 * i, i as f64));
         }
@@ -175,5 +221,29 @@ mod tests {
         assert_eq!(b.prior_served, 2);
         assert!(b.prior(42).is_empty());
         assert_eq!(b.n_families(), 1);
+    }
+
+    #[test]
+    fn staleness_inflation_is_monotone_and_defaults_off() {
+        // infinite doubling time (the default): every age trusts fully
+        assert_eq!(staleness_inflation(0.0, f64::INFINITY), 1.0);
+        assert_eq!(staleness_inflation(1e9, f64::INFINITY), 1.0);
+        assert_eq!(staleness_inflation(100.0, 0.0), 1.0, "non-positive disables");
+        // finite doubling: 1.0 at age 0, doubling per doubling time
+        assert_eq!(staleness_inflation(0.0, 600.0), 1.0);
+        assert!((staleness_inflation(600.0, 600.0) - 2.0).abs() < 1e-12);
+        assert!((staleness_inflation(1800.0, 600.0) - 8.0).abs() < 1e-9);
+        // monotone non-decreasing in age, and capped (never inf/NaN)
+        let mut prev = 0.0;
+        for k in 0..2000 {
+            let f = staleness_inflation(k as f64 * 3600.0, 600.0);
+            assert!(f >= prev, "monotone: {f} < {prev} at {k}");
+            assert!(f.is_finite());
+            prev = f;
+        }
+        // negative age (clock skew across drivers) clamps to full trust
+        assert_eq!(staleness_inflation(-50.0, 600.0), 1.0);
+        let bank = PosteriorBank::new(BankConfig { noise_doubling_s: 600.0, ..Default::default() });
+        assert!((bank.noise_inflation(600.0) - 2.0).abs() < 1e-12);
     }
 }

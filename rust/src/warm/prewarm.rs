@@ -16,7 +16,17 @@
 //! cold-start latency (which threatens deadlines) to keep-alive spend
 //! (which the [`WarmReport`](super::WarmReport) itemizes), and
 //! `benches/fig16_warm_pool.rs` sweeps both sides of it.
+//!
+//! Where the forecast comes from is a separate knob: with
+//! [`ForecastSource::Oracle`] (the default) the declared arrival process
+//! is trusted as its own perfect forecast — the PR-5 behavior,
+//! bit-identical; with [`ForecastSource::Learned`] the policy instead
+//! reads an online EWMA/Holt estimate per image
+//! ([`ForecastBank`](super::ForecastBank)) that the fleet scheduler
+//! feeds with observed arrivals — no lookahead, which is what
+//! `benches/fig17_learned_forecast.rs` measures against the oracle.
 
+use super::forecast::{ForecastBank, ForecastSource};
 use super::pool::ImageId;
 use crate::cluster::ArrivalProcess;
 
@@ -41,10 +51,11 @@ pub struct PrewarmTarget {
 ///
 /// ```
 /// use smlt::cluster::ArrivalProcess;
-/// use smlt::warm::{PrewarmPolicy, PrewarmTarget};
+/// use smlt::warm::{ForecastSource, PrewarmPolicy, PrewarmTarget};
 ///
 /// let policy = PrewarmPolicy {
 ///     forecast: ArrivalProcess::Poisson { rate_per_s: 1.0 / 100.0, seed: 1 },
+///     source: ForecastSource::Oracle,
 ///     lead_s: 200.0,
 ///     tick_s: 60.0,
 ///     targets: vec![PrewarmTarget { image: 42, mem_mb: 3072, workers_per_job: 8, max_warm: 64 }],
@@ -52,12 +63,45 @@ pub struct PrewarmTarget {
 /// // 2 expected arrivals in the 200 s lead window x 8 workers each
 /// assert_eq!(policy.desired(&policy.targets[0], 0.0), 16);
 /// ```
+///
+/// With a **learned** source the policy reads the per-image estimator
+/// bank the fleet scheduler maintains instead of the declared schedule:
+///
+/// ```
+/// use smlt::cluster::ArrivalProcess;
+/// use smlt::warm::{ForecastBank, ForecastConfig, ForecastSource};
+/// use smlt::warm::{PrewarmPolicy, PrewarmTarget};
+///
+/// let policy = PrewarmPolicy {
+///     forecast: ArrivalProcess::Batch, // ignored by the learned path
+///     source: ForecastSource::Learned(ForecastConfig::default()),
+///     lead_s: 600.0,
+///     tick_s: 120.0,
+///     targets: vec![PrewarmTarget { image: 42, mem_mb: 3072, workers_per_job: 8, max_warm: 64 }],
+/// };
+/// let mut bank = ForecastBank::new(ForecastConfig::default());
+/// // before any observed arrival, a learned forecast provisions nothing
+/// assert_eq!(policy.desired_from(Some(&bank), &policy.targets[0], 0.0), 0);
+/// // ...after a steady observed stream it tracks the empirical rate
+/// for k in 0..10 {
+///     bank.observe(42, 60.0 + k as f64 * 120.0);
+/// }
+/// bank.advance_to(1200.0);
+/// let desired = policy.desired_from(Some(&bank), &policy.targets[0], 1200.0);
+/// assert!(desired >= 32, "≈5 forecast arrivals x 8 workers, got {desired}");
+/// ```
 #[derive(Clone, Debug)]
 pub struct PrewarmPolicy {
     /// the operator's model of upcoming job arrivals; deterministic
     /// schedules double as perfect forecasts, which makes the bench's
     /// pool-on/pool-off comparison a clean upper bound on prewarming value
     pub forecast: ArrivalProcess,
+    /// where the forecast actually comes from at each tick:
+    /// [`ForecastSource::Oracle`] trusts [`forecast`](Self::forecast)
+    /// (bit-identical to the pre-forecast layer),
+    /// [`ForecastSource::Learned`] reads the online per-image estimators
+    /// instead
+    pub source: ForecastSource,
     /// how far ahead the forecast looks (seconds): containers are wanted
     /// warm for jobs arriving within `[now, now + lead_s]`
     pub lead_s: f64,
@@ -69,13 +113,47 @@ pub struct PrewarmPolicy {
 }
 
 impl PrewarmPolicy {
-    /// Containers `target` should have warm at virtual time `now`:
+    /// Expected arrivals → desired warm containers, capped at `max_warm`.
+    fn clamp_want(expected: f64, target: &PrewarmTarget) -> u32 {
+        let want = (expected * target.workers_per_job as f64).ceil();
+        (want.max(0.0) as u32).min(target.max_warm)
+    }
+
+    /// Containers `target` should have warm at virtual time `now`
+    /// according to the **declared** arrival process (the oracle view):
     /// expected arrivals in the lead window times the per-job fleet size,
     /// capped at the target's `max_warm`.
     pub fn desired(&self, target: &PrewarmTarget, now: f64) -> u32 {
         let expected = self.forecast.expected_arrivals(now, now + self.lead_s.max(0.0));
-        let want = (expected * target.workers_per_job as f64).ceil();
-        (want.max(0.0) as u32).min(target.max_warm)
+        Self::clamp_want(expected, target)
+    }
+
+    /// Containers `target` should have warm at `now`, dispatching on
+    /// [`source`](Self::source): the oracle path is exactly
+    /// [`desired`](Self::desired); the learned path reads `learned` (the
+    /// per-image [`ForecastBank`] the fleet scheduler feeds with observed
+    /// arrivals), provisioning nothing for an image never observed — or
+    /// when no bank is supplied at all.
+    ///
+    /// The `ForecastConfig` embedded in a `Learned` source configures the
+    /// bank the **fleet scheduler** builds for this policy
+    /// (`ClusterSim::run`); this method itself trusts whatever bank it is
+    /// handed, so a caller driving it by hand must build the bank from
+    /// the same config for the smoothing knobs to take effect.
+    pub fn desired_from(
+        &self,
+        learned: Option<&ForecastBank>,
+        target: &PrewarmTarget,
+        now: f64,
+    ) -> u32 {
+        match (&self.source, learned) {
+            (ForecastSource::Oracle, _) => self.desired(target, now),
+            (ForecastSource::Learned(_), Some(bank)) => {
+                let expected = bank.expected_arrivals(target.image, self.lead_s.max(0.0));
+                Self::clamp_want(expected, target)
+            }
+            (ForecastSource::Learned(_), None) => 0,
+        }
     }
 }
 
@@ -91,6 +169,7 @@ mod tests {
     fn desired_scales_with_forecast_rate() {
         let p = PrewarmPolicy {
             forecast: ArrivalProcess::Poisson { rate_per_s: 0.01, seed: 3 },
+            source: ForecastSource::Oracle,
             lead_s: 300.0,
             tick_s: 60.0,
             targets: vec![target(1000)],
@@ -104,6 +183,7 @@ mod tests {
     fn desired_respects_max_warm() {
         let p = PrewarmPolicy {
             forecast: ArrivalProcess::Poisson { rate_per_s: 1.0, seed: 3 },
+            source: ForecastSource::Oracle,
             lead_s: 100.0,
             tick_s: 60.0,
             targets: vec![target(16)],
@@ -115,6 +195,7 @@ mod tests {
     fn trace_forecast_counts_the_window() {
         let p = PrewarmPolicy {
             forecast: ArrivalProcess::Trace(vec![10.0, 20.0, 500.0]),
+            source: ForecastSource::Oracle,
             lead_s: 100.0,
             tick_s: 50.0,
             targets: vec![target(1000)],
@@ -122,5 +203,41 @@ mod tests {
         assert_eq!(p.desired(&p.targets[0], 0.0), 20, "two arrivals in [0,100)");
         assert_eq!(p.desired(&p.targets[0], 450.0), 10, "one in [450,550)");
         assert_eq!(p.desired(&p.targets[0], 600.0), 0);
+    }
+
+    #[test]
+    fn oracle_source_dispatch_matches_desired_exactly() {
+        use crate::warm::ForecastConfig;
+        let p = PrewarmPolicy {
+            forecast: ArrivalProcess::Poisson { rate_per_s: 0.02, seed: 5 },
+            source: ForecastSource::Oracle,
+            lead_s: 250.0,
+            tick_s: 60.0,
+            targets: vec![target(500)],
+        };
+        let bank = ForecastBank::new(ForecastConfig::default());
+        for now in [0.0, 37.5, 1e4, 1e6] {
+            // oracle dispatch ignores the learned bank entirely
+            let want = p.desired(&p.targets[0], now);
+            assert_eq!(p.desired_from(Some(&bank), &p.targets[0], now), want);
+            assert_eq!(p.desired_from(None, &p.targets[0], now), want);
+        }
+    }
+
+    #[test]
+    fn learned_source_without_observations_provisions_nothing() {
+        use crate::warm::ForecastConfig;
+        let p = PrewarmPolicy {
+            forecast: ArrivalProcess::Poisson { rate_per_s: 10.0, seed: 5 },
+            source: ForecastSource::Learned(ForecastConfig::default()),
+            lead_s: 600.0,
+            tick_s: 60.0,
+            targets: vec![target(500)],
+        };
+        let bank = ForecastBank::new(ForecastConfig::default());
+        // the declared process forecasts thousands; the learned path has
+        // seen nothing and spends nothing
+        assert_eq!(p.desired_from(Some(&bank), &p.targets[0], 0.0), 0);
+        assert_eq!(p.desired_from(None, &p.targets[0], 0.0), 0);
     }
 }

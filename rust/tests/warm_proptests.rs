@@ -1,7 +1,8 @@
 //! Property tests for the warm-start layer: container conservation under
-//! random churn, bit-deterministic TTL eviction, and — the load-bearing
-//! one — a disabled (or zero-capacity) pool reproducing the pre-warm
-//! fleet bit-for-bit.
+//! random churn, bit-deterministic TTL eviction, memory-keyed matching
+//! exactness, learned-forecast convergence and no-lookahead identities,
+//! and — the load-bearing one — a disabled (or zero-capacity) pool
+//! reproducing the pre-warm fleet bit-for-bit.
 
 mod common;
 
@@ -10,7 +11,10 @@ use smlt::baselines::SystemKind;
 use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
 use smlt::coordinator::{SimJob, Workloads};
 use smlt::perfmodel::ModelProfile;
-use smlt::warm::{BankConfig, PoolConfig, WarmParams, WarmPool};
+use smlt::warm::{
+    BankConfig, ForecastConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget,
+    RateEstimator, WarmParams, WarmPool,
+};
 
 #[test]
 fn prop_pool_conserves_containers_under_churn() {
@@ -38,7 +42,7 @@ fn prop_pool_conserves_containers_under_churn() {
                     pool.prewarm(image, 128 + rng.below(8192) as u32, n, t);
                 }
                 _ => {
-                    let got = pool.checkout(image, n, t);
+                    let got = pool.checkout(image, 128 + rng.below(8192) as u32, n, t);
                     assert!(got <= n);
                 }
             }
@@ -94,7 +98,7 @@ fn prop_ttl_eviction_bit_deterministic() {
                         pool.evict_expired(t);
                     }
                     _ => {
-                        pool.checkout(image, 1 + r.below(8) as u32, t);
+                        pool.checkout(image, 1024 + r.below(4096) as u32, 1 + r.below(8) as u32, t);
                     }
                 }
             }
@@ -215,6 +219,198 @@ fn prop_warm_fleet_bit_deterministic() {
             a.warm.keepalive_cost.to_bits(),
             b.warm.keepalive_cost.to_bits()
         );
+    });
+}
+
+#[test]
+fn prop_ewma_converges_on_stationary_poisson() {
+    // on a stationary Poisson stream the learned estimator's rate must
+    // settle near the true rate: large bins + gentle smoothing keep the
+    // EWMA's sampling noise far inside the 50% acceptance band
+    cases(20, |rng| {
+        let rate = rng.uniform(0.01, 0.1);
+        let seed = rng.next_u64();
+        let proc = ArrivalProcess::Poisson { rate_per_s: rate, seed };
+        let mut est =
+            RateEstimator::new(ForecastConfig { bin_s: 600.0, alpha: 0.1, beta: 0.0 });
+        let times = proc.times(400);
+        for &t in &times {
+            est.observe(t);
+        }
+        let end = *times.last().unwrap();
+        est.advance_to(end);
+        let got = est.rate_per_s();
+        assert!(
+            (got - rate).abs() < 0.5 * rate,
+            "estimated {got} vs true {rate} after {} bins",
+            est.bins_seen()
+        );
+        // the forecast integrates the same rate over a horizon
+        let horizon = 3000.0;
+        let expect = est.expected_arrivals(horizon);
+        assert!(
+            (expect - rate * horizon).abs() < 0.5 * rate * horizon,
+            "forecast {expect} vs true {} over {horizon}s",
+            rate * horizon
+        );
+    });
+}
+
+#[test]
+fn prop_memory_keyed_matching_never_serves_mismatched_memory() {
+    // under match_memory, a checkout for memory m must serve exactly
+    // min(want, parked with memory m) — never a container of another
+    // size. With an effectively-infinite TTL the per-(image, mem) ledger
+    // below is exact, so any cross-memory serving would break it.
+    cases(30, |rng| {
+        let mut pool = WarmPool::new(PoolConfig {
+            ttl_s: 1e12,
+            match_memory: true,
+            ..Default::default()
+        });
+        let mems = [1024u32, 3072, 8192];
+        let mut ledger = std::collections::BTreeMap::<(u64, u32), u32>::new();
+        let mut t = 0.0;
+        for _ in 0..300 {
+            t += rng.uniform(0.0, 60.0);
+            let image = rng.below(2);
+            let mem = mems[rng.below(3) as usize];
+            let n = 1 + rng.below(10) as u32;
+            if rng.below(2) == 0 {
+                let accepted = pool.checkin(image, mem, n, t);
+                *ledger.entry((image, mem)).or_insert(0) += accepted;
+            } else {
+                let have = ledger.get(&(image, mem)).copied().unwrap_or(0);
+                let got = pool.checkout(image, mem, n, t);
+                assert_eq!(
+                    got,
+                    n.min(have),
+                    "image {image} mem {mem}: got {got}, want {n}, parked {have}"
+                );
+                *ledger.entry((image, mem)).or_insert(0) -= got;
+            }
+            assert!(pool.conserves());
+        }
+        let parked: u32 = ledger.values().sum();
+        assert_eq!(pool.parked_total(), parked, "external ledger agrees with the pool");
+    });
+}
+
+#[test]
+fn prop_learned_policy_with_unseen_image_is_bit_identical_to_no_prewarm() {
+    // the learned path's no-lookahead floor: a forecaster that never
+    // observes its target image provisions nothing, and the whole fleet
+    // — every RNG draw included — must be bit-for-bit the pool-only run.
+    // (This is the same strict-no-op discipline the disabled pool pins.)
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let pool_only = run_fleet(
+            WarmParams {
+                pool: Some(PoolConfig::default()),
+                prewarm: None,
+                bank: None,
+            },
+            case_seed,
+        );
+        let learned_unseen = run_fleet(
+            WarmParams {
+                pool: Some(PoolConfig::default()),
+                prewarm: Some(PrewarmPolicy {
+                    forecast: ArrivalProcess::Poisson { rate_per_s: 0.5, seed: 3 },
+                    source: ForecastSource::Learned(ForecastConfig::default()),
+                    lead_s: 600.0,
+                    tick_s: 60.0,
+                    // an image no submitted job ever declares
+                    targets: vec![PrewarmTarget {
+                        image: 0xDEAD_BEEF,
+                        mem_mb: 3072,
+                        workers_per_job: 16,
+                        max_warm: 128,
+                    }],
+                }),
+                bank: None,
+            },
+            case_seed,
+        );
+        assert_eq!(learned_unseen.warm.prewarm_spawns, 0, "nothing observed, nothing spawned");
+        assert_fleets_bit_identical(&pool_only, &learned_unseen);
+        assert_eq!(pool_only.warm.hits, learned_unseen.warm.hits);
+        assert_eq!(
+            pool_only.warm.keepalive_gb_s.to_bits(),
+            learned_unseen.warm.keepalive_gb_s.to_bits()
+        );
+    });
+}
+
+#[test]
+fn prop_oracle_and_learned_prewarm_fleets_bit_deterministic() {
+    // the forecast layer joins the simulator's core contract: same seed,
+    // same world — estimator bins, prewarm spawns, warm billing and all
+    cases(2, |rng| {
+        let case_seed = rng.next_u64();
+        for source in [
+            ForecastSource::Oracle,
+            ForecastSource::Learned(ForecastConfig::default()),
+        ] {
+            let params = || WarmParams {
+                pool: Some(PoolConfig { ttl_s: 1800.0, ..Default::default() }),
+                prewarm: Some(PrewarmPolicy {
+                    forecast: ArrivalProcess::Poisson { rate_per_s: 1.0 / 45.0, seed: 11 },
+                    source,
+                    lead_s: 600.0,
+                    tick_s: 120.0,
+                    targets: vec![PrewarmTarget {
+                        image: small_job(0).image_id(),
+                        mem_mb: 3072,
+                        workers_per_job: 16,
+                        max_warm: 128,
+                    }],
+                }),
+                bank: None,
+            };
+            let a = run_fleet(params(), case_seed);
+            let b = run_fleet(params(), case_seed);
+            assert_fleets_bit_identical(&a, &b);
+            assert_eq!(a.warm.prewarm_spawns, b.warm.prewarm_spawns);
+            assert_eq!(a.warm.hits, b.warm.hits);
+            assert_eq!(
+                a.warm.spawn_cost.to_bits(),
+                b.warm.spawn_cost.to_bits(),
+                "prewarm billing must be bit-deterministic"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_staleness_discounted_fleet_still_completes_and_banks() {
+    // aggressive staleness discounting changes which probes a warm search
+    // spends, never whether jobs finish; the bank still deposits and
+    // serves priors, and the warm search still respects its refresh budget
+    cases(3, |rng| {
+        let case_seed = rng.next_u64();
+        let mut r = smlt::util::rng::Pcg::new(case_seed);
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: r.below(1 << 20),
+            account_limit: 256,
+            warm: WarmParams {
+                pool: Some(PoolConfig::default()),
+                prewarm: None,
+                bank: Some(BankConfig { noise_doubling_s: 300.0, ..Default::default() }),
+            },
+            ..Default::default()
+        });
+        for i in 0..4u64 {
+            let mut j = small_job(8100 + 13 * i);
+            j.family = Some(0x57A1E);
+            sim.submit(j, i as f64 * 500.0, TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 10, "tenant {} wedged", j.tenant);
+        }
+        assert!(out.warm.bank_deposits > 0, "searches must bank measurements");
+        assert!(out.warm.bank_prior_served > 0, "later jobs must borrow priors");
     });
 }
 

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Dead-link check for the markdown documentation surface: every
+# *relative* link in README.md and docs/*.md must point at a file or
+# directory that exists in the repository. Pure shell + grep/sed — no
+# dependencies, mirroring the crate's offline-registry constraint.
+#
+# Handles targets containing spaces and %20-encoding; skips external
+# schemes and pure in-page anchors.
+#
+# Usage: scripts/check_doc_links.sh   (from the repository root)
+set -u
+
+fail=0
+for doc in README.md docs/*.md; do
+  [ -f "$doc" ] || continue
+  dir=$(dirname "$doc")
+  # markdown inline links: [text](target) — keep the target, drop
+  # in-page anchors, decode %20 (the common percent-escape in doc paths)
+  targets=$(grep -o '](\([^)]*\))' "$doc" \
+    | sed -e 's/^](//' -e 's/)$//' -e 's/#.*$//' -e 's/%20/ /g')
+  while IFS= read -r t; do
+    case "$t" in
+      http://*|https://*|mailto:*) continue ;;   # external
+      '') continue ;;                            # pure in-page anchor
+    esac
+    if [ ! -e "$dir/$t" ]; then
+      echo "DEAD LINK: $doc -> $t"
+      fail=1
+    fi
+  done <<EOF
+$targets
+EOF
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "doc link check FAILED"
+  exit 1
+fi
+echo "doc link check OK"
