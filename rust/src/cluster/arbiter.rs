@@ -30,6 +30,7 @@
 //! higher classes and larger shares — with preemption enabled this is a
 //! hard progress guarantee, which the cluster property suite pins down.
 
+use super::events::order_bits;
 use super::quota::TenantId;
 
 /// Pooled capacity the arbiter normalizes shares against.
@@ -165,6 +166,28 @@ pub trait Arbiter {
     fn starvation_bound_s(&self) -> f64 {
         f64::INFINITY
     }
+
+    /// Incremental-priority key for a **non-starved** blocked job: the
+    /// event kernel keeps `(key, submission index)` pairs in an ordered
+    /// set so "the arbiter's first choice among parked jobs" is an O(log
+    /// n) set lookup instead of rebuilding a `Vec<JobView>` per decision.
+    ///
+    /// Contract: for views with `starved == false`, the lexicographic
+    /// order of `(key, idx)` must equal this policy's
+    /// [`pick_blocked`](Self::pick_blocked) order (which is a stable sort,
+    /// so equal keys fall back to submission order) — the heap-vs-scan
+    /// property test enforces this bit-for-bit. The key must also be
+    /// *static over a blocked stretch*: parked jobs hold no lease
+    /// (`in_flight == 0`) and never step, so every built-in key is frozen
+    /// from park to wake. Keys may depend on `cap`; the kernel rebuilds
+    /// its rank set whenever capacity moves. Return `None` (the default)
+    /// if the policy's order cannot be captured by a static key — the
+    /// kernel then falls back to calling `pick_blocked` over the parked
+    /// set, which is always correct, just O(blocked) per decision.
+    fn blocked_rank(&self, v: &JobView, cap: Capacity) -> Option<[u64; 2]> {
+        let _ = (v, cap);
+        None
+    }
 }
 
 /// Stable position ordering by a key: positions into `views`, best first.
@@ -283,6 +306,12 @@ impl Arbiter for GoalClassArbiter {
     fn starvation_bound_s(&self) -> f64 {
         self.starvation_bound_s
     }
+
+    fn blocked_rank(&self, v: &JobView, _cap: Capacity) -> Option<[u64; 2]> {
+        // mirrors pick_blocked's (u8::MAX - class, arrive_s) for the
+        // non-starved case
+        Some([(u8::MAX - v.class) as u64, order_bits(v.arrive_s)])
+    }
 }
 
 /// Weighted fair sharing: tenants are entitled to pool slots in
@@ -330,6 +359,13 @@ impl Arbiter for WeightedFairArbiter {
 
     fn starvation_bound_s(&self) -> f64 {
         self.starvation_bound_s
+    }
+
+    fn blocked_rank(&self, v: &JobView, _cap: Capacity) -> Option<[u64; 2]> {
+        // mirrors fair_pick_blocked's (prospective share, arrive_s) with
+        // eff = weight, including the same 1e-9 floor
+        let prospective = (v.in_flight + v.workers) as f64 / v.weight.max(1e-9);
+        Some([order_bits(prospective), order_bits(v.arrive_s)])
     }
 }
 
@@ -415,6 +451,14 @@ impl Arbiter for ClassWeightedFairArbiter {
     fn starvation_bound_s(&self) -> f64 {
         self.starvation_bound_s
     }
+
+    fn blocked_rank(&self, v: &JobView, _cap: Capacity) -> Option<[u64; 2]> {
+        // same share expression fair_pick_blocked evaluates with
+        // eff = effective_weight
+        let prospective =
+            (v.in_flight + v.workers) as f64 / self.effective_weight(v).max(1e-9);
+        Some([order_bits(prospective), order_bits(v.arrive_s)])
+    }
 }
 
 /// Dominant-resource fairness over concurrency slots and aggregate
@@ -481,6 +525,15 @@ impl Arbiter for DrfArbiter {
 
     fn starvation_bound_s(&self) -> f64 {
         self.starvation_bound_s
+    }
+
+    fn blocked_rank(&self, v: &JobView, cap: Capacity) -> Option<[u64; 2]> {
+        // capacity-dependent: the kernel rebuilds its rank set on every
+        // capacity change, so the key may bake `cap` in
+        Some([
+            order_bits(v.prospective_dominant_share(cap)),
+            order_bits(v.arrive_s),
+        ])
     }
 }
 
@@ -664,6 +717,39 @@ mod tests {
             vec![0],
             "only the fleet above the requester's prospective share is fair game"
         );
+    }
+
+    #[test]
+    fn blocked_rank_orders_exactly_like_pick_blocked() {
+        // the kernel's incremental fast path must agree with the full
+        // pick over any non-starved candidate set, ties included
+        let arbiters: Vec<Box<dyn Arbiter>> = vec![
+            Box::new(GoalClassArbiter::default()),
+            Box::new(WeightedFairArbiter::default()),
+            Box::new(ClassWeightedFairArbiter::default()),
+            Box::new(DrfArbiter::default()),
+        ];
+        let mut views = vec![
+            view(0, 0, 7.0),
+            view(1, 3, 7.0), // class tie-breaks against idx 2
+            view(2, 3, 7.0),
+            view(3, 2, 0.0),
+            view(4, 0, 0.0),
+        ];
+        views[3].weight = 4.0;
+        views[4].workers = 2;
+        views[4].mem_mb = 10_240;
+        for arb in &arbiters {
+            let full = arb.pick_blocked(&views, cap()).unwrap();
+            let fast = views
+                .iter()
+                .enumerate()
+                .map(|(i, v)| (arb.blocked_rank(v, cap()).unwrap(), i))
+                .min()
+                .map(|(_, i)| i)
+                .unwrap();
+            assert_eq!(fast, full, "{}: rank key disagrees with pick_blocked", arb.name());
+        }
     }
 
     #[test]

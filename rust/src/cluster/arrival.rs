@@ -32,7 +32,7 @@ use crate::util::rng::Pcg;
 use std::f64::consts::TAU;
 
 /// A deterministic generator of job submission times (see the module
-/// docs for the four regimes).
+/// docs for the five regimes).
 #[derive(Clone, Debug)]
 pub enum ArrivalProcess {
     /// all jobs arrive at t = 0

@@ -1,0 +1,229 @@
+//! Discrete-event kernel primitives for the fleet scheduler.
+//!
+//! The original `ClusterSim` loop re-derived every scheduling decision by
+//! scanning all `n` job slots per iteration — `frontier()`,
+//! `next_runnable()`, the all-finished check, the wake-all loops. Fine at
+//! fig14's 256 jobs, hopeless at the ROADMAP's fleet scales. This module
+//! provides the indexed core the scheduler now runs on:
+//!
+//! - [`order_bits`] — a total-order bijection from (non-NaN) `f64` virtual
+//!   times to `u64`s, so event keys can be compared, stored in ordered
+//!   sets, and hashed without `partial_cmp` plumbing;
+//! - [`EventHeap`] — a binary min-heap of `(time, job index)` pairs keyed
+//!   by [`order_bits`], with the submission index as the tie-break. The
+//!   heap is *lazy*: entries are never deleted in place. A popped entry is
+//!   **valid** iff its job is unfinished, unblocked, and its stored time
+//!   bits still equal the job's current clock bits — anything else is a
+//!   stale leftover from before a wake, park, or preemption moved the job,
+//!   and is discarded on pop. Because per-job clocks are monotone
+//!   (`stall_until` and `step` only move time forward) and a fresh entry
+//!   is pushed at every transition *into* the runnable state, the top
+//!   valid entry is always exactly the job the legacy scan would pick:
+//!   the smallest `(clock, submission index)` among runnable jobs. A
+//!   duplicate entry with an identical key is harmless — it describes the
+//!   same decision the legacy scan would repeat.
+//!
+//! **Determinism argument.** `BinaryHeap` is deterministic for a fixed
+//! push/pop sequence, `(u64, u32)` keys are totally ordered with no
+//! `PartialOrd` escape hatches, and [`order_bits`] is injective on
+//! normalized (non-NaN, `-0.0`-folded) floats — so heap order is a pure
+//! function of the pushed `(time, idx)` multiset, exactly like the legacy
+//! `min_by` scan it replaces. The side-by-side property test
+//! (`rust/tests/heap_vs_scan.rs`) runs randomized fleets through both
+//! kernels and requires bit-identical outcomes.
+//!
+//! **Why capacity/prewarm changepoints are cursor lanes, not heap
+//! entries.** Control events (capacity changepoints, prewarm ticks) are
+//! merged into the same kernel as *sorted cursor lanes* drained against
+//! each iteration's frontier ([`ControlLane`]) rather than as heap
+//! entries. The legacy loop drains **all** due capacity changes before
+//! **all** due prewarm ticks within one iteration — when a frontier jump
+//! makes both due at once, a later-timed capacity change fires before an
+//! earlier-timed prewarm tick, and the shock's warm-pool check-ins are
+//! visible to that tick. A single time-ordered heap would reorder them
+//! and break bit-identity; the lanes keep the legacy drain order at the
+//! same O(1) per-iteration cost when nothing is due.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Map a (non-NaN) `f64` to a `u64` whose unsigned order matches the
+/// float order: for all non-NaN `a < b`, `order_bits(a) < order_bits(b)`,
+/// and `order_bits(a) == order_bits(b)` iff `a == b` (with `-0.0` folded
+/// into `0.0`). The usual sign-flip trick: negative floats get their bits
+/// inverted, non-negative floats get the sign bit set.
+pub fn order_bits(x: f64) -> u64 {
+    debug_assert!(!x.is_nan(), "NaN has no place on the virtual clock");
+    let x = if x == 0.0 { 0.0 } else { x }; // fold -0.0
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Lazy binary min-heap of per-job next-event times: `(order_bits(time),
+/// job index)` pairs, smallest first. See the module docs for the
+/// validity contract (the heap itself never checks job state — the
+/// scheduler validates on pop).
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<(u64, u32)>>,
+}
+
+impl EventHeap {
+    /// An empty heap sized for `n` jobs.
+    pub fn with_capacity(n: usize) -> EventHeap {
+        EventHeap { heap: BinaryHeap::with_capacity(n) }
+    }
+
+    /// Schedule job `idx` at virtual time `t`. O(log n).
+    pub fn push(&mut self, t: f64, idx: u32) {
+        self.heap.push(Reverse((order_bits(t), idx)));
+    }
+
+    /// The smallest `(time bits, idx)` entry, if any — possibly stale.
+    pub fn peek(&self) -> Option<(u64, u32)> {
+        self.heap.peek().map(|Reverse(e)| *e)
+    }
+
+    /// Remove and return the smallest entry, if any — possibly stale.
+    pub fn pop(&mut self) -> Option<(u64, u32)> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// Entries currently stored (live + stale).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop every entry (kernel resync after a capacity event).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+/// A sorted sequence of control changepoints drained against the
+/// frontier: O(1) per iteration when nothing is due. Used for capacity
+/// changes; prewarm ticks use the same pattern on a fixed grid (their
+/// next tick is a single `f64`, no vector needed).
+pub struct ControlLane<T> {
+    events: Vec<(f64, T)>,
+    next: usize,
+}
+
+impl<T: Copy> ControlLane<T> {
+    /// `events` must be sorted by time (changepoint generators emit them
+    /// sorted; debug builds verify).
+    pub fn new(events: Vec<(f64, T)>) -> ControlLane<T> {
+        debug_assert!(
+            events.windows(2).all(|w| w[0].0 <= w[1].0),
+            "control lane events must be time-sorted"
+        );
+        ControlLane { events, next: 0 }
+    }
+
+    /// The next event at or before `frontier`, advancing the cursor.
+    pub fn pop_due(&mut self, frontier: f64) -> Option<(f64, T)> {
+        let ev = *self.events.get(self.next)?;
+        if ev.0 <= frontier {
+            self.next += 1;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn order_bits_matches_float_order() {
+        let samples = [
+            f64::NEG_INFINITY,
+            -1.0e300,
+            -2.5,
+            -1.0,
+            -1.0e-300,
+            -0.0,
+            0.0,
+            1.0e-300,
+            0.5,
+            1.0,
+            2.5,
+            1.0e300,
+            f64::INFINITY,
+        ];
+        for (i, &a) in samples.iter().enumerate() {
+            for &b in &samples[i..] {
+                assert_eq!(
+                    order_bits(a) <= order_bits(b),
+                    a <= b,
+                    "order mismatch for {a} vs {b}"
+                );
+                assert_eq!(order_bits(a) == order_bits(b), a == b);
+            }
+        }
+        // -0.0 folds into 0.0 (partial_cmp calls them equal)
+        assert_eq!(order_bits(-0.0), order_bits(0.0));
+    }
+
+    #[test]
+    fn order_bits_matches_float_order_on_random_pairs() {
+        let mut rng = Pcg::new(0x2205_0185);
+        for _ in 0..10_000 {
+            let a = rng.uniform(-1.0e6, 1.0e6);
+            let b = rng.uniform(-1.0e6, 1.0e6);
+            assert_eq!(
+                order_bits(a) < order_bits(b),
+                a < b,
+                "order mismatch for {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn heap_pops_in_time_then_index_order() {
+        let mut h = EventHeap::with_capacity(8);
+        h.push(3.0, 0);
+        h.push(1.0, 2);
+        h.push(1.0, 1);
+        h.push(2.0, 3);
+        h.push(1.0, 5);
+        assert_eq!(h.len(), 5);
+        // equal times break ties by submission index, matching the
+        // stable legacy scan
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop()).map(|(_, i)| i).collect();
+        assert_eq!(order, vec![1, 2, 5, 3, 0]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn heap_tolerates_duplicate_entries() {
+        let mut h = EventHeap::with_capacity(2);
+        h.push(7.0, 4);
+        h.push(7.0, 4);
+        assert_eq!(h.pop(), Some((order_bits(7.0), 4)));
+        assert_eq!(h.pop(), Some((order_bits(7.0), 4)));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn control_lane_drains_in_order_against_the_frontier() {
+        let mut lane = ControlLane::new(vec![(10.0, 1u32), (20.0, 2), (20.0, 3), (40.0, 4)]);
+        assert_eq!(lane.pop_due(5.0), None);
+        assert_eq!(lane.pop_due(25.0), Some((10.0, 1)));
+        assert_eq!(lane.pop_due(25.0), Some((20.0, 2)));
+        assert_eq!(lane.pop_due(25.0), Some((20.0, 3)));
+        assert_eq!(lane.pop_due(25.0), None);
+        assert_eq!(lane.pop_due(1.0e9), Some((40.0, 4)));
+        assert_eq!(lane.pop_due(1.0e9), None);
+    }
+}

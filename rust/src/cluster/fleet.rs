@@ -3,7 +3,18 @@
 //!
 //! Event loop: the unfinished, unblocked job with the smallest virtual
 //! clock takes one step (ties break by submission order, so runs are
-//! deterministic). A job whose slot request is denied parks with no lease
+//! deterministic). [`ClusterSim::run`] drives that contract through an
+//! indexed discrete-event kernel — a lazy min-heap of per-job next-event
+//! times ([`super::events`]), ordered blocked/holder index sets with
+//! explicit wake-lists, and incremental arbiter rank state
+//! ([`Arbiter::blocked_rank`]) — so each scheduling decision costs
+//! O(log n) instead of the O(n) rescans of the original loop. The
+//! original loop survives verbatim as [`ClusterSim::run_legacy_scan`],
+//! the reference implementation the kernel is property-tested against
+//! (`rust/tests/heap_vs_scan.rs` requires bit-identical outcomes on
+//! randomized fleets).
+//!
+//! A job whose slot request is denied parks with no lease
 //! held (no hold-and-wait → no deadlock); it wakes when a step actually
 //! returns capacity to the pool. *Which* parked job is served first, and
 //! *whose* fleet is revoked when capacity must be freed, is delegated to a
@@ -50,13 +61,18 @@
 //!
 //! [`JobDriver`]: crate::coordinator::simrun::JobDriver
 
+use std::collections::BTreeSet;
+
 use super::arbiter::{Arbiter, ArbiterKind, Capacity, JobView};
 use super::arrival::ArrivalProcess;
 use super::capacity::CapacityTrace;
+use super::events::{order_bits, ControlLane, EventHeap};
 use super::quota::TenantQuota;
 use super::{ClusterEnv, TenantId};
 use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
-use crate::warm::{ForecastBank, ForecastSource, ImageId, WarmParams, WarmReport, WarmState};
+use crate::warm::{
+    ForecastBank, ForecastSource, ImageId, PrewarmPolicy, WarmParams, WarmReport, WarmState,
+};
 
 /// Knobs for a [`ClusterSim`] run.
 #[derive(Clone, Debug)]
@@ -109,6 +125,218 @@ struct Slot {
     /// a starvation-forced retry already failed in this release epoch
     starved_retry: bool,
     max_wait_streak_s: f64,
+}
+
+/// Control-event state shared by the heap kernel and the legacy scan:
+/// capacity changepoints and prewarm ticks drained against each
+/// iteration's frontier, plus the livelock guard. Factored out so both
+/// loops run *exactly* the same drain code (the heap-vs-scan property
+/// test depends on it).
+struct ControlState {
+    max_steps: u64,
+    changes: ControlLane<u32>,
+    prewarm: Option<PrewarmPolicy>,
+    next_prewarm_s: f64,
+    learned: Option<ForecastBank>,
+    arrival_feed: Vec<(f64, ImageId)>,
+    next_arrival: usize,
+}
+
+/// Index entry for a parked job: what the kernel must remove from its
+/// ordered sets when the job wakes (lazy heap entries need no removal —
+/// they invalidate through the job's `blocked`/`finished` flags).
+struct Parked {
+    /// `order_bits(blocked_since)` at park time
+    since_bits: u64,
+    /// the arbiter rank key inserted into [`Kernel::rank`], when the
+    /// policy supports incremental ranking
+    key: Option<[u64; 2]>,
+}
+
+/// The indexed scheduler state [`ClusterSim::run`] maintains alongside
+/// the job slots. Invariants (checked implicitly by the heap-vs-scan
+/// property test):
+///
+/// - every unfinished, unblocked job has a **valid** heap entry: one
+///   whose stored time bits equal `order_bits(driver.now())` (stale
+///   entries from before a park/wake/step are discarded on peek);
+/// - `blocked` holds exactly the unfinished parked jobs, and `parked[j]`
+///   records the set entries to remove on wake;
+/// - `starved_q` orders parked jobs by `(blocked_since, idx)` — the
+///   starvation queue (eligible jobs form a prefix, because
+///   `frontier - b` is monotone non-increasing in `b`);
+/// - `rank` orders parked jobs by the arbiter's incremental key
+///   ([`Arbiter::blocked_rank`]); valid only while no parked job is past
+///   the starvation bound (the starved flag would reorder the full
+///   pick) and every key is current for the capacity axes — a capacity
+///   change triggers [`Kernel::resync`];
+/// - `holders` is the ascending-index set of lease holders, standing in
+///   for the legacy full scan when building eviction candidate lists.
+struct Kernel {
+    heap: EventHeap,
+    blocked: BTreeSet<u32>,
+    starved_q: BTreeSet<(u64, u32)>,
+    rank: BTreeSet<([u64; 2], u32)>,
+    /// false once the arbiter declines to rank a view (custom policies):
+    /// the kernel then falls back to the legacy full `pick_blocked` scan
+    rank_supported: bool,
+    parked: Vec<Option<Parked>>,
+    holders: BTreeSet<u32>,
+    unfinished: usize,
+}
+
+impl Kernel {
+    fn new(n: usize) -> Kernel {
+        Kernel {
+            heap: EventHeap::with_capacity(n),
+            blocked: BTreeSet::new(),
+            starved_q: BTreeSet::new(),
+            rank: BTreeSet::new(),
+            rank_supported: true,
+            parked: (0..n).map(|_| None).collect(),
+            holders: BTreeSet::new(),
+            unfinished: n,
+        }
+    }
+
+    /// Index a newly parked job `j` (its `blocked_since` must be set).
+    fn park(&mut self, sim: &ClusterSim, j: usize) {
+        let i = j as u32;
+        self.blocked.insert(i);
+        let since = sim.jobs[j].blocked_since.expect("parked job must have blocked_since");
+        let since_bits = order_bits(since);
+        self.starved_q.insert((since_bits, i));
+        let key = if self.rank_supported {
+            // t_ref only feeds the view's starved flag, which rank keys
+            // must not depend on (see the blocked_rank contract)
+            let v = sim.view(j, since);
+            match sim.arbiter.blocked_rank(&v, sim.capacity_axes()) {
+                Some(k) => {
+                    self.rank.insert((k, i));
+                    Some(k)
+                }
+                None => {
+                    self.rank_supported = false;
+                    self.rank.clear();
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        self.parked[j] = Some(Parked { since_bits, key });
+    }
+
+    /// Remove job `j` from the parked indexes (no-op if it wasn't parked).
+    fn unpark(&mut self, j: usize) {
+        let i = j as u32;
+        self.blocked.remove(&i);
+        if let Some(p) = self.parked[j].take() {
+            self.starved_q.remove(&(p.since_bits, i));
+            if let Some(k) = p.key {
+                self.rank.remove(&(k, i));
+            }
+        }
+    }
+
+    /// Track whether job `j` currently holds a lease.
+    fn sync_holder(&mut self, sim: &ClusterSim, j: usize) {
+        if sim.jobs[j].driver.holds_lease() {
+            self.holders.insert(j as u32);
+        } else {
+            self.holders.remove(&(j as u32));
+        }
+    }
+
+    /// Rebuild every index from the slots — used at start-of-run and
+    /// after a capacity event, which parks victims / wakes sleepers
+    /// behind the kernel's back and moves the rank keys' capacity axes.
+    fn resync(&mut self, sim: &ClusterSim) {
+        self.heap.clear();
+        self.blocked.clear();
+        self.starved_q.clear();
+        self.rank.clear();
+        self.holders.clear();
+        for p in self.parked.iter_mut() {
+            *p = None;
+        }
+        for j in 0..sim.jobs.len() {
+            let s = &sim.jobs[j];
+            if s.finished {
+                continue;
+            }
+            if s.blocked {
+                self.park(sim, j);
+            } else {
+                self.heap.push(s.driver.now(), j as u32);
+                self.sync_holder(sim, j);
+            }
+        }
+    }
+
+    /// The next runnable job — the top *valid* heap entry, i.e. exactly
+    /// the `(clock, submission idx)` minimum the legacy scan computes.
+    /// Stale entries (job finished, parked, or stepped since the push)
+    /// are discarded on the way. The valid entry stays in the heap: the
+    /// caller may not step this job (a starved job outranks it).
+    fn next_runnable(&mut self, sim: &ClusterSim) -> Option<usize> {
+        loop {
+            let (bits, i) = self.heap.peek()?;
+            let s = &sim.jobs[i as usize];
+            if s.finished || s.blocked || order_bits(s.driver.now()) != bits {
+                self.heap.pop();
+            } else {
+                return Some(i as usize);
+            }
+        }
+    }
+
+    /// Mirror of [`ClusterSim::pick_starved`]: the longest-blocked job
+    /// past the bound that hasn't burned its forced retry. Eligible jobs
+    /// are a prefix of `starved_q` (`frontier - b` is monotone
+    /// non-increasing in `b`), so the walk stops at the first
+    /// not-yet-starved entry. The eligibility test is the *same
+    /// floating-point expression* the legacy scan evaluates — an
+    /// algebraic rearrangement would round differently.
+    fn pick_starved(&self, sim: &ClusterSim, frontier: f64, bound: f64) -> Option<usize> {
+        if !bound.is_finite() {
+            return None;
+        }
+        for &(bits, i) in self.starved_q.iter() {
+            let j = i as usize;
+            let b = sim.jobs[j].blocked_since.expect("parked job must have blocked_since");
+            debug_assert_eq!(order_bits(b), bits, "starved_q out of sync with blocked_since");
+            if !(frontier - b >= bound) {
+                break;
+            }
+            if !sim.jobs[j].starved_retry {
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Mirror of [`ClusterSim::pick_blocked_idx`]. Fast path: the rank
+    /// set's minimum, valid whenever the arbiter supports incremental
+    /// ranking and no parked job is past the starvation bound (a starved
+    /// view reorders the full pick, so starvation falls back to the
+    /// legacy scan — rare by construction).
+    fn pick_blocked(&self, sim: &ClusterSim, frontier: f64, bound: f64) -> Option<usize> {
+        if self.blocked.is_empty() {
+            return None;
+        }
+        let starvation_live = bound.is_finite()
+            && self.starved_q.iter().next().map_or(false, |&(_, i)| {
+                let b = sim.jobs[i as usize].blocked_since.expect("parked job without since");
+                frontier - b >= bound
+            });
+        if self.rank_supported && !starvation_live {
+            return self.rank.iter().next().map(|&(_, i)| i as usize);
+        }
+        let cand: Vec<usize> = self.blocked.iter().map(|&i| i as usize).collect();
+        let views: Vec<JobView> = cand.iter().map(|&j| sim.view(j, frontier)).collect();
+        sim.arbiter.pick_blocked(&views, sim.capacity_axes()).map(|p| cand[p])
+    }
 }
 
 /// One applied capacity change and what it cost.
@@ -198,6 +426,11 @@ pub struct FleetOutcome {
     pub shocks: Vec<ShockRecord>,
     /// what the warm-start layer did (all zeros when disabled)
     pub warm: WarmReport,
+    /// discrete events processed: one per scheduler step (a job step,
+    /// forced retry, or starvation-forced preemption attempt).
+    /// Bit-identical between the heap kernel and the legacy scan; the
+    /// fig14 scale sweep divides this by wall-clock time for events/s
+    pub events: u64,
 }
 
 impl FleetOutcome {
@@ -225,6 +458,9 @@ pub struct ClusterSim {
     jobs: Vec<Slot>,
     arbiter: Box<dyn Arbiter>,
     shocks: Vec<ShockRecord>,
+    /// indices into `shocks` whose victims are not all re-admitted yet —
+    /// recovery tracking touches only these, not every shock ever taken
+    unresolved_shocks: Vec<usize>,
 }
 
 impl ClusterSim {
@@ -245,7 +481,14 @@ impl ClusterSim {
             );
         }
         let arbiter = params.arbiter.build();
-        ClusterSim { params, env, jobs: Vec::new(), arbiter, shocks: Vec::new() }
+        ClusterSim {
+            params,
+            env,
+            jobs: Vec::new(),
+            arbiter,
+            shocks: Vec::new(),
+            unresolved_shocks: Vec::new(),
+        }
     }
 
     /// Replace the arbitration policy with a custom [`Arbiter`]
@@ -275,6 +518,13 @@ impl ClusterSim {
     ) -> TenantId {
         assert!(weight > 0.0, "fair-share weight must be > 0 (got {weight})");
         let tenant = self.env.pool.register_tenant(quota);
+        // shock bookkeeping indexes `jobs` by victim tenant id, so the
+        // tenant-id ↔ submission-order bijection is load-bearing
+        assert_eq!(
+            tenant as usize,
+            self.jobs.len(),
+            "tenant ids must mirror submission order (register tenants only via submit)"
+        );
         let driver = JobDriver::new(job, tenant, &self.env, arrive_s);
         self.jobs.push(Slot {
             driver,
@@ -298,27 +548,25 @@ impl ClusterSim {
         }
     }
 
-    /// Run every submitted job to completion; deterministic given the
-    /// params seed and the job seeds.
-    pub fn run(mut self) -> FleetOutcome {
+    /// Build the control-event state both event loops drain from: the
+    /// livelock guard, the capacity-changepoint lane, and the prewarm
+    /// grid with its optional learned forecaster.
+    fn control_state(&self) -> ControlState {
         let total_work: u64 = self
             .jobs
             .iter()
             .map(|s| s.driver.job.total_iters() + 10 * s.driver.job.phases.len() as u64 + 10)
             .sum();
         let max_steps = 100_000 + 50 * total_work * (self.jobs.len() as u64 + 1);
-        let mut steps = 0u64;
-        let changes = self.params.capacity.changepoints(self.params.account_limit);
-        let mut next_change = 0usize;
+        let changes = ControlLane::new(self.params.capacity.changepoints(self.params.account_limit));
         // forecast-driven prewarming fires on a fixed virtual-time grid
         let prewarm = self.params.warm.prewarm.clone();
-        let mut next_prewarm_s = 0.0f64;
         // learned forecasting: an online per-image rate estimator fed by
         // *observed* arrivals only — arrivals are folded in strictly
         // before the tick that could first see them, so the learned path
         // never looks ahead of the virtual clock. Oracle policies build
         // none of this and take exactly the pre-forecast code path.
-        let mut learned: Option<ForecastBank> = match &prewarm {
+        let learned: Option<ForecastBank> = match &prewarm {
             Some(p) => match p.source {
                 ForecastSource::Learned(cfg) => Some(ForecastBank::new(cfg)),
                 ForecastSource::Oracle => None,
@@ -334,47 +582,244 @@ impl ClusterSim {
                 .collect();
             arrival_feed.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("NaN arrival time"));
         }
-        let mut next_arrival = 0usize;
+        ControlState {
+            max_steps,
+            changes,
+            prewarm,
+            next_prewarm_s: 0.0,
+            learned,
+            arrival_feed,
+            next_arrival: 0,
+        }
+    }
 
+    /// Drain every control event the frontier has crossed — **all** due
+    /// capacity changes, then **all** due prewarm ticks (the order is
+    /// observable: a shock's warm-pool check-ins must be visible to a
+    /// tick due at the same frontier). Returns whether any capacity
+    /// change fired, which obligates the heap kernel to resync its
+    /// indexes (shocks park victims and growth wakes sleepers outside
+    /// the kernel's bookkeeping).
+    fn drain_control(&mut self, ctl: &mut ControlState, frontier: f64) -> bool {
+        let mut capacity_changed = false;
+        // capacity changes fire when the virtual frontier crosses them
+        while let Some((at, to)) = ctl.changes.pop_due(frontier) {
+            self.apply_capacity(at.max(0.0), to);
+            capacity_changed = true;
+        }
+        // prewarm ticks the frontier has crossed: top each target
+        // image up to its forecast-implied warm count, paying spawn
+        // cost now so the predicted burst launches warm
+        if let Some(policy) = &ctl.prewarm {
+            let cold_median = self.env.platform.limits.cold_start_median_s;
+            while ctl.next_prewarm_s <= frontier {
+                if let Some(bank) = ctl.learned.as_mut() {
+                    // feed the estimator every arrival observed by
+                    // this tick, then fold in the elapsed (possibly
+                    // idle) bins — observe → update EWMA → forecast
+                    while ctl.next_arrival < ctl.arrival_feed.len()
+                        && ctl.arrival_feed[ctl.next_arrival].0 <= ctl.next_prewarm_s
+                    {
+                        let (at, image) = ctl.arrival_feed[ctl.next_arrival];
+                        bank.observe(image, at);
+                        ctl.next_arrival += 1;
+                    }
+                    bank.advance_to(ctl.next_prewarm_s);
+                }
+                for t in &policy.targets {
+                    let desired = policy.desired_from(ctl.learned.as_ref(), t, ctl.next_prewarm_s);
+                    self.env.warm.prewarm_to(
+                        t.image,
+                        t.mem_mb,
+                        desired,
+                        ctl.next_prewarm_s,
+                        cold_median,
+                    );
+                }
+                ctl.next_prewarm_s += policy.tick_s;
+            }
+        }
+        capacity_changed
+    }
+
+    /// Run every submitted job to completion; deterministic given the
+    /// params seed and the job seeds.
+    ///
+    /// This is the indexed discrete-event kernel: each iteration peeks
+    /// the lazy event heap for the next runnable job (O(log n) amortized
+    /// against O(n) full scans in [`run_legacy_scan`](Self::run_legacy_scan)),
+    /// consults the ordered starvation and arbiter-rank sets for parked
+    /// jobs, and maintains those indexes across parks, wakes, and
+    /// preemptions. Outcomes are bit-identical to the legacy scan —
+    /// enforced by the `heap_vs_scan` property test.
+    pub fn run(mut self) -> FleetOutcome {
+        let mut ctl = self.control_state();
+        let bound = self.arbiter.starvation_bound_s();
+        let mut k = Kernel::new(self.jobs.len());
+        k.unfinished = self.jobs.iter().filter(|s| !s.finished).count();
+        k.resync(&self);
+
+        let mut steps = 0u64;
+        loop {
+            if k.unfinished == 0 {
+                break;
+            }
+            // the frontier: the top valid heap entry's clock, falling
+            // back to the earliest parked clock when nothing is runnable
+            // (computed once per iteration, before the control drains —
+            // exactly like the legacy scan)
+            let mut runnable = k.next_runnable(&self);
+            let frontier = match runnable {
+                Some(j) => self.jobs[j].driver.now(),
+                None => {
+                    let mut t = f64::INFINITY;
+                    for &i in &k.blocked {
+                        t = t.min(self.jobs[i as usize].driver.now());
+                    }
+                    t
+                }
+            };
+            if self.drain_control(&mut ctl, frontier) {
+                k.resync(&self);
+                runnable = k.next_runnable(&self);
+            }
+
+            let mut forced_starved = false;
+            let idx = match k.pick_starved(&self, frontier, bound) {
+                Some(i) => {
+                    // drag the starved job to the frontier so its
+                    // preemption happens "now", not in its stalled past
+                    self.jobs[i].driver.stall_until(frontier);
+                    forced_starved = true;
+                    i
+                }
+                None => match runnable {
+                    Some(i) => i,
+                    None => match k.pick_blocked(&self, frontier, bound) {
+                        // nothing runnable: force the arbiter's top parked
+                        // job to retry (no leases can be outstanding here,
+                        // so its clamped request must fit)
+                        Some(i) => i,
+                        None => break, // everything finished
+                    },
+                },
+            };
+
+            let releases_before = self.env.pool.releases;
+            let t_before = self.jobs[idx].driver.now();
+            k.unpark(idx);
+            let ev = {
+                let slot = &mut self.jobs[idx];
+                slot.blocked = false;
+                slot.driver.step(&mut self.env)
+            };
+            // wake parked jobs when the *step itself* returned capacity
+            // (reconfiguration, finish, or a denied resize dropping its
+            // old lease). This runs BEFORE any preemption below, so a
+            // preemption's releases stay earmarked for the preemptor:
+            // victims parked by try_preempt_with are not woken in the
+            // same iteration and cannot steal the freed slots straight
+            // back. blocked_since persists — a wake is a retry
+            // opportunity, not progress, so the continuous-wait clock
+            // keeps running. This is the kernel's explicit wake-list:
+            // the parked set *is* the list, no full scan needed.
+            if self.env.pool.releases > releases_before {
+                let t = self.jobs[idx].driver.now();
+                let woke: Vec<u32> = k.blocked.iter().copied().collect();
+                for i in woke {
+                    let j = i as usize;
+                    k.unpark(j);
+                    let slot = &mut self.jobs[j];
+                    slot.driver.stall_until(t);
+                    slot.blocked = false;
+                    slot.starved_retry = false;
+                    k.heap.push(slot.driver.now(), i);
+                }
+            }
+            match ev {
+                StepEvent::Finished => {
+                    self.jobs[idx].finished = true;
+                    self.close_wait_streak(idx, t_before);
+                    k.unfinished -= 1;
+                    k.holders.remove(&(idx as u32));
+                    debug_assert!(!self.jobs[idx].driver.holds_lease());
+                }
+                StepEvent::Progressed => {
+                    self.close_wait_streak(idx, t_before);
+                    k.heap.push(self.jobs[idx].driver.now(), idx as u32);
+                    k.sync_holder(&self, idx);
+                }
+                StepEvent::Blocked { want } => {
+                    let now = self.jobs[idx].driver.now();
+                    self.jobs[idx].blocked = true;
+                    if self.jobs[idx].blocked_since.is_none() {
+                        self.jobs[idx].blocked_since = Some(now);
+                    }
+                    // a denial drops any lease the job still held
+                    k.sync_holder(&self, idx);
+                    if self.params.preemption {
+                        let cand: Vec<usize> = k
+                            .holders
+                            .iter()
+                            .map(|&i| i as usize)
+                            .filter(|&j| {
+                                j != idx
+                                    && !self.jobs[j].finished
+                                    && self.jobs[j].driver.holds_lease()
+                            })
+                            .collect();
+                        let (victims, adopted) = self.try_preempt_with(idx, want, &cand);
+                        for v in victims {
+                            k.holders.remove(&(v as u32));
+                            k.park(&self, v);
+                        }
+                        if adopted {
+                            k.holders.insert(idx as u32);
+                            k.heap.push(self.jobs[idx].driver.now(), idx as u32);
+                        }
+                    }
+                    if self.jobs[idx].blocked {
+                        k.park(&self, idx);
+                    }
+                    if let Some(b) = self.jobs[idx].blocked_since {
+                        let s = &mut self.jobs[idx];
+                        s.max_wait_streak_s = s.max_wait_streak_s.max(now - b);
+                    }
+                    if forced_starved && self.jobs[idx].blocked {
+                        // one forced retry per release epoch, else a
+                        // starved-but-unsatisfiable job would spin the
+                        // loop without advancing any clock
+                        self.jobs[idx].starved_retry = true;
+                    }
+                }
+            }
+            self.note_shock_recovery(self.jobs[idx].driver.now());
+
+            steps += 1;
+            assert!(
+                steps < ctl.max_steps,
+                "cluster event loop exceeded {} steps — scheduling livelock",
+                ctl.max_steps
+            );
+        }
+        self.collect(steps)
+    }
+
+    /// The original O(n)-scan event loop, retained as the reference
+    /// implementation for [`run`](Self::run): every scheduling decision
+    /// re-scans all job slots. The `heap_vs_scan` property test runs
+    /// randomized fleets through both loops and requires bit-identical
+    /// outcomes; the fig14 scale sweep runs both to report the kernel's
+    /// events/s advantage.
+    pub fn run_legacy_scan(mut self) -> FleetOutcome {
+        let mut ctl = self.control_state();
+        let mut steps = 0u64;
         loop {
             if self.jobs.iter().all(|s| s.finished) {
                 break;
             }
             let frontier = self.frontier();
-            // capacity changes fire when the virtual frontier crosses them
-            while next_change < changes.len() && changes[next_change].0 <= frontier {
-                let (at, to) = changes[next_change];
-                self.apply_capacity(at.max(0.0), to);
-                next_change += 1;
-            }
-            // prewarm ticks the frontier has crossed: top each target
-            // image up to its forecast-implied warm count, paying spawn
-            // cost now so the predicted burst launches warm
-            if let Some(policy) = &prewarm {
-                let cold_median = self.env.platform.limits.cold_start_median_s;
-                while next_prewarm_s <= frontier {
-                    if let Some(bank) = learned.as_mut() {
-                        // feed the estimator every arrival observed by
-                        // this tick, then fold in the elapsed (possibly
-                        // idle) bins — observe → update EWMA → forecast
-                        while next_arrival < arrival_feed.len()
-                            && arrival_feed[next_arrival].0 <= next_prewarm_s
-                        {
-                            let (at, image) = arrival_feed[next_arrival];
-                            bank.observe(image, at);
-                            next_arrival += 1;
-                        }
-                        bank.advance_to(next_prewarm_s);
-                    }
-                    for t in &policy.targets {
-                        let desired = policy.desired_from(learned.as_ref(), t, next_prewarm_s);
-                        self.env
-                            .warm
-                            .prewarm_to(t.image, t.mem_mb, desired, next_prewarm_s, cold_median);
-                    }
-                    next_prewarm_s += policy.tick_s;
-                }
-            }
+            self.drain_control(&mut ctl, frontier);
 
             let mut forced_starved = false;
             let idx = match self.pick_starved(frontier) {
@@ -405,13 +850,7 @@ impl ClusterSim {
                 slot.driver.step(&mut self.env)
             };
             // wake parked jobs when the *step itself* returned capacity
-            // (reconfiguration, finish, or a denied resize dropping its
-            // old lease). This runs BEFORE any preemption below, so a
-            // preemption's releases stay earmarked for the preemptor:
-            // victims parked by try_preempt_for are not woken in the same
-            // iteration and cannot steal the freed slots straight back.
-            // blocked_since persists — a wake is a retry opportunity, not
-            // progress, so the continuous-wait clock keeps running.
+            // (see run() — the semantics and ordering are identical)
             if self.env.pool.releases > releases_before {
                 let t = self.jobs[idx].driver.now();
                 for slot in self.jobs.iter_mut() {
@@ -453,11 +892,12 @@ impl ClusterSim {
 
             steps += 1;
             assert!(
-                steps < max_steps,
-                "cluster event loop exceeded {max_steps} steps — scheduling livelock"
+                steps < ctl.max_steps,
+                "cluster event loop exceeded {} steps — scheduling livelock",
+                ctl.max_steps
             );
         }
-        self.collect()
+        self.collect(steps)
     }
 
     /// Smallest virtual clock among runnable jobs (falling back to parked
@@ -488,8 +928,25 @@ impl ClusterSim {
         }
     }
 
+    /// Slots actually held by job `j`'s outstanding lease (`None` when
+    /// it holds none). The driver's *planned* config diverges from the
+    /// held lease between a phase-boundary re-optimize and the next
+    /// `await_slots` swap, so anything that counts freed-on-eviction
+    /// slots must read the pool's lease record, not the plan — revoking
+    /// a 5-slot lease frees 5 slots no matter what fleet size the victim
+    /// planned next.
+    fn lease_slots(&self, j: usize) -> Option<u32> {
+        let id = self.jobs[j].driver.lease_id()?;
+        let n = self.env.pool.lease_n(id);
+        debug_assert!(n.is_some(), "driver holds lease {id} unknown to the pool");
+        n
+    }
+
     /// Scheduler-facing snapshot of job `j`; starvation is judged against
     /// `t_ref` (the frontier, or the requester's own clock mid-step).
+    /// `workers` reports the *held lease* size for lease holders (what an
+    /// eviction would actually free) and the planned fleet size for
+    /// everyone else (what an admission would request).
     fn view(&self, j: usize, t_ref: f64) -> JobView {
         let s = &self.jobs[j];
         let bound = self.arbiter.starvation_bound_s();
@@ -500,7 +957,7 @@ impl ClusterSim {
             class: s.driver.job.goal.class(),
             arrive_s: s.arrive_s,
             weight: s.weight,
-            workers: cfg.workers,
+            workers: self.lease_slots(j).unwrap_or(cfg.workers),
             mem_mb: cfg.mem_mb,
             holds_lease: s.driver.holds_lease(),
             in_flight: self.env.pool.tenant_in_flight(s.driver.tenant),
@@ -579,9 +1036,6 @@ impl ClusterSim {
     /// boundary first cannot snipe them), and nothing is evicted at all
     /// unless the permitted victims can actually cover the request.
     fn try_preempt_for(&mut self, idx: usize, want: u32) {
-        let tenant = self.jobs[idx].driver.tenant;
-        let t = self.jobs[idx].driver.now();
-        let requester = self.view(idx, t);
         let cand: Vec<usize> = self
             .jobs
             .iter()
@@ -589,16 +1043,31 @@ impl ClusterSim {
             .filter(|(j, s)| *j != idx && !s.finished && s.driver.holds_lease())
             .map(|(j, _)| j)
             .collect();
+        self.try_preempt_with(idx, want, &cand);
+    }
+
+    /// [`try_preempt_for`](Self::try_preempt_for) with an explicit
+    /// candidate list (ascending job index; the heap kernel supplies its
+    /// holder set instead of a full scan). Returns the victims actually
+    /// revoked and whether the requester adopted a fresh lease, so the
+    /// caller can resync its indexes.
+    fn try_preempt_with(&mut self, idx: usize, want: u32, cand: &[usize]) -> (Vec<usize>, bool) {
+        let tenant = self.jobs[idx].driver.tenant;
+        let t = self.jobs[idx].driver.now();
+        let requester = self.view(idx, t);
         let views: Vec<JobView> = cand.iter().map(|&j| self.view(j, t)).collect();
         let order = self
             .arbiter
             .eviction_order(Some(&requester), &views, self.capacity_axes());
         // feasibility first: evicting victims without being able to
-        // satisfy `want` would charge them a restart for nothing
+        // satisfy `want` would charge them a restart for nothing. The
+        // views report *held-lease* sizes, so a victim resized mid-run
+        // counts only the slots its eviction would actually free
         let preemptable: u64 = order.iter().map(|&p| views[p].workers as u64).sum();
         if self.env.pool.grantable(tenant) as u64 + preemptable < want as u64 {
-            return;
+            return (Vec::new(), false);
         }
+        let mut victims = Vec::new();
         for &p in &order {
             if self.env.pool.grantable(tenant) >= want {
                 break;
@@ -610,14 +1079,18 @@ impl ClusterSim {
             if self.jobs[j].blocked_since.is_none() {
                 self.jobs[j].blocked_since = Some(self.jobs[j].driver.now());
             }
+            victims.push(j);
         }
         // reserve the freed slots for the requester immediately: its
         // next step re-enters await_slots, which swaps this lease for a
         // fresh one of the same size atomically within that step
+        let mut adopted = false;
         if let super::Acquire::Granted(id) = self.env.pool.try_acquire(tenant, want) {
             self.jobs[idx].driver.adopt_lease(id);
             self.jobs[idx].blocked = false;
+            adopted = true;
         }
+        (victims, adopted)
     }
 
     /// Apply one capacity change: reclaim leases (arbiter-ordered) until
@@ -647,7 +1120,13 @@ impl ClusterSim {
                     break;
                 }
                 let j = holders[p];
-                let freed = self.jobs[j].driver.current_config().workers;
+                // count what the revocation actually frees: the held
+                // lease's slots, not the victim's planned next config
+                // (the two diverge between a re-optimize and the next
+                // lease swap — see lease_slots)
+                let freed = self
+                    .lease_slots(j)
+                    .expect("eviction victim must hold a lease");
                 self.jobs[j].driver.preempt(&mut self.env);
                 self.jobs[j].driver.stall_until(at_s);
                 self.jobs[j].blocked = true;
@@ -672,6 +1151,9 @@ impl ClusterSim {
             }
         }
         let recovered_s = if victim_tenants.is_empty() { Some(at_s) } else { None };
+        if recovered_s.is_none() {
+            self.unresolved_shocks.push(self.shocks.len());
+        }
         self.shocks.push(ShockRecord {
             at_s,
             from_limit: from,
@@ -685,37 +1167,33 @@ impl ClusterSim {
     }
 
     /// Track, per shock, the post-shock in-flight peak and the moment all
-    /// its victims were running (or done) again.
+    /// its victims were running (or done) again. Only shocks with
+    /// outstanding victims are visited (the `unresolved_shocks` index),
+    /// so the per-step cost is O(unresolved), not O(all shocks ever
+    /// taken). Victim tenant ids index `jobs` directly — safe because
+    /// `submit_weighted` asserts the tenant-id ↔ submission-order
+    /// bijection.
     fn note_shock_recovery(&mut self, t: f64) {
-        if self.shocks.is_empty() {
-            return;
-        }
         let total = self.env.pool.total_in_flight();
-        let last = self.shocks.len() - 1;
-        for k in 0..self.shocks.len() {
-            if k == last {
-                let rec = &mut self.shocks[k];
-                rec.peak_after = rec.peak_after.max(total);
-            }
-            if self.shocks[k].recovered_s.is_some() {
-                continue;
-            }
-            let mut all_back = true;
-            for vi in 0..self.shocks[k].victim_tenants.len() {
-                let v = self.shocks[k].victim_tenants[vi] as usize;
-                let s = &self.jobs[v];
-                if !(s.finished || s.driver.holds_lease()) {
-                    all_back = false;
-                    break;
-                }
-            }
+        let Some(last) = self.shocks.last_mut() else {
+            return;
+        };
+        last.peak_after = last.peak_after.max(total);
+        let ClusterSim { shocks, jobs, unresolved_shocks, .. } = self;
+        unresolved_shocks.retain(|&k| {
+            let rec = &mut shocks[k];
+            let all_back = rec.victim_tenants.iter().all(|&v| {
+                let s = &jobs[v as usize];
+                s.finished || s.driver.holds_lease()
+            });
             if all_back {
-                self.shocks[k].recovered_s = Some(t);
+                rec.recovered_s = Some(t);
             }
-        }
+            !all_back
+        });
     }
 
-    fn collect(self) -> FleetOutcome {
+    fn collect(self, events: u64) -> FleetOutcome {
         let ClusterSim { mut env, jobs, arbiter, shocks, .. } = self;
         let peak_in_flight = env.pool.peak_in_flight;
         let denials = env.pool.denials;
@@ -764,6 +1242,7 @@ impl ClusterSim {
             arbiter,
             shocks,
             warm,
+            events,
         }
     }
 }
@@ -815,6 +1294,92 @@ mod tests {
         );
         assert_eq!(out.arbiter, "goal-class");
         assert!(out.shocks.is_empty(), "static capacity never shocks");
+        assert!(out.events > 0, "a finished fleet processed at least one event");
+    }
+
+    #[test]
+    fn heap_kernel_matches_legacy_scan_on_a_shocked_contended_fleet() {
+        // the dedicated property test (tests/heap_vs_scan.rs) sweeps
+        // randomized fleets; this is the in-tree smoke version with
+        // contention, a capacity shock, and preemption all active
+        let build = || {
+            let mut sim = ClusterSim::new(ClusterParams {
+                account_limit: 24,
+                capacity: CapacityTrace::Step { at_s: 300.0, to: 12 },
+                ..Default::default()
+            });
+            for i in 0..5u64 {
+                sim.submit(small_job(40 + i), i as f64 * 45.0, TenantQuota::unlimited());
+            }
+            sim
+        };
+        let a = build().run();
+        let b = build().run_legacy_scan();
+        assert_eq!(a.events, b.events, "both kernels must process identical steps");
+        assert!(a.events > 0);
+        assert_eq!(a.denials, b.denials);
+        assert_eq!(a.peak_in_flight, b.peak_in_flight);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.shocks.len(), b.shocks.len());
+        for (x, y) in a.shocks.iter().zip(b.shocks.iter()) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.reclaimed_leases, y.reclaimed_leases);
+            assert_eq!(x.reclaimed_slots, y.reclaimed_slots);
+            assert_eq!(x.victim_tenants, y.victim_tenants);
+            assert_eq!(x.recovered_s, y.recovered_s);
+            assert_eq!(x.peak_after, y.peak_after);
+        }
+        for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+            assert_eq!(x.finish_s, y.finish_s, "tenant {} diverged", x.tenant);
+            assert_eq!(x.queue_wait_s, y.queue_wait_s);
+            assert_eq!(x.max_wait_streak_s, y.max_wait_streak_s);
+            assert_eq!(x.preemptions, y.preemptions);
+            assert_eq!(x.outcome.total_cost(), y.outcome.total_cost());
+        }
+    }
+
+    #[test]
+    fn preemption_feasibility_counts_lease_slots_not_planned_config() {
+        use crate::cluster::Acquire;
+        // a victim whose *held* lease (5 slots) is smaller than its
+        // *planned* config (the driver plans the job's 32-worker fixed
+        // fleet at submit): feasibility must count the 5 slots an
+        // eviction actually frees, not the 32 planned ones
+        let mut sim = ClusterSim::new(ClusterParams {
+            account_limit: 8,
+            ..Default::default()
+        });
+        let victim = sim.submit(small_job(1), 0.0, TenantQuota::unlimited());
+        let mut rq_job = small_job(2);
+        rq_job.goal = Goal::Deadline { t_max_s: 3600.0 }; // outclasses the victim
+        let requester = sim.submit(rq_job, 0.0, TenantQuota::unlimited());
+        let Acquire::Granted(id) = sim.env.pool.try_acquire(victim, 5) else {
+            panic!("an 8-slot account must grant 5");
+        };
+        sim.jobs[victim as usize].driver.adopt_lease(id);
+        assert_eq!(
+            sim.jobs[victim as usize].driver.current_config().workers,
+            32,
+            "the planned config must diverge from the held lease for this test to bite"
+        );
+        assert_eq!(sim.view(victim as usize, 0.0).workers, 5, "views report the held lease");
+        // requester wants 10: grantable (3) + the victim's real 5 == 8
+        // < 10, so nothing may be evicted. Counting the planned 32 would
+        // claim feasibility and revoke the victim's lease for nothing.
+        let (victims, adopted) = sim.try_preempt_with(requester as usize, 10, &[victim as usize]);
+        assert!(victims.is_empty(), "infeasible request must evict nobody");
+        assert!(!adopted);
+        assert_eq!(sim.jobs[victim as usize].driver.preemptions, 0);
+        assert!(sim.jobs[victim as usize].driver.holds_lease());
+        assert_eq!(sim.env.pool.total_in_flight(), 5);
+        // positive control: want == 8 is exactly coverable (3 + 5), so
+        // the eviction proceeds and the requester adopts the fresh lease
+        let (victims, adopted) = sim.try_preempt_with(requester as usize, 8, &[victim as usize]);
+        assert_eq!(victims, vec![victim as usize]);
+        assert!(adopted);
+        assert_eq!(sim.jobs[victim as usize].driver.preemptions, 1);
+        assert!(sim.jobs[requester as usize].driver.holds_lease());
+        assert_eq!(sim.env.pool.total_in_flight(), 8);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! The single-job simulator ([`crate::coordinator::simrun`]) answers "how
 //! does one job behave"; this layer answers the paper's actual premise —
 //! a serverless platform *continuously hosting many* ML workflows with
-//! dynamic resource demands. Three pieces:
+//! dynamic resource demands. Six pieces:
 //!
 //! - [`arrival`] — deterministic job arrival processes (batch / Poisson /
 //!   diurnal / per-tenant online-learning bursts / trace replay),
@@ -18,6 +18,11 @@
 //! - [`capacity`] — capacity schedules ([`CapacityTrace`]): step / ramp /
 //!   replayed-trace changes to the account limit mid-run (spot-style
 //!   reclamation),
+//! - [`events`] — the discrete-event kernel primitives: a lazy binary
+//!   min-heap of per-job next-event times keyed by the virtual clock
+//!   (submission-order tie-break) plus sorted control lanes for
+//!   capacity/prewarm changepoints, which take the scheduler's
+//!   per-decision cost from O(n) scans to O(log n),
 //! - [`fleet`] — the fleet scheduler: advances per-job [`JobDriver`]s in
 //!   virtual-time order over one shared [`ClusterEnv`], delegating queue
 //!   order and eviction order to the configured [`Arbiter`], applying
@@ -41,6 +46,7 @@
 pub mod arbiter;
 pub mod arrival;
 pub mod capacity;
+pub mod events;
 pub mod fleet;
 pub mod quota;
 
@@ -50,6 +56,7 @@ pub use arbiter::{
 };
 pub use arrival::ArrivalProcess;
 pub use capacity::CapacityTrace;
+pub use events::{order_bits, ControlLane, EventHeap};
 pub use fleet::{ClusterParams, ClusterSim, FleetOutcome, JobOutcome, ShockRecord};
 pub use quota::{Acquire, Lease, QuotaPool, TenantId, TenantQuota};
 

@@ -5,12 +5,20 @@
 //! [`QuotaPool`] arbitrates it: each tenant (job) may hold at most its
 //! quota, the account may hold at most its limit, and every grant is a
 //! [`Lease`] that must be released before the slots return. The pool is
-//! the conservation authority — its invariants (checked on every
-//! mutation) are exactly what the cluster property tests assert:
+//! the conservation authority — its invariants are exactly what the
+//! cluster property tests assert:
 //!
 //! 1. total in-flight == sum of per-tenant in-flight == sum of leases,
 //! 2. total in-flight never exceeds the account limit,
 //! 3. per-tenant in-flight never exceeds that tenant's quota.
+//!
+//! Invariant 2 is cheap and checked on every mutation in all builds; the
+//! O(leases) sum audits (1 and 3) run on every mutation in debug builds
+//! only — at the 10^4–10^5 tenant scales the fig14 sweep now reaches, a
+//! per-mutation full-pool walk would dominate the simulator's runtime.
+//! Lease lookups are id-indexed (a `HashMap` shadowing the lease vector),
+//! so [`release`](QuotaPool::release) and
+//! [`lease_n`](QuotaPool::lease_n) are O(1) instead of a linear scan.
 
 /// A tenant's identity: its registration index in the pool (and, in a
 /// [`ClusterSim`](super::fleet::ClusterSim) run, its index in the
@@ -67,6 +75,9 @@ pub struct QuotaPool {
     in_flight: Vec<u32>,
     total: u32,
     leases: Vec<Lease>,
+    /// lease id → position in `leases` (kept exact across the
+    /// `swap_remove` in [`release`](Self::release))
+    lease_pos: std::collections::HashMap<u64, usize>,
     next_id: u64,
     /// high-water mark of total in-flight (conservation evidence)
     pub peak_in_flight: u32,
@@ -87,6 +98,7 @@ impl QuotaPool {
             in_flight: Vec::new(),
             total: 0,
             leases: Vec::new(),
+            lease_pos: std::collections::HashMap::new(),
             next_id: 0,
             peak_in_flight: 0,
             denials: 0,
@@ -124,6 +136,15 @@ impl QuotaPool {
     /// The outstanding leases (conservation audits).
     pub fn leases(&self) -> &[Lease] {
         &self.leases
+    }
+
+    /// Slots held by an outstanding lease (`None` for an unknown or
+    /// already-released id). O(1) via the id index — this is what the
+    /// fleet scheduler's preemption feasibility check and shock
+    /// reclamation accounting sum, instead of trusting a victim's
+    /// *planned* configuration.
+    pub fn lease_n(&self, lease_id: u64) -> Option<u32> {
+        self.lease_pos.get(&lease_id).map(|&p| self.leases[p].n)
     }
 
     /// The most slots `tenant` could ever hold at once.
@@ -193,6 +214,7 @@ impl QuotaPool {
         }
         let id = self.next_id;
         self.next_id += 1;
+        self.lease_pos.insert(id, self.leases.len());
         self.leases.push(Lease { id, tenant, n });
         self.in_flight[tenant as usize] += n;
         self.total += n;
@@ -202,12 +224,18 @@ impl QuotaPool {
     }
 
     /// Return a lease's slots to the pool; returns the released count
-    /// (0 for an unknown/already-released id).
+    /// (0 for an unknown/already-released id). O(1): the id index
+    /// replaces the old `iter().position()` scan, with the same
+    /// `swap_remove` storage order (the swapped-in lease's index entry
+    /// moves with it).
     pub fn release(&mut self, lease_id: u64) -> u32 {
-        let Some(pos) = self.leases.iter().position(|l| l.id == lease_id) else {
+        let Some(pos) = self.lease_pos.remove(&lease_id) else {
             return 0;
         };
         let lease = self.leases.swap_remove(pos);
+        if let Some(moved) = self.leases.get(pos) {
+            self.lease_pos.insert(moved.id, pos);
+        }
         self.in_flight[lease.tenant as usize] -= lease.n;
         self.total -= lease.n;
         self.releases += 1;
@@ -215,25 +243,39 @@ impl QuotaPool {
         lease.n
     }
 
-    /// Conservation invariants — always on: the pool is small and these
-    /// are the contract the whole cluster layer leans on.
+    /// Conservation invariants. The O(1) account-limit bound holds in
+    /// every build; the O(leases) sum audits (and the id-index
+    /// consistency check) run in debug builds only — see the module docs.
     fn assert_invariants(&self) {
-        let lease_sum: u64 = self.leases.iter().map(|l| l.n as u64).sum();
-        let tenant_sum: u64 = self.in_flight.iter().map(|&n| n as u64).sum();
-        assert_eq!(lease_sum, self.total as u64, "leases must sum to total");
-        assert_eq!(tenant_sum, self.total as u64, "tenant counters must sum to total");
         assert!(
             self.total <= self.account_limit,
             "in-flight {} exceeds account limit {}",
             self.total,
             self.account_limit
         );
+        #[cfg(debug_assertions)]
+        self.audit();
+    }
+
+    /// Full conservation audit: lease/tenant sums, per-tenant quotas, and
+    /// id-index exactness. O(leases + tenants) — debug builds run it on
+    /// every mutation; release builds rely on the cluster property suite.
+    #[cfg(debug_assertions)]
+    fn audit(&self) {
+        let lease_sum: u64 = self.leases.iter().map(|l| l.n as u64).sum();
+        let tenant_sum: u64 = self.in_flight.iter().map(|&n| n as u64).sum();
+        assert_eq!(lease_sum, self.total as u64, "leases must sum to total");
+        assert_eq!(tenant_sum, self.total as u64, "tenant counters must sum to total");
         for (t, &n) in self.in_flight.iter().enumerate() {
             assert!(
                 n <= self.quotas[t].max_concurrent,
                 "tenant {t} holds {n} > quota {}",
                 self.quotas[t].max_concurrent
             );
+        }
+        assert_eq!(self.lease_pos.len(), self.leases.len(), "id index drifted");
+        for (pos, l) in self.leases.iter().enumerate() {
+            assert_eq!(self.lease_pos.get(&l.id), Some(&pos), "id index points astray");
         }
     }
 }
@@ -282,6 +324,28 @@ mod tests {
         assert_eq!(p.release(9999), 0);
         assert_eq!(p.release(id), 4);
         assert_eq!(p.release(id), 0, "double release is a no-op");
+        assert_eq!(p.total_in_flight(), 0);
+    }
+
+    #[test]
+    fn lease_n_tracks_outstanding_leases_exactly() {
+        let mut p = QuotaPool::new(100);
+        let t = p.register_tenant(TenantQuota::unlimited());
+        let Acquire::Granted(a) = p.try_acquire(t, 4) else { panic!() };
+        let Acquire::Granted(b) = p.try_acquire(t, 7) else { panic!() };
+        let Acquire::Granted(c) = p.try_acquire(t, 9) else { panic!() };
+        assert_eq!(p.lease_n(a), Some(4));
+        assert_eq!(p.lease_n(b), Some(7));
+        assert_eq!(p.lease_n(c), Some(9));
+        assert_eq!(p.lease_n(9999), None, "unknown ids resolve to nothing");
+        // swap_remove moves the tail lease into the hole: the index must
+        // follow it
+        assert_eq!(p.release(a), 4);
+        assert_eq!(p.lease_n(a), None);
+        assert_eq!(p.lease_n(b), Some(7));
+        assert_eq!(p.lease_n(c), Some(9));
+        assert_eq!(p.release(c), 9);
+        assert_eq!(p.release(b), 7);
         assert_eq!(p.total_in_flight(), 0);
     }
 

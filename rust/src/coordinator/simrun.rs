@@ -401,6 +401,17 @@ impl JobDriver {
         self.lease.is_some()
     }
 
+    /// Id of the currently held slot lease, if any. The fleet scheduler
+    /// resolves it through [`QuotaPool::lease_n`] when it needs the
+    /// *actual* granted size — the driver's planned config can diverge
+    /// from the lease it still holds between a phase-start re-optimization
+    /// and the `await_slots` step that retires the old lease.
+    ///
+    /// [`QuotaPool::lease_n`]: crate::cluster::QuotaPool::lease_n
+    pub fn lease_id(&self) -> Option<u64> {
+        self.lease
+    }
+
     pub fn current_config(&self) -> Config {
         self.cfg
     }

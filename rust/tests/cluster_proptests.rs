@@ -70,6 +70,68 @@ fn prop_pool_slot_conservation_under_churn() {
     });
 }
 
+#[test]
+fn prop_pool_id_index_matches_linear_scan_semantics() {
+    // the pool's release path moved from a linear `iter().position()`
+    // scan to an id-indexed map: this property pins the observable
+    // semantics to the old scan — same return values, same `leases()`
+    // slice order (swap_remove), honest `lease_n`, and unknown or
+    // double releases as strict no-ops
+    cases(30, |rng| {
+        let limit = 16 + rng.below(256) as u32;
+        let n_tenants = 1 + rng.below(5) as usize;
+        let mut pool = QuotaPool::new(limit);
+        for _ in 0..n_tenants {
+            pool.register_tenant(TenantQuota::unlimited());
+        }
+        // the shadow replays the pre-index semantics: a plain vector with
+        // position-scan + swap_remove on release
+        let mut shadow: Vec<(u64, u32, u32)> = Vec::new(); // (lease, tenant, n)
+        let mut retired: Vec<u64> = Vec::new();
+        for _ in 0..300 {
+            let roll = rng.next_f64();
+            if shadow.is_empty() || roll < 0.5 {
+                let t = rng.below(n_tenants as u64) as u32;
+                let n = 1 + rng.below(16) as u32;
+                if let Acquire::Granted(id) = pool.try_acquire(t, n) {
+                    shadow.push((id, t, n));
+                }
+            } else if roll < 0.85 {
+                // legal release: the scan semantics say swap_remove
+                let i = rng.below(shadow.len() as u64) as usize;
+                let (id, _, n) = shadow[i];
+                let last = shadow.len() - 1;
+                shadow.swap(i, last);
+                shadow.pop();
+                retired.push(id);
+                assert_eq!(pool.release(id), n, "release must return the lease size");
+                assert_eq!(pool.lease_n(id), None, "released lease must leave the index");
+            } else if !retired.is_empty() {
+                // double release: strict no-op, returns 0
+                let id = retired[rng.below(retired.len() as u64) as usize];
+                let before = pool.total_in_flight();
+                assert_eq!(pool.release(id), 0, "double release must be a no-op");
+                assert_eq!(pool.total_in_flight(), before);
+            } else {
+                // unknown id: strict no-op, returns 0
+                assert_eq!(pool.release(0xDEAD_BEEF_0000 + rng.below(1 << 10)), 0);
+            }
+            // the observable lease list must match the shadow exactly —
+            // same ids, same order, same sizes
+            let leases = pool.leases();
+            assert_eq!(leases.len(), shadow.len());
+            for (l, &(id, t, n)) in leases.iter().zip(shadow.iter()) {
+                assert_eq!(l.id, id, "leases() order diverged from scan semantics");
+                assert_eq!(l.tenant, t);
+                assert_eq!(l.n, n);
+                assert_eq!(pool.lease_n(id), Some(n), "index out of sync with slice");
+            }
+            let held: u64 = shadow.iter().map(|(_, _, n)| *n as u64).sum();
+            assert_eq!(held, pool.total_in_flight() as u64);
+        }
+    });
+}
+
 fn tiny_job(system: SystemKind, seed: u64, goal: Goal) -> SimJob {
     let mut j = SimJob::new(
         system,

@@ -1,0 +1,191 @@
+//! The discrete-event kernel contract: [`ClusterSim::run`] (lazy event
+//! heap + indexed parked/starved/rank sets) and
+//! [`ClusterSim::run_legacy_scan`] (the original O(n)-rescan loop,
+//! retained as the reference implementation) must be **bit-identical** —
+//! same finish times, same costs, same denials, same shock records — on
+//! randomized fleets across every arbiter, finite and infinite
+//! starvation bounds, capacity shocks, preemption, per-tenant quotas and
+//! weights, and the warm/prewarm layer. The heap kernel is only a faster
+//! index over the same event order; any divergence is a scheduling bug.
+//!
+//! [`ClusterSim::run`]: smlt::cluster::ClusterSim::run
+//! [`ClusterSim::run_legacy_scan`]: smlt::cluster::ClusterSim::run_legacy_scan
+
+mod common;
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::cluster::{
+    ArbiterKind, ArrivalProcess, CapacityTrace, ClusterParams, ClusterSim, TenantQuota,
+};
+use smlt::coordinator::{Goal, SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::util::rng::Pcg;
+use smlt::warm::{
+    ForecastConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams,
+};
+
+fn tiny_job(system: SystemKind, seed: u64, goal: Goal) -> SimJob {
+    let mut j = SimJob::new(
+        system,
+        Workloads::static_run(ModelProfile::resnet18(), 8, 128),
+    );
+    j.seed = seed;
+    j.goal = goal;
+    j
+}
+
+/// A randomized fleet covering the scheduler's whole decision surface:
+/// all four arbiters (finite and infinite starvation bounds), static /
+/// step / ramp capacity traces, preemption on and off, capped and
+/// unlimited quotas, mixed weights and goal classes, and the warm layer
+/// up to learned prewarming. Deterministic given `case_seed`, so two
+/// calls build byte-identical fleets for the two kernels.
+fn build_fleet(case_seed: u64) -> ClusterSim {
+    let mut rng = Pcg::new(case_seed);
+    let account_limit = 8 + rng.below(120) as u32;
+    let bound = if rng.next_f64() < 0.5 {
+        900.0 + rng.uniform(0.0, 600.0)
+    } else {
+        f64::INFINITY
+    };
+    let arbiter = match rng.below(4) {
+        0 => ArbiterKind::GoalClass,
+        1 => ArbiterKind::WeightedFair { starvation_bound_s: bound },
+        2 => ArbiterKind::ClassWeightedFair {
+            starvation_bound_s: bound,
+            class_weight_base: 2.0,
+        },
+        _ => ArbiterKind::Drf { starvation_bound_s: bound },
+    };
+    let capacity = match rng.below(3) {
+        0 => CapacityTrace::Static,
+        1 => CapacityTrace::Step {
+            at_s: 60.0 + rng.uniform(0.0, 600.0),
+            to: 4 + rng.below(16) as u32,
+        },
+        _ => CapacityTrace::Ramp {
+            start_s: 60.0,
+            end_s: 900.0,
+            to: 4 + rng.below(16) as u32,
+            steps: 3,
+        },
+    };
+    let image = tiny_job(SystemKind::Smlt, 0, Goal::None).image_id();
+    let warm = match rng.below(3) {
+        0 => WarmParams::default(),
+        1 => WarmParams {
+            pool: Some(PoolConfig { ttl_s: 1200.0, ..Default::default() }),
+            prewarm: None,
+            bank: None,
+        },
+        _ => WarmParams {
+            pool: Some(PoolConfig { ttl_s: 1200.0, ..Default::default() }),
+            prewarm: Some(PrewarmPolicy {
+                forecast: ArrivalProcess::Poisson { rate_per_s: 1.0 / 120.0, seed: 11 },
+                source: if rng.next_f64() < 0.5 {
+                    ForecastSource::Oracle
+                } else {
+                    ForecastSource::Learned(ForecastConfig::default())
+                },
+                lead_s: 300.0,
+                tick_s: 120.0,
+                targets: vec![PrewarmTarget {
+                    image,
+                    mem_mb: 3072,
+                    workers_per_job: 8,
+                    max_warm: 32,
+                }],
+            }),
+            bank: None,
+        },
+    };
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: rng.below(1 << 20),
+        account_limit,
+        storage_saturation_workers: 64.0 + rng.uniform(0.0, 512.0),
+        preemption: rng.next_f64() < 0.7,
+        arbiter,
+        capacity,
+        warm,
+    });
+    let goals = [
+        Goal::None,
+        Goal::Fastest,
+        Goal::Deadline { t_max_s: 4.0 * 3600.0 },
+        Goal::Budget { s_max: 80.0 },
+    ];
+    let systems = [SystemKind::Smlt, SystemKind::LambdaMl, SystemKind::Siren];
+    let n_jobs = 2 + rng.below(5) as usize;
+    for i in 0..n_jobs {
+        let sys = systems[rng.below(systems.len() as u64) as usize];
+        let goal = if sys.user_centric() {
+            goals[rng.below(goals.len() as u64) as usize]
+        } else {
+            Goal::None
+        };
+        let quota = if rng.next_f64() < 0.5 {
+            TenantQuota::unlimited()
+        } else {
+            TenantQuota::capped(4 + rng.below(account_limit as u64) as u32)
+        };
+        sim.submit_weighted(
+            tiny_job(sys, 7000 + i as u64 + rng.below(1 << 16), goal),
+            rng.uniform(0.0, 300.0),
+            quota,
+            1.0 + rng.below(4) as f64,
+        );
+    }
+    sim
+}
+
+#[test]
+fn prop_heap_kernel_bit_identical_to_legacy_scan() {
+    cases(8, |rng| {
+        let case_seed = rng.next_u64();
+        let heap = build_fleet(case_seed).run();
+        let scan = build_fleet(case_seed).run_legacy_scan();
+        assert_eq!(
+            heap.events, scan.events,
+            "kernels processed different step counts (seed {case_seed})"
+        );
+        assert!(heap.events > 0, "seed {case_seed} ran no events");
+        assert_eq!(heap.denials, scan.denials, "seed {case_seed}");
+        assert_eq!(heap.peak_in_flight, scan.peak_in_flight, "seed {case_seed}");
+        assert_eq!(heap.preemptions, scan.preemptions, "seed {case_seed}");
+        assert_eq!(heap.throttled_invocations, scan.throttled_invocations);
+        assert_eq!(heap.account_limit, scan.account_limit);
+        assert_eq!(heap.makespan_s.to_bits(), scan.makespan_s.to_bits());
+        assert_eq!(heap.total_cost().to_bits(), scan.total_cost().to_bits());
+        assert_eq!(heap.shocks.len(), scan.shocks.len(), "seed {case_seed}");
+        for (x, y) in heap.shocks.iter().zip(scan.shocks.iter()) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.from_limit, y.from_limit);
+            assert_eq!(x.to_limit, y.to_limit);
+            assert_eq!(x.reclaimed_leases, y.reclaimed_leases);
+            assert_eq!(x.reclaimed_slots, y.reclaimed_slots);
+            assert_eq!(x.victim_tenants, y.victim_tenants);
+            assert_eq!(x.recovered_s.map(f64::to_bits), y.recovered_s.map(f64::to_bits));
+            assert_eq!(x.peak_after, y.peak_after);
+        }
+        assert_eq!(heap.jobs.len(), scan.jobs.len());
+        for (x, y) in heap.jobs.iter().zip(scan.jobs.iter()) {
+            assert_eq!(
+                x.finish_s.to_bits(),
+                y.finish_s.to_bits(),
+                "tenant {} finish time diverged (seed {case_seed})",
+                x.tenant
+            );
+            assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+            assert_eq!(x.max_wait_streak_s.to_bits(), y.max_wait_streak_s.to_bits());
+            assert_eq!(x.preemptions, y.preemptions);
+            assert_eq!(x.first_fleet_s.map(f64::to_bits), y.first_fleet_s.map(f64::to_bits));
+            assert_eq!(x.outcome.total_cost().to_bits(), y.outcome.total_cost().to_bits());
+            assert_eq!(x.outcome.iters_done, y.outcome.iters_done);
+            assert_eq!(x.outcome.config_trace, y.outcome.config_trace);
+        }
+        assert_eq!(heap.warm.hits, scan.warm.hits);
+        assert_eq!(heap.warm.misses, scan.warm.misses);
+        assert_eq!(heap.warm.prewarm_spawns, scan.warm.prewarm_spawns);
+    });
+}

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Sanity check for the fig14 kernel-scalability artifact: the emitted
+# bench_out/BENCH_fig14_multitenant.json must parse and carry a positive
+# `events_per_s` field (top level and per scale record). Pure shell +
+# grep — no dependencies, mirroring the crate's offline-registry
+# constraint — with the real structural validation delegated to the
+# bench binary's own `--check-json` mode (which uses util::json::parse)
+# when a built binary is available.
+#
+# Usage: scripts/check_bench_json.sh [path]   (from the repository root)
+set -u
+
+json="${1:-bench_out/BENCH_fig14_multitenant.json}"
+fail=0
+
+if [ ! -f "$json" ]; then
+  echo "MISSING: $json (run: cargo bench --bench fig14_multitenant)"
+  echo "bench json check FAILED"
+  exit 1
+fi
+
+# structural validation via the crate's own JSON parser, if the bench
+# binary has been built (cargo bench / cargo build --benches)
+bin=$(ls target/release/deps/fig14_multitenant-* 2>/dev/null \
+  | grep -v '\.d$' | head -n 1)
+if [ -n "${bin:-}" ] && [ -x "$bin" ]; then
+  if ! "$bin" --check-json "$json"; then
+    fail=1
+  fi
+else
+  echo "note: bench binary not built; falling back to grep-level checks"
+fi
+
+# grep-level checks hold either way: the headline field must exist and
+# must not be zero/negative
+if ! grep -q '"events_per_s"' "$json"; then
+  echo "FAILED: $json has no events_per_s field"
+  fail=1
+fi
+if grep -Eq '"events_per_s": *(-|0(\.0*)?[,[:space:]])' "$json"; then
+  echo "FAILED: $json reports a non-positive events_per_s"
+  fail=1
+fi
+
+if [ "$fail" -ne 0 ]; then
+  echo "bench json check FAILED"
+  exit 1
+fi
+echo "bench json check OK"
