@@ -2,9 +2,132 @@
 //! Shared helpers for the figure benches (custom harness: each bench is a
 //! plain binary printing the paper's series + writing bench_out/*.csv).
 
+use std::collections::BTreeMap;
+
 use smlt::perfmodel::ModelProfile;
+use smlt::util::json::Json;
 
 pub const OUT_DIR: &str = "bench_out";
+
+/// Machine-readable bench artifact, one per figure bench. Every bench
+/// emits the same shape so one validator (`scripts/check_bench_json.sh`,
+/// [`BenchReport::validate`]) covers all of them:
+///
+/// ```json
+/// {
+///   "name":   "fig14_multitenant",
+///   "meta":   { "account_limit": 1000, "events_per_s": 1.2e6, ... },
+///   "series": [ { "name": "scales", "points": [ { "jobs": 1000, ... } ] } ]
+/// }
+/// ```
+///
+/// `meta` carries run knobs and headline scalars; each series is an
+/// ordered list of one-level point objects (one per swept setting).
+pub struct BenchReport {
+    name: String,
+    meta: BTreeMap<String, Json>,
+    /// insertion-ordered (series name, points)
+    series: Vec<(String, Vec<Json>)>,
+}
+
+/// Shorthand for a numeric JSON point field.
+pub fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// Shorthand for a string JSON point field.
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport { name: name.to_string(), meta: BTreeMap::new(), series: Vec::new() }
+    }
+
+    /// Record a numeric run knob or headline scalar.
+    pub fn meta_num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.meta.insert(key.to_string(), Json::Num(v));
+        self
+    }
+
+    /// Record a string run knob.
+    pub fn meta_str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.meta.insert(key.to_string(), Json::Str(v.to_string()));
+        self
+    }
+
+    /// Append one point to `series` (created on first use, order kept).
+    pub fn push(&mut self, series: &str, point: &[(&str, Json)]) {
+        let obj: BTreeMap<String, Json> =
+            point.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        match self.series.iter_mut().find(|(n, _)| n == series) {
+            Some((_, pts)) => pts.push(Json::Obj(obj)),
+            None => self.series.push((series.to_string(), vec![Json::Obj(obj)])),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("name".to_string(), Json::Str(self.name.clone()));
+        top.insert("meta".to_string(), Json::Obj(self.meta.clone()));
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|(n, pts)| {
+                let mut s = BTreeMap::new();
+                s.insert("name".to_string(), Json::Str(n.clone()));
+                s.insert("points".to_string(), Json::Arr(pts.clone()));
+                Json::Obj(s)
+            })
+            .collect();
+        top.insert("series".to_string(), Json::Arr(series));
+        Json::Obj(top)
+    }
+
+    /// Write `bench_out/BENCH_<name>.json` and return the path.
+    pub fn write(&self) -> String {
+        std::fs::create_dir_all(OUT_DIR).unwrap();
+        let path = format!("{OUT_DIR}/BENCH_{}.json", self.name);
+        std::fs::write(&path, self.to_json().to_string_pretty()).unwrap();
+        path
+    }
+
+    /// Schema check for an emitted artifact: non-empty `name`, a `meta`
+    /// object, and at least one series with at least one object point.
+    /// Returns `(name, total points)` for the OK message.
+    pub fn validate(doc: &Json) -> Result<(String, usize), String> {
+        let name = match doc.get("name").and_then(Json::as_str) {
+            Some(n) if !n.is_empty() => n.to_string(),
+            _ => return Err("missing or empty top-level name".to_string()),
+        };
+        if doc.get("meta").and_then(Json::as_obj).is_none() {
+            return Err("missing meta object".to_string());
+        }
+        let series = match doc.get("series").and_then(Json::as_arr) {
+            Some(a) if !a.is_empty() => a,
+            _ => return Err("missing or empty series array".to_string()),
+        };
+        let mut total = 0usize;
+        for s in series {
+            match s.get("name").and_then(Json::as_str) {
+                Some(n) if !n.is_empty() => {}
+                _ => return Err("a series lacks a name".to_string()),
+            }
+            let points = match s.get("points").and_then(Json::as_arr) {
+                Some(p) if !p.is_empty() => p,
+                _ => return Err("a series has no points".to_string()),
+            };
+            for p in points {
+                if p.as_obj().is_none() {
+                    return Err("a point is not an object".to_string());
+                }
+            }
+            total += points.len();
+        }
+        Ok((name, total))
+    }
+}
 
 /// Workers axis used by the scalability figures.
 pub fn worker_sweep() -> Vec<u32> {

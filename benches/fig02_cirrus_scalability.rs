@@ -32,6 +32,7 @@ fn main() {
                 platform: &platform,
                 cal: &cal,
                 pricing: &pricing,
+                sync: Default::default(),
             };
             let (comp, comm) = model.iter_time(Config { workers: w, mem_mb: mem });
             let env = SyncEnv::standard(platform.net_bw_bps(mem));

@@ -52,6 +52,7 @@ fn main() {
                     platform: &platform,
                     cal: &cal,
                     pricing: &pricing,
+                    sync: Default::default(),
                 };
                 let c = Config { workers: w, mem_mb: mem };
                 let (comp, comm) = m.iter_time(c);

@@ -9,7 +9,7 @@ use smlt::coordinator::simrun::IterModel;
 use smlt::costmodel::Pricing;
 use smlt::faas::FaasPlatform;
 use smlt::optimizer::rl::{QLearner, RlParams};
-use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, GridSearch, Objective};
+use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, GridSearch, Objective, SearchSpec};
 use smlt::perfmodel::Calibration;
 use smlt::util::stats::ecdf;
 use smlt::util::table::Table;
@@ -51,6 +51,7 @@ fn main() {
                     platform: &platform,
                     cal: &cal,
                     pricing: &pricing,
+                    sync: Default::default(),
                 },
             };
             // ground truth via a coarse grid
@@ -61,7 +62,7 @@ fn main() {
                 ConfigSpace::default(),
                 BoParams { seed: batch as u64, ..Default::default() },
             )
-            .run(&mut make());
+            .search(&mut make(), &SearchSpec::default());
             let rl = QLearner::new(
                 ConfigSpace::default(),
                 RlParams { seed: batch as u64, ..Default::default() },

@@ -25,7 +25,6 @@
 
 mod common;
 
-use std::collections::BTreeMap;
 use std::time::Instant;
 
 use smlt::baselines::SystemKind;
@@ -90,10 +89,13 @@ fn hit_rate(out: &FleetOutcome, class: u8, deadline_s: f64) -> f64 {
     hits as f64 / in_class.len() as f64
 }
 
-/// `--check-json <path>`: validate a previously emitted
-/// `BENCH_fig14_multitenant.json` — it must parse, carry a positive
-/// top-level `events_per_s`, and every per-scale record must repeat the
-/// field. Exits non-zero on any failure so CI can gate on it.
+/// `--check-json <path>`: validate a previously emitted bench artifact.
+/// Any `BENCH_*.json` must pass the shared [`common::BenchReport`]
+/// schema check; the fig14 artifact (recognized by its report name)
+/// must additionally carry a positive `meta.events_per_s`, repeated in
+/// every point of the `scales` series. Exits non-zero on any failure so
+/// CI can gate on it (`scripts/check_bench_json.sh` feeds it every
+/// artifact in `bench_out/`).
 fn check_json(path: &str) -> ! {
     fn fail(path: &str, msg: &str) -> ! {
         eprintln!("FAILED {path}: {msg}");
@@ -107,25 +109,33 @@ fn check_json(path: &str) -> ! {
         Ok(d) => d,
         Err(e) => fail(path, &format!("parse error ({e})")),
     };
-    let eps = match doc.get("events_per_s").and_then(Json::as_f64) {
+    let (name, n_points) = match common::BenchReport::validate(&doc) {
+        Ok(ok) => ok,
+        Err(e) => fail(path, &e),
+    };
+    if name != "fig14_multitenant" {
+        // another bench's artifact: the shared schema is the contract
+        println!("OK {path}: {name}, {n_points} points");
+        std::process::exit(0);
+    }
+    let eps = match doc.get("meta").and_then(|m| m.get("events_per_s")).and_then(Json::as_f64) {
         Some(x) if x.is_finite() && x > 0.0 => x,
-        _ => fail(path, "missing or non-positive top-level events_per_s"),
+        _ => fail(path, "missing or non-positive meta.events_per_s"),
     };
-    let scales = match doc.get("scales").and_then(Json::as_arr) {
-        Some(a) if !a.is_empty() => a,
-        _ => fail(path, "missing or empty scales array"),
-    };
+    let series = doc.get("series").and_then(Json::as_arr).unwrap_or(&[]);
+    let scales = series
+        .iter()
+        .find(|s| s.get("name").and_then(Json::as_str) == Some("scales"))
+        .and_then(|s| s.get("points"))
+        .and_then(Json::as_arr);
+    let Some(scales) = scales else { fail(path, "no scales series") };
     for rec in scales {
         match rec.get("events_per_s").and_then(Json::as_f64) {
             Some(x) if x.is_finite() && x > 0.0 => {}
             _ => fail(path, "a scale record lacks a positive events_per_s"),
         }
     }
-    println!(
-        "OK {path}: {} scales, events_per_s {:.0}",
-        scales.len(),
-        eps
-    );
+    println!("OK {path}: {name}, {n_points} points, events_per_s {eps:.0}");
     std::process::exit(0);
 }
 
@@ -151,6 +161,7 @@ fn main() {
             "jobs",
             "makespan s",
             "mean dur s",
+            "p50/p90/p99 dur",
             "p95 wait s",
             "deadline hit",
             "budget hit",
@@ -164,6 +175,10 @@ fn main() {
             "total $",
         ],
     );
+    let mut report = common::BenchReport::new("fig14_multitenant");
+    report.meta_num("account_limit", f64::from(account_limit));
+    report.meta_num("iters", iters as f64);
+    report.meta_num("deadline_s", deadline_s);
     for n_jobs in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
         let out = run_fleet(n_jobs, account_limit, iters, deadline_s);
         assert!(
@@ -199,10 +214,24 @@ fn main() {
         );
         let mut tenant_costs: Vec<f64> = bill.tenants.iter().map(|b| b.total).collect();
         tenant_costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p90, p99) = out.duration_quantiles();
+        report.push(
+            "contention",
+            &[
+                ("jobs", common::jnum(n_jobs as f64)),
+                ("makespan_s", common::jnum(out.makespan_s)),
+                ("mean_duration_s", common::jnum(out.mean_duration_s())),
+                ("p50_duration_s", common::jnum(p50)),
+                ("p90_duration_s", common::jnum(p90)),
+                ("p99_duration_s", common::jnum(p99)),
+                ("total_cost", common::jnum(out.total_cost())),
+            ],
+        );
         t.row(&[
             n_jobs.to_string(),
             format!("{:.0}", out.makespan_s),
             format!("{:.0}", out.mean_duration_s()),
+            format!("{p50:.0}/{p90:.0}/{p99:.0}"),
             format!("{:.0}", percentile_sorted(&waits, 0.95)),
             fmt_rate(dl),
             fmt_rate(bg),
@@ -252,7 +281,6 @@ fn main() {
             "speedup",
         ],
     );
-    let mut records: Vec<Json> = Vec::new();
     let mut last_eps = 0.0_f64;
     for &n_jobs in &scales {
         let sim = build_fleet(n_jobs, account_limit, scale_iters, deadline_s);
@@ -290,34 +318,28 @@ fn main() {
             legacy_eps.map_or("-".to_string(), |l| format!("{l:.0}")),
             legacy_eps.map_or("-".to_string(), |l| format!("{:.1}x", eps / l)),
         ]);
-        let mut rec = BTreeMap::new();
-        rec.insert("jobs".to_string(), Json::Num(n_jobs as f64));
-        rec.insert("events".to_string(), Json::Num(out.events as f64));
-        rec.insert("wall_s".to_string(), Json::Num(wall_s));
-        rec.insert("events_per_s".to_string(), Json::Num(eps));
-        rec.insert("wall_s_per_sim_hour".to_string(), Json::Num(wall_per_sim_h));
-        rec.insert("makespan_s".to_string(), Json::Num(out.makespan_s));
-        rec.insert("peak_in_flight".to_string(), Json::Num(out.peak_in_flight as f64));
-        rec.insert("denials".to_string(), Json::Num(out.denials as f64));
-        rec.insert(
-            "legacy_events_per_s".to_string(),
-            legacy_eps.map_or(Json::Null, Json::Num),
+        report.push(
+            "scales",
+            &[
+                ("jobs", common::jnum(n_jobs as f64)),
+                ("events", common::jnum(out.events as f64)),
+                ("wall_s", common::jnum(wall_s)),
+                ("events_per_s", common::jnum(eps)),
+                ("wall_s_per_sim_hour", common::jnum(wall_per_sim_h)),
+                ("makespan_s", common::jnum(out.makespan_s)),
+                ("peak_in_flight", common::jnum(out.peak_in_flight as f64)),
+                ("denials", common::jnum(out.denials as f64)),
+                ("legacy_events_per_s", legacy_eps.map_or(Json::Null, Json::Num)),
+            ],
         );
-        records.push(Json::Obj(rec));
         last_eps = eps;
     }
     st.print();
-    let mut top = BTreeMap::new();
-    top.insert("figure".to_string(), Json::Str("fig14_multitenant".to_string()));
-    top.insert("account_limit".to_string(), Json::Num(f64::from(account_limit)));
-    top.insert("scale_iters".to_string(), Json::Num(scale_iters as f64));
+    report.meta_num("scale_iters", scale_iters as f64);
     // headline number: events/s at the largest completed scale — this is
     // the field `--check-json` (and CI) validates.
-    top.insert("events_per_s".to_string(), Json::Num(last_eps));
-    top.insert("scales".to_string(), Json::Arr(records));
-    std::fs::create_dir_all(common::OUT_DIR).unwrap();
-    let json_path = format!("{}/BENCH_fig14_multitenant.json", common::OUT_DIR);
-    std::fs::write(&json_path, Json::Obj(top).to_string_pretty()).unwrap();
+    report.meta_num("events_per_s", last_eps);
+    let json_path = report.write();
     println!(
         "-> wrote {json_path}; the heap kernel's events/s stays flat as the\n   \
          fleet grows 10x while the legacy scan's per-decision cost is O(n)."

@@ -125,6 +125,12 @@ fn main() {
         ("shock", CapacityTrace::Step { at_s: shock_at, to: shock_to }),
     ];
 
+    let mut bench = common::BenchReport::new("fig15_fairness_shock");
+    bench.meta_num("account_limit", f64::from(account_limit));
+    bench.meta_num("jobs", n_jobs as f64);
+    bench.meta_num("iters", iters as f64);
+    bench.meta_num("shock_at_s", shock_at);
+    bench.meta_num("shock_to", f64::from(shock_to));
     let mut t = Table::new(
         "arbitration policy x account capacity",
         &[
@@ -192,6 +198,19 @@ fn main() {
                     "-".to_string()
                 }
             };
+            bench.push(
+                "matrix",
+                &[
+                    ("arbiter", common::jstr(out.arbiter)),
+                    ("capacity", common::jstr(cap_name)),
+                    ("makespan_s", common::jnum(out.makespan_s)),
+                    ("mean_duration_s", common::jnum(out.mean_duration_s())),
+                    ("jain_duration", common::jnum(report.jain_duration)),
+                    ("max_be_streak_s", common::jnum(be_streak)),
+                    ("preemptions", common::jnum(out.preemptions as f64)),
+                    ("total_cost", common::jnum(out.total_cost())),
+                ],
+            );
             t.row(&[
                 out.arbiter.to_string(),
                 cap_name.to_string(),
@@ -212,6 +231,7 @@ fn main() {
     }
     t.print();
     t.write_csv(format!("{}/fig15_fairness_shock.csv", common::OUT_DIR)).unwrap();
+    println!("-> wrote {}", bench.write());
     println!(
         "-> goal-class maximizes Deadline hit rates but lets best-effort waits\n   \
          stretch; weighted-fair/DRF bound the worst continuous wait (starvation\n   \

@@ -146,6 +146,10 @@ fn main() {
     ];
     let modes = ["off", "pool", "pool+pw", "full"];
 
+    let mut bench = common::BenchReport::new("fig16_warm_pool");
+    bench.meta_num("account_limit", f64::from(account_limit));
+    bench.meta_num("iters", iters as f64);
+    bench.meta_num("deadline_s", deadline_s);
     let mut t = Table::new(
         "warm mode x arrival shape x fleet size",
         &[
@@ -233,6 +237,21 @@ fn main() {
                 } else {
                     "-".to_string()
                 };
+                bench.push(
+                    "sweep",
+                    &[
+                        ("jobs", common::jnum(n_jobs as f64)),
+                        ("arrivals", common::jstr(shape)),
+                        ("mode", common::jstr(mode)),
+                        ("cold_starts", common::jnum(cold as f64)),
+                        ("warm_hits", common::jnum(out.warm.hits as f64)),
+                        ("bo_probes", common::jnum(probes as f64)),
+                        ("warm_cost", common::jnum(out.warm.total_cost())),
+                        ("mean_duration_s", common::jnum(out.mean_duration_s())),
+                        ("deadline_hit_rate", common::jnum(hit)),
+                        ("total_cost", common::jnum(out.total_cost())),
+                    ],
+                );
                 t.row(&[
                     n_jobs.to_string(),
                     shape.to_string(),
@@ -256,6 +275,7 @@ fn main() {
     }
     t.print();
     t.write_csv(format!("{}/fig16_warm_pool.csv", common::OUT_DIR)).unwrap();
+    println!("-> wrote {}", bench.write());
     println!(
         "-> the pool turns retire/relaunch churn into warm starts; prewarming\n   \
          moves the first fleets of each diurnal burst onto warm containers at\n   \

@@ -161,6 +161,9 @@ fn main() {
     ];
     let modes = ["none", "oracle", "learned", "learned+memkey"];
 
+    let mut bench = common::BenchReport::new("fig17_learned_forecast");
+    bench.meta_num("account_limit", f64::from(account_limit));
+    bench.meta_num("iters", iters as f64);
     let mut t = Table::new(
         "forecast mode x arrival shape x fleet size",
         &[
@@ -215,6 +218,20 @@ fn main() {
                         );
                     }
                 }
+                bench.push(
+                    "sweep",
+                    &[
+                        ("jobs", common::jnum(n_jobs as f64)),
+                        ("arrivals", common::jstr(shape)),
+                        ("mode", common::jstr(mode)),
+                        ("cold_starts", common::jnum(cold_starts(&out) as f64)),
+                        ("warm_hits", common::jnum(out.warm.hits as f64)),
+                        ("prewarm_spawns", common::jnum(out.warm.prewarm_spawns as f64)),
+                        ("warm_cost", common::jnum(out.warm.total_cost())),
+                        ("mean_duration_s", common::jnum(out.mean_duration_s())),
+                        ("total_cost", common::jnum(out.total_cost())),
+                    ],
+                );
                 t.row(&[
                     n_jobs.to_string(),
                     shape.to_string(),
@@ -238,6 +255,7 @@ fn main() {
     }
     t.print();
     t.write_csv(format!("{}/fig17_learned_forecast.csv", common::OUT_DIR)).unwrap();
+    println!("-> wrote {}", bench.write());
     println!(
         "-> the oracle is the ceiling (it knows the arrival law; on the online\n   \
          mix it still only knows the mean, not the bursts); learned forecasting\n   \

@@ -1,0 +1,89 @@
+//! Sync-policy demo: one training job under a heavy straggler tail,
+//! run under each aggregation rule.
+//!
+//! The fleet injects Pareto per-worker slowdowns (the tail Demystifying
+//! Serverless ML Training, arXiv 2105.07806, measures on real Lambda),
+//! then trains the same job four ways: strict bulk-synchronous (wait for
+//! the slowest of 32 workers), semi-synchronous at k = 24 and k = 16
+//! (MLLess-style, arXiv 2206.05786), and significance-filtered uploads.
+//! A final run lets the scheduler pick the policy itself
+//! (`sync_search`), co-optimizing it with workers × memory.
+//!
+//! ```text
+//! cargo run --release --example semisync -- --iters 16 --alpha 1.3
+//! ```
+
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
+use smlt::coordinator::{SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::sync::{StragglerModel, SyncPolicy};
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+use smlt::warm::{PoolConfig, WarmParams};
+
+fn main() -> smlt::util::error::Result<()> {
+    let args = Args::from_env();
+    let iters = args.get_usize("iters", 16) as u64;
+    let alpha = args.get_f64("alpha", 1.3);
+    let straggler = StragglerModel::Pareto { alpha };
+
+    let run = |sync: SyncPolicy, sync_search: bool| -> FleetOutcome {
+        let mut j = SimJob::new(
+            if sync_search { SystemKind::Smlt } else { SystemKind::LambdaMl },
+            Workloads::static_run(ModelProfile::resnet18(), iters, 128),
+        );
+        j.seed = 0x5E31;
+        j.sync = sync;
+        j.sync_search = sync_search;
+        // a warm pool so late check-ins (stragglers holding containers
+        // past phase end) show up in the pins column
+        let warm = WarmParams { pool: Some(PoolConfig::default()), prewarm: None, bank: None };
+        let mut sim = ClusterSim::new(ClusterParams { straggler, warm, ..Default::default() });
+        sim.submit(j, 0.0, TenantQuota::unlimited());
+        sim.run()
+    };
+
+    let policies: [(SyncPolicy, bool); 5] = [
+        (SyncPolicy::Bulk, false),
+        (SyncPolicy::SemiSync { k: 24 }, false),
+        (SyncPolicy::SemiSync { k: 16 }, false),
+        (SyncPolicy::SignificanceFiltered { threshold: 0.3, decay: 0.1 }, false),
+        (SyncPolicy::Bulk, true), // scheduler picks (SMLT, coordinate descent)
+    ];
+
+    let mut t = Table::new(
+        &format!("one job, 32 workers, {} stragglers", straggler.label()),
+        &["policy", "dur s", "cost $", "accuracy proxy", "straggler pins"],
+    );
+    let mut bulk: Option<FleetOutcome> = None;
+    for (sync, search) in policies {
+        let out = run(sync, search);
+        let j = &out.jobs[0];
+        let label = if search { "auto (sync_search)".to_string() } else { sync.label() };
+        t.row(&[
+            label,
+            format!("{:.0}", j.duration_s()),
+            format!("{:.2}", j.outcome.total_cost()),
+            format!("{:.3}", j.outcome.accuracy_proxy()),
+            out.warm.straggler_pins.to_string(),
+        ]);
+        if bulk.is_none() {
+            bulk = Some(out);
+        }
+    }
+    t.print();
+
+    let bulk = bulk.expect("bulk ran first");
+    println!(
+        "\nbulk pays the max of 32 Pareto draws every iteration; semi-sync\n\
+         closes at the k-th arrival — wall time follows the k-th order\n\
+         statistic instead of the max — at a bounded staleness cost in the\n\
+         accuracy proxy. Filtering keeps the barrier but skips insignificant\n\
+         uploads. Bulk baseline: {:.0}s, ${:.2}, proxy {:.3}.",
+        bulk.jobs[0].duration_s(),
+        bulk.jobs[0].outcome.total_cost(),
+        bulk.jobs[0].outcome.accuracy_proxy(),
+    );
+    Ok(())
+}

@@ -70,6 +70,8 @@ use super::events::{order_bits, ControlLane, EventHeap};
 use super::quota::TenantQuota;
 use super::{ClusterEnv, TenantId};
 use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
+use crate::sync::StragglerModel;
+use crate::util::stats::percentile_sorted;
 use crate::warm::{
     ForecastBank, ForecastSource, ImageId, PrewarmPolicy, WarmParams, WarmReport, WarmState,
 };
@@ -97,6 +99,11 @@ pub struct ClusterParams {
     /// the default disables all three — bit-identical to the pre-warm
     /// fleet
     pub warm: WarmParams,
+    /// heavy-tailed per-worker straggler multipliers applied by the shared
+    /// platform (see [`FaasLimits::straggler`](crate::faas::FaasLimits));
+    /// the default [`StragglerModel::None`] draws nothing from the RNG —
+    /// bit-identical to the pre-straggler fleet
+    pub straggler: StragglerModel,
 }
 
 impl Default for ClusterParams {
@@ -109,6 +116,7 @@ impl Default for ClusterParams {
             arbiter: ArbiterKind::GoalClass,
             capacity: CapacityTrace::Static,
             warm: WarmParams::default(),
+            straggler: StragglerModel::None,
         }
     }
 }
@@ -448,6 +456,22 @@ impl FleetOutcome {
         }
         self.jobs.iter().map(|j| j.duration_s()).sum::<f64>() / self.jobs.len() as f64
     }
+
+    /// (p50, p90, p99) of arrival-to-completion spans across jobs —
+    /// the tail the mean hides (stragglers stretch p99 long before they
+    /// move the mean). All zeros for an empty fleet.
+    pub fn duration_quantiles(&self) -> (f64, f64, f64) {
+        if self.jobs.is_empty() {
+            return (0.0, 0.0, 0.0);
+        }
+        let mut d: Vec<f64> = self.jobs.iter().map(|j| j.duration_s()).collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            percentile_sorted(&d, 0.50),
+            percentile_sorted(&d, 0.90),
+            percentile_sorted(&d, 0.99),
+        )
+    }
 }
 
 /// Multi-tenant cluster simulation: submit jobs, then [`run`](Self::run).
@@ -472,6 +496,7 @@ impl ClusterSim {
             params.storage_saturation_workers,
         );
         env.warm = WarmState::new(&params.warm);
+        env.platform.limits.straggler = params.straggler;
         if let Some(p) = &params.warm.prewarm {
             assert!(
                 p.tick_s > 0.0 && p.lead_s.is_finite(),
@@ -1295,6 +1320,46 @@ mod tests {
         assert_eq!(out.arbiter, "goal-class");
         assert!(out.shocks.is_empty(), "static capacity never shocks");
         assert!(out.events > 0, "a finished fleet processed at least one event");
+    }
+
+    #[test]
+    fn duration_quantiles_are_ordered_and_bracket_the_mean() {
+        let out = run_fleet(6, 64);
+        let (p50, p90, p99) = out.duration_quantiles();
+        assert!(p50 > 0.0);
+        assert!(p50 <= p90 && p90 <= p99);
+        let mean = out.mean_duration_s();
+        let min = out.jobs.iter().map(|j| j.duration_s()).fold(f64::INFINITY, f64::min);
+        assert!(min <= mean && mean <= p99 + 1e-9);
+    }
+
+    #[test]
+    fn fleet_straggler_knob_stretches_completions() {
+        let run = |straggler| {
+            let mut sim = ClusterSim::new(ClusterParams {
+                account_limit: 64,
+                straggler,
+                ..Default::default()
+            });
+            let jobs: Vec<SimJob> = (0..4).map(|i| small_job(100 + i as u64)).collect();
+            sim.submit_all(
+                jobs,
+                &ArrivalProcess::Poisson { rate_per_s: 1.0 / 30.0, seed: 5 },
+                TenantQuota::unlimited(),
+            );
+            sim.run()
+        };
+        let clean = run(StragglerModel::None);
+        let tailed = run(StragglerModel::Pareto { alpha: 1.5 });
+        for j in &tailed.jobs {
+            assert_eq!(j.outcome.iters_done, 12, "stragglers must not wedge jobs");
+        }
+        assert!(
+            tailed.mean_duration_s() > clean.mean_duration_s(),
+            "a heavy tail must stretch bulk-synchronous completions: {} vs {}",
+            tailed.mean_duration_s(),
+            clean.mean_duration_s()
+        );
     }
 
     #[test]

@@ -22,10 +22,10 @@ use crate::cluster::{Acquire, ClusterEnv, TenantId};
 use crate::costmodel::{CostLedger, Pricing};
 use crate::faas::FailureInjector;
 use crate::metrics::{IterRecord, RunMetrics};
-use crate::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective};
+use crate::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective, SearchSpec};
 use crate::perfmodel::{compute_time_s, init_time_s, Calibration, Framework, ModelProfile};
 use crate::scheduler::TaskScheduler;
-use crate::sync::{comm_breakdown, SyncEnv};
+use crate::sync::{comm_breakdown, SyncEnv, SyncPolicy};
 
 /// User-centric goal (§3.2).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -75,6 +75,16 @@ pub struct SimJob {
     /// [`PosteriorBank`](crate::warm::PosteriorBank); `None` (the
     /// default) opts out — the job profiles from scratch
     pub family: Option<crate::warm::FamilyId>,
+    /// how iterations close out their gradient exchange: bulk-synchronous
+    /// (the default — bit-identical to the pre-policy simulator), k-of-n
+    /// semi-synchronous, or significance-filtered (serverless only; VM
+    /// systems always run bulk allreduce)
+    pub sync: SyncPolicy,
+    /// let the scheduler co-optimize the sync policy alongside workers ×
+    /// memory: after each config search it rescores a small policy grid
+    /// analytically at the chosen config and adopts the best (coordinate
+    /// descent; off by default)
+    pub sync_search: bool,
 }
 
 impl SimJob {
@@ -89,6 +99,8 @@ impl SimJob {
             hazard_per_s: 0.0,
             image: None,
             family: None,
+            sync: SyncPolicy::Bulk,
+            sync_search: false,
         }
     }
 
@@ -125,11 +137,26 @@ pub struct SimOutcome {
     pub cold_starts: u64,
     /// configs chosen per phase (adaptation trace, Figs 12b/13b)
     pub config_trace: Vec<(u64, Config)>,
+    /// Σ over iterations of the sync policy's update yield (gradient-
+    /// signal fraction per iteration; `iters_done` under bulk sync)
+    pub update_yield_sum: f64,
 }
 
 impl SimOutcome {
     pub fn total_cost(&self) -> f64 {
         self.ledger.total(&self.pricing)
+    }
+
+    /// Mean per-iteration update yield in `(0, 1]` — the statistical-
+    /// efficiency proxy for accuracy. Exactly 1.0 under bulk sync;
+    /// semi-sync staleness and significance filtering trade it for
+    /// time/cost (the Fig 18 frontier's y-axis).
+    pub fn accuracy_proxy(&self) -> f64 {
+        if self.iters_done == 0 {
+            1.0
+        } else {
+            self.update_yield_sum / self.iters_done as f64
+        }
     }
 
     pub fn profiling_cost(&self) -> f64 {
@@ -160,25 +187,36 @@ pub struct IterModel<'a> {
     pub platform: &'a crate::faas::FaasPlatform,
     pub cal: &'a Calibration,
     pub pricing: &'a Pricing,
+    /// sync policy the modeled iterations close under; serverless only —
+    /// the VM branch always models bulk allreduce
+    pub sync: SyncPolicy,
 }
 
 impl IterModel<'_> {
-    /// (compute_s, comm_s) for one iteration at config `c`.
+    /// (compute_s, comm_s) for one *expected* iteration at config `c`.
+    ///
+    /// Serverless iterations end at the k-th order statistic of the
+    /// per-worker times (`k = n` under bulk sync), so both legs carry the
+    /// straggler model's expected k-th multiplier; a significance filter
+    /// trims the upload legs of the comm breakdown. Both factors are
+    /// exactly 1.0 — same arithmetic, bit-identical — under
+    /// `Bulk` + `StragglerModel::None`.
     pub fn iter_time(&self, c: Config) -> (f64, f64) {
         let per_worker = (self.global_batch + c.workers - 1) / c.workers.max(1);
         if self.system.is_serverless() {
             let comp =
                 compute_time_s(self.profile, self.cal, self.platform, c.mem_mb, per_worker);
             let env = SyncEnv::standard(self.platform.net_bw_bps(c.mem_mb));
-            let comm = comm_breakdown(
+            let comm = self.sync.filtered_comm_s(&comm_breakdown(
                 self.system.scheme().expect("serverless scheme"),
                 &env,
                 self.profile.grad_bytes(),
                 c.workers,
                 self.profile.extra_upload_bytes,
-            )
-            .total();
-            (comp, comm)
+            ));
+            let n = c.workers.max(1);
+            let wf = self.platform.limits.straggler.expected_kth(self.sync.effective_k(n), n);
+            (comp * wf, comm * wf)
         } else {
             // VM: 8 vCPUs per instance, ring allreduce over 10 GbE
             let flops = self.profile.flops_fwd_per_sample
@@ -190,12 +228,47 @@ impl IterModel<'_> {
         }
     }
 
-    /// $ cost of one iteration at `c`.
+    /// Fraction of serverless comm time spent on uploads — what a
+    /// significance filter can skip. 0 for VM systems.
+    pub fn upload_fraction(&self, c: Config) -> f64 {
+        if !self.system.is_serverless() {
+            return 0.0;
+        }
+        let env = SyncEnv::standard(self.platform.net_bw_bps(c.mem_mb));
+        let b = comm_breakdown(
+            self.system.scheme().expect("serverless scheme"),
+            &env,
+            self.profile.grad_bytes(),
+            c.workers,
+            self.profile.extra_upload_bytes,
+        );
+        let total = b.total();
+        if total > 0.0 {
+            (b.ul_shard + b.ul_aggr + b.ul_grad) / total
+        } else {
+            0.0
+        }
+    }
+
+    /// $ cost of one *expected* iteration at `c`.
+    ///
+    /// Wall time runs to the k-th arrival, but billing does not: workers
+    /// past the k-th run — and are billed — to their own completion,
+    /// while the first k idle (billed) until aggregation. The billed
+    /// duration therefore scales by `billed_factor / expected_kth`
+    /// relative to the wall estimate; exactly 1 under bulk or no
+    /// stragglers, keeping the original arithmetic bit-identical.
     pub fn iter_cost(&self, c: Config) -> f64 {
         let (comp, comm) = self.iter_time(c);
         let t = comp + comm;
         if self.system.is_serverless() {
-            self.pricing.lambda_cost(c.workers, c.mem_mb, t)
+            let n = c.workers.max(1);
+            let k = self.sync.effective_k(n);
+            let strag = self.platform.limits.straggler;
+            let wf = strag.expected_kth(k, n);
+            let bf = strag.billed_factor(k, n);
+            let billed = if bf == wf { t } else { t * (bf / wf) };
+            self.pricing.lambda_cost(c.workers, c.mem_mb, billed)
                 + self.pricing.param_store_cost(2, t)
         } else {
             self.pricing.vm_cost(c.workers, t)
@@ -240,7 +313,12 @@ impl Objective for PhaseObjective<'_> {
     fn eval(&mut self, c: Config) -> f64 {
         self.evals += 1;
         let (comp, comm) = self.model.iter_time(c);
-        goal_score(self.goal, comp + comm, self.model.iter_cost(c), self.phase_iters)
+        // statistical-efficiency discount: a policy yielding fraction y
+        // of the gradient signal needs ~1/y the iterations for the same
+        // loss, so the goal sees time and cost at 1/y. Exactly 1.0 (and
+        // bit-identical scoring) under bulk sync.
+        let y = self.model.sync.expected_yield(c.workers);
+        goal_score(self.goal, (comp + comm) / y, self.model.iter_cost(c) / y, self.phase_iters)
     }
 
     fn eval_cost_s(&self, c: Config) -> f64 {
@@ -303,6 +381,18 @@ pub struct JobDriver {
     comm_s: f64,
     init_s: f64,
     guard_every: u64,
+    /// sync policy in force (job.sync, or the co-optimizer's pick when
+    /// `job.sync_search` is on)
+    sync_active: SyncPolicy,
+    /// upload share of comm time this phase (significance-filter ramp)
+    ul_frac: f64,
+    /// Σ per-iteration update yield (SimOutcome::update_yield_sum)
+    yield_sum: f64,
+    /// workers still running past the k-th arrival when a phase ends —
+    /// their containers check in to the warm pool late
+    straggler_late: u32,
+    /// how long past fleet retirement those stragglers hold containers
+    straggler_lag_s: f64,
     lease: Option<u64>,
     /// memory the currently-running fleet's containers were launched
     /// with — what a later check-in bills keep-alive by (cfg.mem_mb may
@@ -352,6 +442,7 @@ impl JobDriver {
             Config { workers: (job.fixed.workers / 8).max(1), mem_mb: 32_768 }
         };
         let scheduler = TaskScheduler::new(cfg.workers);
+        let sync_active = job.sync;
         JobDriver {
             job,
             tenant,
@@ -376,6 +467,11 @@ impl JobDriver {
             comm_s: 0.0,
             init_s: 0.0,
             guard_every: 1,
+            sync_active,
+            ul_frac: 0.0,
+            yield_sum: 0.0,
+            straggler_late: 0,
+            straggler_lag_s: 0.0,
             lease: None,
             fleet_mem_mb: cfg.mem_mb,
             state: DriverState::PhaseStart,
@@ -442,7 +538,21 @@ impl JobDriver {
         let Some(id) = self.lease.take() else { return false };
         let n = env.pool.release(id);
         if self.job.system.is_serverless() {
-            env.warm.checkin(self.job.image_id(), self.fleet_mem_mb, n, self.t_now);
+            // under semi-sync + stragglers, the n - k workers past the
+            // aggregation point are still running when the fleet retires:
+            // their containers check in late and are invisible to
+            // checkouts until then (straggler pinning, WarmReport)
+            let late = self.straggler_late.min(n);
+            env.warm.checkin(self.job.image_id(), self.fleet_mem_mb, n - late, self.t_now);
+            if late > 0 {
+                env.warm.checkin_late(
+                    self.job.image_id(),
+                    self.fleet_mem_mb,
+                    late,
+                    self.t_now,
+                    self.t_now + self.straggler_lag_s,
+                );
+            }
         }
         true
     }
@@ -570,6 +680,7 @@ impl JobDriver {
                 platform: &env.platform,
                 cal: &self.cal,
                 pricing: &self.pricing,
+                sync: self.sync_active,
             };
             let mut obj = PhaseObjective {
                 model,
@@ -612,7 +723,7 @@ impl JobDriver {
                 }
             };
             let bo = BayesOpt::new(space, params);
-            let res = bo.run_with_weighted_prior(&mut obj, &prior);
+            let res = bo.search(&mut obj, &SearchSpec::from_weighted_prior(&prior));
             self.bo_probes += res.evaluations as u64;
             // profiling wall time + money
             self.profiling_time_s += res.profiling_s;
@@ -657,6 +768,37 @@ impl JobDriver {
             }
             self.cfg = res.best;
             self.scheduler.resize(self.cfg.workers);
+            // ---- sync-policy coordinate descent: with the config search
+            // done, rescore a small policy grid *analytically* at the
+            // chosen config (the model the live probes just calibrated —
+            // no extra probe spend, MLLess-style online estimation) and
+            // adopt the best under the same yield-discounted goal score
+            if self.job.sync_search && self.job.system.is_serverless() {
+                let mut best = (f64::INFINITY, self.sync_active);
+                for pol in SyncPolicy::candidates(self.cfg.workers) {
+                    let m = IterModel {
+                        system: self.job.system,
+                        profile: &phase.profile,
+                        global_batch: phase.global_batch,
+                        platform: &env.platform,
+                        cal: &self.cal,
+                        pricing: &self.pricing,
+                        sync: pol,
+                    };
+                    let (comp, comm) = m.iter_time(self.cfg);
+                    let y = pol.expected_yield(self.cfg.workers);
+                    let score = goal_score(
+                        self.job.goal,
+                        (comp + comm) / y,
+                        m.iter_cost(self.cfg) / y,
+                        phase.iters,
+                    );
+                    if score < best.0 {
+                        best = (score, pol);
+                    }
+                }
+                self.sync_active = best.1;
+            }
         }
         // multi-tenant hard cap: fixed-config systems request what the
         // user asked for, but the account will never run more than the
@@ -678,10 +820,32 @@ impl JobDriver {
             platform: &env.platform,
             cal: &self.cal,
             pricing: &self.pricing,
+            sync: self.sync_active,
         };
         let (comp, comm) = model.iter_time(self.cfg);
         self.comp_s = comp;
         self.comm_s = comm;
+        self.ul_frac = if self.sync_active.skip_asymptote() > 0.0 {
+            model.upload_fraction(self.cfg)
+        } else {
+            0.0
+        };
+        // straggler pinning: under semi-sync the n - k workers past the
+        // aggregation point are expected to still be running at phase end
+        // — for about one iteration's (E[max] - E[kth]) spread — holding
+        // their containers away from the warm pool. Zero under bulk sync
+        // or without a straggler model (the bit-identical path).
+        let n = self.cfg.workers.max(1);
+        let k = self.sync_active.effective_k(n);
+        let strag = env.platform.limits.straggler;
+        if self.job.system.is_serverless() && !strag.is_none() && k < n {
+            let wf = strag.expected_kth(k, n);
+            self.straggler_late = n - k;
+            self.straggler_lag_s = ((comp + comm) / wf) * (strag.expected_kth(n, n) - wf);
+        } else {
+            self.straggler_late = 0;
+            self.straggler_lag_s = 0.0;
+        }
         self.init_s = init_time_s(&phase.profile, self.job.framework, 0.0);
         self.guard_every = (phase.iters / 4).max(1);
         self.iter_in_phase = 0;
@@ -742,6 +906,7 @@ impl JobDriver {
                 platform: &env.platform,
                 cal: &self.cal,
                 pricing: &self.pricing,
+                sync: self.sync_active,
             };
             if self.job.system.adaptive() {
                 let space = self.space_capped(env);
@@ -761,7 +926,7 @@ impl JobDriver {
                         ..Default::default()
                     },
                 );
-                let res = bo.run(&mut obj);
+                let res = bo.search(&mut obj, &SearchSpec::default());
                 self.bo_probes += res.evaluations as u64;
                 self.cfg = res.best;
                 // quick refresh probes, not a full profiling pass
@@ -856,6 +1021,7 @@ impl JobDriver {
                             platform: &env.platform,
                             cal: &self.cal,
                             pricing: &self.pricing,
+                            sync: self.sync_active,
                         },
                         goal: Goal::Fastest,
                         phase_iters: phase.iters - i,
@@ -870,7 +1036,7 @@ impl JobDriver {
                             ..Default::default()
                         },
                     );
-                    let res = bo.run(&mut obj);
+                    let res = bo.search(&mut obj, &SearchSpec::default());
                     self.bo_probes += res.evaluations as u64;
                     let (na, nb) = obj.model.iter_time(res.best);
                     // only escalate to a strictly faster configuration
@@ -923,11 +1089,24 @@ impl JobDriver {
         // cross-job storage contention stretches the synchronization
         // phase of serverless schemes (shared param/object store); VM
         // allreduce is in-cluster traffic. Exactly 1.0 single-tenant.
+        // The significance filter's ramp (skipping less than the
+        // asymptote early in training) rides the same multiplier —
+        // exactly 1.0 for non-filtering policies.
         let comm_eff = if self.job.system.is_serverless() {
             let own = if self.lease.is_some() { self.cfg.workers } else { 0 };
-            self.comm_s * env.comm_factor(own)
+            self.comm_s * self.sync_active.filter_ratio(self.ul_frac, i) * env.comm_factor(own)
         } else {
             self.comm_s
+        };
+        // per-iteration straggler realization: the sampled k-th order
+        // statistic (wall) and mean billed duration, both relative to the
+        // expectation already folded into comp_s/comm_s. Exactly
+        // (1.0, 1.0) — and zero RNG draws — without a straggler model.
+        let (wall_r, billed_r) = if self.job.system.is_serverless() {
+            let n = self.cfg.workers;
+            env.platform.straggler_draw(n, self.sync_active.effective_k(n))
+        } else {
+            (1.0, 1.0)
         };
         let mut extra = 0.0;
         let mut restarted = 0;
@@ -935,7 +1114,7 @@ impl JobDriver {
             let (r, add) = self.scheduler.lifecycle_step(
                 &mut env.platform,
                 &mut self.injector,
-                self.comp_s + comm_eff,
+                (self.comp_s + comm_eff) * wall_r,
                 self.init_s,
             );
             restarted = r;
@@ -949,11 +1128,14 @@ impl JobDriver {
                 0.0
             };
         }
-        let iter_total = self.comp_s + comm_eff + extra;
+        let iter_total = (self.comp_s + comm_eff) * wall_r + extra;
         if self.job.system.is_serverless() {
+            // billing diverges from wall under semi-sync: stragglers past
+            // the k-th arrival are billed to their own completion
+            let billed_s = (self.comp_s + comm_eff) * billed_r + extra;
             self.ledger
-                .add_lambda(&self.pricing, self.cfg.workers, self.cfg.mem_mb, iter_total);
-            self.ledger.add_param_store(&self.pricing, 2, comm_eff);
+                .add_lambda(&self.pricing, self.cfg.workers, self.cfg.mem_mb, billed_s);
+            self.ledger.add_param_store(&self.pricing, 2, comm_eff * wall_r);
             // object-store request accounting
             match self.job.system {
                 SystemKind::Siren => self.ledger.add_s3(
@@ -972,8 +1154,8 @@ impl JobDriver {
         self.metrics.push(IterRecord {
             iter: self.iters_done,
             t_start: self.t_now,
-            compute_s: self.comp_s,
-            comm_s: comm_eff + extra,
+            compute_s: self.comp_s * wall_r,
+            comm_s: comm_eff * wall_r + extra,
             loss: 0.0,
             workers: self.cfg.workers,
             mem_mb: self.cfg.mem_mb,
@@ -981,6 +1163,7 @@ impl JobDriver {
             restarted_workers: restarted,
         });
         self.t_now += iter_total;
+        self.yield_sum += self.sync_active.yield_at(self.cfg.workers, i);
         self.iters_done += 1;
         self.iter_in_phase += 1;
 
@@ -1018,6 +1201,7 @@ impl JobDriver {
             warm_hits: self.warm_hits,
             cold_starts: self.cold_starts,
             config_trace: self.config_trace,
+            update_yield_sum: self.yield_sum,
         }
     }
 }
@@ -1043,10 +1227,24 @@ pub fn simulate(job: &SimJob) -> SimOutcome {
 mod tests {
     use super::*;
     use crate::coordinator::workload::Workloads;
+    use crate::sync::StragglerModel;
 
     fn quick_job(system: SystemKind) -> SimJob {
         let phases = Workloads::static_run(ModelProfile::bert_small(), 60, 256);
         SimJob::new(system, phases)
+    }
+
+    /// `simulate`, but with a straggler model injected into the platform.
+    fn run_with(job: SimJob, strag: StragglerModel) -> SimOutcome {
+        let mut env = ClusterEnv::single(job.seed);
+        env.platform.limits.straggler = strag;
+        let mut driver = JobDriver::new(job, 0, &env, 0.0);
+        let mut steps = 0u64;
+        while !matches!(driver.step(&mut env), StepEvent::Finished) {
+            steps += 1;
+            assert!(steps < 20_000, "driver wedged");
+        }
+        driver.into_outcome()
     }
 
     #[test]
@@ -1307,6 +1505,102 @@ mod tests {
         let mut d = quick_job(SystemKind::Smlt);
         d.image = Some(99);
         assert_eq!(d.image_id(), 99);
+    }
+
+    #[test]
+    fn default_job_runs_bulk_with_full_yield() {
+        let out = simulate(&quick_job(SystemKind::Smlt));
+        assert_eq!(out.accuracy_proxy(), 1.0);
+        assert_eq!(out.update_yield_sum, out.iters_done as f64);
+    }
+
+    #[test]
+    fn zero_threshold_filter_is_bit_identical_to_bulk() {
+        let mut j = quick_job(SystemKind::Smlt);
+        j.sync = SyncPolicy::SignificanceFiltered { threshold: 0.0, decay: 0.1 };
+        let a = simulate(&j);
+        let b = simulate(&quick_job(SystemKind::Smlt));
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+        assert_eq!(a.accuracy_proxy(), 1.0);
+    }
+
+    #[test]
+    fn semisync_full_k_is_bit_identical_to_bulk_even_under_stragglers() {
+        // k >= n clamps to n: the aggregation point IS the max, so every
+        // arithmetic path (order statistic, billing, yield, pinning)
+        // collapses to bulk's — including the sampled straggler draws
+        let strag = StragglerModel::LogNormal { sigma: 0.5 };
+        let mut j = quick_job(SystemKind::Smlt);
+        j.sync = SyncPolicy::SemiSync { k: u32::MAX };
+        let a = run_with(j, strag);
+        let b = run_with(quick_job(SystemKind::Smlt), strag);
+        assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+        assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+        assert_eq!(a.accuracy_proxy(), 1.0);
+    }
+
+    #[test]
+    fn stragglers_slow_bulk_jobs_down() {
+        let clean = run_with(quick_job(SystemKind::LambdaMl), StragglerModel::None);
+        let slow = run_with(
+            quick_job(SystemKind::LambdaMl),
+            StragglerModel::Pareto { alpha: 1.5 },
+        );
+        assert!(
+            slow.total_time_s > clean.total_time_s * 1.5,
+            "{} vs {}",
+            slow.total_time_s,
+            clean.total_time_s
+        );
+    }
+
+    #[test]
+    fn semisync_beats_bulk_under_heavy_stragglers() {
+        // fixed-config system (no BO confound): same 32-worker fleet,
+        // only the aggregation point differs
+        let strag = StragglerModel::Pareto { alpha: 1.3 };
+        let bulk = run_with(quick_job(SystemKind::LambdaMl), strag);
+        let mut j = quick_job(SystemKind::LambdaMl);
+        j.sync = SyncPolicy::SemiSync { k: 24 };
+        let semi = run_with(j, strag);
+        assert!(semi.total_time_s < bulk.total_time_s);
+        assert!(semi.total_cost() < bulk.total_cost());
+        // bounded accuracy loss: 24 fresh + 8 half-credit of 32 = 0.875
+        assert!((semi.accuracy_proxy() - 0.875).abs() < 1e-9);
+        assert_eq!(bulk.accuracy_proxy(), 1.0);
+    }
+
+    #[test]
+    fn significance_filter_cuts_cost_at_bounded_yield_loss() {
+        let base = run_with(quick_job(SystemKind::LambdaMl), StragglerModel::None);
+        let mut j = quick_job(SystemKind::LambdaMl);
+        j.sync = SyncPolicy::SignificanceFiltered { threshold: 0.4, decay: 0.2 };
+        let filt = run_with(j, StragglerModel::None);
+        assert!(filt.total_cost() < base.total_cost());
+        assert!(filt.total_time_s < base.total_time_s);
+        // the ramp keeps early iterations near full yield, so the mean
+        // sits above the 0.6 asymptote
+        assert!(filt.accuracy_proxy() > 0.6 && filt.accuracy_proxy() < 1.0);
+    }
+
+    #[test]
+    fn sync_search_adopts_a_policy_under_stragglers() {
+        let mut j = quick_job(SystemKind::Smlt);
+        j.sync_search = true;
+        let out = run_with(j, StragglerModel::Pareto { alpha: 1.2 });
+        assert_eq!(out.iters_done, 60);
+        // under a heavy tail the co-optimizer abandons bulk
+        assert!(out.accuracy_proxy() < 1.0, "proxy {}", out.accuracy_proxy());
+        // ...and without stragglers it must keep bulk (bit-identical)
+        let mut j2 = quick_job(SystemKind::Smlt);
+        j2.sync_search = true;
+        let search_clean = run_with(j2, StragglerModel::None);
+        assert_eq!(
+            search_clean.accuracy_proxy(),
+            1.0,
+            "no straggler tail to dodge: bulk must stay the best policy"
+        );
     }
 
     #[test]

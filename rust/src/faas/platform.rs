@@ -1,5 +1,6 @@
 //! Lambda-like platform model: resources, cold starts, invocation quirks.
 
+use crate::sync::policy::StragglerModel;
 use crate::util::rng::Pcg;
 
 /// Platform limits & scaling constants (AWS Lambda defaults; all public so
@@ -35,6 +36,10 @@ pub struct FaasLimits {
     /// effective concurrency cap of a Step-Functions 'Map' state even when
     /// configured as 'infinite' (the paper's footnote 6; AWS forum #311362)
     pub stepfn_map_concurrency: u32,
+    /// per-worker iteration-time tail multipliers (heavy-tailed FaaS
+    /// stragglers, arXiv 2105.07806). `None` draws nothing from the RNG
+    /// and keeps every pre-straggler trace bit-identical.
+    pub straggler: StragglerModel,
 }
 
 impl Default for FaasLimits {
@@ -53,6 +58,7 @@ impl Default for FaasLimits {
             async_anomaly_prob: 0.08,
             async_anomaly_s: 2.5,
             stepfn_map_concurrency: 40,
+            straggler: StragglerModel::None,
         }
     }
 }
@@ -214,6 +220,32 @@ impl FaasPlatform {
         self.rng.lognormal(median_s.max(1e-6).ln(), sigma)
     }
 
+    /// Sample one iteration's straggler realization for an `n`-worker
+    /// fleet that aggregates at the k-th arrival. Returns `(wall, billed)`
+    /// multipliers *relative to the expected k-th order statistic* — the
+    /// factor [`IterModel`](crate::coordinator::simrun::IterModel) already
+    /// folds into its per-phase iteration times — so the driver can scale
+    /// its stored expected times directly: `.0` scales the iteration's
+    /// wall-clock span, `.1` the mean per-worker billed duration (workers
+    /// past the k-th run to their own completion and are billed for it;
+    /// the first `k` idle until the k-th and are billed the k-th's time).
+    ///
+    /// With `limits.straggler == None` this returns `(1.0, 1.0)` without
+    /// consuming a single RNG draw — the bit-identical golden-trace path.
+    pub fn straggler_draw(&mut self, n: u32, k: u32) -> (f64, f64) {
+        let model = self.limits.straggler;
+        if model.is_none() || n == 0 {
+            return (1.0, 1.0);
+        }
+        let k = k.clamp(1, n);
+        let mut m = model.sample_multipliers(&mut self.rng, n);
+        m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let kth = m[k as usize - 1];
+        let billed_sum = kth * k as f64 + m[k as usize..].iter().sum::<f64>();
+        let expected = model.expected_kth(k, n);
+        (kth / expected, (billed_sum / n as f64) / expected)
+    }
+
     /// How much of `work_s` of function time fits before the duration cap
     /// forces a restart: returns the number of full invocations needed for
     /// `work_s` seconds of useful work when each invocation also pays
@@ -327,6 +359,60 @@ mod tests {
         );
         for i in &inv[..100] {
             assert!(i.startup_delay_s > 0.0 && i.startup_delay_s < 0.2);
+        }
+    }
+
+    #[test]
+    fn straggler_none_draws_nothing_from_the_rng() {
+        // the golden-trace guarantee, straggler edition: a disabled model
+        // must leave the platform RNG stream untouched
+        let mut a = FaasPlatform::with_seed(11);
+        let mut b = FaasPlatform::with_seed(11);
+        assert_eq!(a.straggler_draw(32, 24), (1.0, 1.0));
+        assert_eq!(a.straggler_draw(32, 32), (1.0, 1.0));
+        let ia = a.invoke_workers(16, InvokeMode::DirectTracked);
+        let ib = b.invoke_workers(16, InvokeMode::DirectTracked);
+        for (x, y) in ia.iter().zip(ib.iter()) {
+            assert_eq!(x.startup_delay_s.to_bits(), y.startup_delay_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn straggler_draw_orders_wall_below_billed_below_bulk() {
+        let mut p = FaasPlatform::with_seed(12);
+        p.limits.straggler = StragglerModel::Pareto { alpha: 1.5 };
+        let mut wall_sum = 0.0;
+        let mut billed_sum = 0.0;
+        for _ in 0..200 {
+            let (wall, billed) = p.straggler_draw(32, 24);
+            assert!(wall > 0.0 && billed > 0.0);
+            // fast finishers are billed until the k-th arrival, stragglers
+            // their own time, so billed >= wall always
+            assert!(billed >= wall - 1e-12, "billed {billed} < wall {wall}");
+            wall_sum += wall;
+            billed_sum += billed;
+        }
+        // ratios are centered near 1 (they are relative to the expected
+        // k-th order statistic)
+        assert!((wall_sum / 200.0 - 1.0).abs() < 0.25, "{}", wall_sum / 200.0);
+        assert!(billed_sum / 200.0 > wall_sum / 200.0);
+    }
+
+    #[test]
+    fn straggler_draw_k_of_n_wall_monotone_on_shared_draws() {
+        // same seed => same sorted multipliers; the k-th order statistic
+        // (and thus the wall multiplier numerator) is non-decreasing in k
+        for k2 in [8u32, 16, 24, 32] {
+            let mut a = FaasPlatform::with_seed(13);
+            a.limits.straggler = StragglerModel::LogNormal { sigma: 0.5 };
+            let mut b = FaasPlatform::with_seed(13);
+            b.limits.straggler = StragglerModel::LogNormal { sigma: 0.5 };
+            let model = a.limits.straggler;
+            let (wa, _) = a.straggler_draw(32, k2.saturating_sub(4).max(1));
+            let (wb, _) = b.straggler_draw(32, k2);
+            let ta = wa * model.expected_kth(k2.saturating_sub(4).max(1), 32);
+            let tb = wb * model.expected_kth(k2, 32);
+            assert!(ta <= tb + 1e-12, "k={k2}: {ta} > {tb}");
         }
     }
 

@@ -19,7 +19,7 @@ use smlt::coordinator::simrun::IterModel;
 use smlt::coordinator::{simulate, EndClient, Goal, SimJob, Workloads};
 use smlt::costmodel::Pricing;
 use smlt::faas::FaasPlatform;
-use smlt::optimizer::{BayesOpt, BoParams, ConfigSpace};
+use smlt::optimizer::{BayesOpt, BoParams, ConfigSpace, SearchSpec};
 use smlt::perfmodel::{Calibration, ModelProfile};
 use smlt::util::cli::Args;
 
@@ -168,12 +168,13 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             platform: &platform,
             cal: &cal,
             pricing: &pricing,
+            sync: Default::default(),
         },
         goal,
         iters,
     };
     let bo = BayesOpt::new(ConfigSpace::default(), BoParams::default());
-    let res = bo.run(&mut obj);
+    let res = bo.search(&mut obj, &SearchSpec::default());
     let (comp, comm) = obj.m.iter_time(res.best);
     println!("model       : {} ({} params)", profile.name, profile.params);
     println!("goal        : {goal:?}");

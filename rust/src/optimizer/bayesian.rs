@@ -42,6 +42,63 @@ pub struct BoResult {
     pub trace: Vec<(Config, f64)>,
 }
 
+/// Everything that varies between invocations of one configured
+/// [`BayesOpt`]: the GP prior (with optional per-point noise inflation)
+/// and an optional probe-budget override. The search *strategy* (warm-up
+/// size, candidate pool, EI tolerance, seed) stays in [`BoParams`]; the
+/// spec carries the per-call *inputs*. `SearchSpec::default()` is a cold,
+/// prior-free search — bit-identical to the old `run()`.
+#[derive(Clone, Debug, Default)]
+pub struct SearchSpec {
+    /// `(config, objective value)` pairs measured by *earlier* runs (the
+    /// cross-job [`PosteriorBank`](crate::warm::PosteriorBank), rescored
+    /// under the caller's goal). Prior points inform the posterior but
+    /// never count as evaluations or incumbents: the best-observed value
+    /// comes from live probes only, so a stale prior can misdirect early
+    /// acquisition but cannot fabricate a result. With a non-empty prior
+    /// the random warm-up shrinks to a single probe — the banked surface
+    /// replaces it. Prior configs outside the current (possibly
+    /// quota-shrunken) space are ignored.
+    pub prior: Vec<(Config, f64)>,
+    /// Per-point **noise-inflation factors** (≥ 1), parallel to `prior`:
+    /// the point enters the GP with its noise variance multiplied by the
+    /// factor, so a stale banked measurement widens the posterior instead
+    /// of anchoring it (see
+    /// [`staleness_inflation`](crate::warm::staleness_inflation)).
+    /// Missing entries default to 1.0 (full trust); factors below 1 are
+    /// clamped up to 1 (a prior is never trusted *more* than a live
+    /// probe).
+    pub weights: Vec<f64>,
+    /// Cap on total live probes for *this* call, overriding
+    /// [`BoParams::max_iters`] when a non-empty prior was accepted — the
+    /// "second same-family job re-profiles on a small refresh budget"
+    /// pattern, without rebuilding the optimizer. Ignored for cold
+    /// searches: a refresh budget only makes sense against a warm
+    /// posterior.
+    pub refresh_budget: Option<u32>,
+}
+
+impl SearchSpec {
+    /// Prior-free cold search (same as `SearchSpec::default()`).
+    pub fn fresh() -> SearchSpec {
+        SearchSpec::default()
+    }
+
+    /// Seed the GP from fully-trusted `(config, value)` pairs.
+    pub fn from_prior(prior: &[(Config, f64)]) -> SearchSpec {
+        SearchSpec { prior: prior.to_vec(), ..SearchSpec::default() }
+    }
+
+    /// Seed the GP from `(config, value, noise-inflation)` triples.
+    pub fn from_weighted_prior(prior: &[(Config, f64, f64)]) -> SearchSpec {
+        SearchSpec {
+            prior: prior.iter().map(|&(c, y, _)| (c, y)).collect(),
+            weights: prior.iter().map(|&(_, _, f)| f).collect(),
+            ..SearchSpec::default()
+        }
+    }
+}
+
 pub struct BayesOpt {
     pub params: BoParams,
     pub space: ConfigSpace,
@@ -61,42 +118,33 @@ impl BayesOpt {
         (y_min - mu) * norm_cdf(z) + sigma * norm_pdf(z)
     }
 
-    /// Run the optimization loop against `obj`.
+    #[deprecated(since = "0.7.0", note = "use BayesOpt::search with SearchSpec::default()")]
     pub fn run(&self, obj: &mut dyn Objective) -> BoResult {
-        self.run_with_prior(obj, &[])
+        self.search(obj, &SearchSpec::default())
     }
 
-    /// [`run`](Self::run) with the GP posterior seeded from `prior` —
-    /// `(config, objective value)` pairs measured by *earlier* runs (the
-    /// cross-job [`PosteriorBank`](crate::warm::PosteriorBank), rescored
-    /// under the caller's goal). Prior points inform the posterior but
-    /// never count as evaluations or incumbents: the best-observed value
-    /// comes from live probes only, so a stale prior can misdirect early
-    /// acquisition but cannot fabricate a result. With a non-empty prior
-    /// the random warm-up shrinks to a single probe — the banked surface
-    /// replaces it — which is where the "second same-family job converges
-    /// in fewer probes" saving comes from. Prior configs outside the
-    /// current (possibly quota-shrunken) space are ignored. An empty
-    /// prior is bit-identical to [`run`](Self::run).
+    #[deprecated(since = "0.7.0", note = "use BayesOpt::search with SearchSpec::from_prior")]
     pub fn run_with_prior(&self, obj: &mut dyn Objective, prior: &[(Config, f64)]) -> BoResult {
-        let flat: Vec<(Config, f64, f64)> = prior.iter().map(|&(c, y)| (c, y, 1.0)).collect();
-        self.run_with_weighted_prior(obj, &flat)
+        self.search(obj, &SearchSpec::from_prior(prior))
     }
 
-    /// [`run_with_prior`](Self::run_with_prior) where each prior point
-    /// carries a **noise-inflation factor** (≥ 1): the point enters the
-    /// GP with its noise variance multiplied by the factor, so a stale
-    /// banked measurement widens the posterior instead of anchoring it
-    /// (see [`staleness_inflation`](crate::warm::staleness_inflation)).
-    /// A factor of exactly 1.0 is bit-identical to
-    /// [`run_with_prior`](Self::run_with_prior); factors below 1 are
-    /// clamped up to 1 (a prior is never trusted *more* than a live
-    /// probe).
+    #[deprecated(
+        since = "0.7.0",
+        note = "use BayesOpt::search with SearchSpec::from_weighted_prior"
+    )]
     pub fn run_with_weighted_prior(
         &self,
         obj: &mut dyn Objective,
         prior: &[(Config, f64, f64)],
     ) -> BoResult {
+        self.search(obj, &SearchSpec::from_weighted_prior(prior))
+    }
+
+    /// Run the optimization loop against `obj` under `spec`. An empty
+    /// default spec is the plain cold search; a spec with a prior seeds
+    /// the GP posterior before any live probe (see [`SearchSpec`] for the
+    /// exact semantics of each field).
+    pub fn search(&self, obj: &mut dyn Objective, spec: &SearchSpec) -> BoResult {
         let mut rng = Pcg::new(self.params.seed);
         let mut gp = Gp::default();
         let mut trace: Vec<(Config, f64)> = Vec::new();
@@ -109,17 +157,23 @@ impl BayesOpt {
         // invariant under the monotone transform.
         let warp = |y: f64| (y.max(1e-12)).ln();
         let mut prior_n = 0u32;
-        for (c, y, inflate) in prior {
-            if !self.space.contains(*c) {
+        for (i, &(c, y)) in spec.prior.iter().enumerate() {
+            if !self.space.contains(c) {
                 continue;
             }
             // inflation factor f ≥ 1 → extra (f−1)·noise on the diagonal;
             // f = 1 adds exactly 0.0, keeping the unweighted path
             // bit-identical
+            let inflate = spec.weights.get(i).copied().unwrap_or(1.0);
             let extra = (inflate.max(1.0) - 1.0) * gp.noise_var;
-            gp.observe_noisy(self.space.normalize(*c).to_vec(), warp(*y), extra);
+            gp.observe_noisy(self.space.normalize(c).to_vec(), warp(y), extra);
             prior_n += 1;
         }
+        // a refresh budget only applies against an accepted warm prior
+        let max_iters = match spec.refresh_budget {
+            Some(b) if prior_n > 0 => b,
+            _ => self.params.max_iters,
+        };
         let mut evaluate =
             |c: Config, gp: &mut Gp, trace: &mut Vec<(Config, f64)>, prof: &mut f64,
              best: &mut (Config, f64)| {
@@ -135,13 +189,13 @@ impl BayesOpt {
         // warm-up: random configurations ("randomly chosen configurations"
         // per §3.2); a warm posterior replaces all but one of them
         let n_init = if prior_n > 0 { self.params.n_init.min(1) } else { self.params.n_init };
-        for _ in 0..n_init.min(self.params.max_iters) {
+        for _ in 0..n_init.min(max_iters) {
             let c = self.space.sample(&mut rng);
             evaluate(c, &mut gp, &mut trace, &mut profiling_s, &mut best);
         }
 
         // acquisition loop (EI computed in the warped space)
-        while (trace.len() as u32) < self.params.max_iters {
+        while (trace.len() as u32) < max_iters {
             let y_min_w = warp(best.1);
             let mut best_cand: Option<(Config, f64)> = None;
             // candidate pool: global random samples + local perturbations
@@ -225,7 +279,7 @@ mod tests {
         let space = ConfigSpace::default();
         let mut obj = Bowl { evals: 0 };
         let bo = BayesOpt::new(space, BoParams::default());
-        let res = bo.run(&mut obj);
+        let res = bo.search(&mut obj, &SearchSpec::default());
         assert!(res.evaluations <= 18);
         assert!(
             res.best_value < 1.6,
@@ -242,21 +296,45 @@ mod tests {
     fn deterministic_given_seed() {
         let space = ConfigSpace::default();
         let bo = BayesOpt::new(space, BoParams::default());
-        let r1 = bo.run(&mut Bowl { evals: 0 });
-        let r2 = bo.run(&mut Bowl { evals: 0 });
+        let r1 = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::default());
+        let r2 = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::fresh());
         assert_eq!(r1.best, r2.best);
         assert_eq!(r1.trace.len(), r2.trace.len());
     }
 
     #[test]
-    fn empty_prior_is_bit_identical_to_run() {
+    fn empty_prior_is_bit_identical_to_fresh_search() {
         let space = ConfigSpace::default();
         let bo = BayesOpt::new(space, BoParams::default());
-        let a = bo.run(&mut Bowl { evals: 0 });
-        let b = bo.run_with_prior(&mut Bowl { evals: 0 }, &[]);
+        let a = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::default());
+        let b = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_prior(&[]));
         assert_eq!(a.best, b.best);
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.profiling_s.to_bits(), b.profiling_s.to_bits());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_are_bit_identical_to_search() {
+        let space = ConfigSpace::default();
+        let bo = BayesOpt::new(space, BoParams::default());
+        let mut donor = Bowl { evals: 0 };
+        let c = Config { workers: 60, mem_mb: 4096 };
+        let prior = vec![(c, donor.eval(c))];
+        let weighted = vec![(c, prior[0].1, 2.0)];
+
+        let a = bo.run(&mut Bowl { evals: 0 });
+        let b = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::default());
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.profiling_s.to_bits(), b.profiling_s.to_bits());
+
+        let a = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
+        let b = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_prior(&prior));
+        assert_eq!(a.trace, b.trace);
+
+        let a = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &weighted);
+        let b = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_weighted_prior(&weighted));
+        assert_eq!(a.trace, b.trace);
     }
 
     #[test]
@@ -280,11 +358,9 @@ mod tests {
             (c, donor.eval(c))
         })
         .collect();
-        let bo = BayesOpt::new(
-            space,
-            BoParams { n_init: 4, max_iters: 6, ..Default::default() },
-        );
-        let warm = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
+        let bo = BayesOpt::new(space, BoParams { n_init: 4, ..Default::default() });
+        let spec = SearchSpec { refresh_budget: Some(6), ..SearchSpec::from_prior(&prior) };
+        let warm = bo.search(&mut Bowl { evals: 0 }, &spec);
         assert!(
             warm.evaluations <= 6,
             "refresh budget respected: {}",
@@ -302,7 +378,24 @@ mod tests {
     }
 
     #[test]
-    fn unit_weight_prior_is_bit_identical_to_run_with_prior() {
+    fn refresh_budget_is_ignored_without_an_accepted_prior() {
+        let space = ConfigSpace { max_workers: 50, ..Default::default() };
+        let bo = BayesOpt::new(space, BoParams::default());
+        // no prior at all, and a prior entirely outside the shrunken
+        // space: both leave the full max_iters budget in force
+        let cold = SearchSpec { refresh_budget: Some(2), ..SearchSpec::default() };
+        let rejected = SearchSpec {
+            refresh_budget: Some(2),
+            ..SearchSpec::from_prior(&[(Config { workers: 120, mem_mb: 4096 }, 1.0)])
+        };
+        let a = bo.search(&mut Bowl { evals: 0 }, &cold);
+        let b = bo.search(&mut Bowl { evals: 0 }, &rejected);
+        assert!(a.evaluations > 2, "cold search keeps its full budget");
+        assert!(b.evaluations > 2, "rejected prior keeps the full budget");
+    }
+
+    #[test]
+    fn unit_weight_prior_is_bit_identical_to_plain_prior() {
         let space = ConfigSpace::default();
         let bo = BayesOpt::new(
             space,
@@ -318,15 +411,15 @@ mod tests {
             .collect();
         let weighted: Vec<(Config, f64, f64)> =
             prior.iter().map(|&(c, y)| (c, y, 1.0)).collect();
-        let a = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
-        let b = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &weighted);
+        let a = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_prior(&prior));
+        let b = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_weighted_prior(&weighted));
         assert_eq!(a.best, b.best);
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.profiling_s.to_bits(), b.profiling_s.to_bits());
         // sub-unit factors clamp up to full trust, never below
         let clamped: Vec<(Config, f64, f64)> =
             prior.iter().map(|&(c, y)| (c, y, 0.25)).collect();
-        let c = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &clamped);
+        let c = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_weighted_prior(&clamped));
         assert_eq!(a.trace, c.trace);
     }
 
@@ -353,7 +446,7 @@ mod tests {
             space,
             BoParams { n_init: 2, max_iters: 8, ..Default::default() },
         );
-        let res = bo.run_with_weighted_prior(&mut Bowl { evals: 0 }, &prior);
+        let res = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_weighted_prior(&prior));
         assert!(res.evaluations <= 8);
         assert!(res.best_value.is_finite());
         assert!(res.best_value < 5.0, "found {:?} = {}", res.best, res.best_value);
@@ -369,7 +462,7 @@ mod tests {
         // a prior measured under a roomier quota: workers=120 is outside
         // the shrunken space and must not panic or poison the GP
         let prior = vec![(Config { workers: 120, mem_mb: 4096 }, 1.0)];
-        let res = bo.run_with_prior(&mut Bowl { evals: 0 }, &prior);
+        let res = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::from_prior(&prior));
         assert!(res.best.workers <= 50);
         assert!(res.best_value.is_finite());
     }
@@ -377,7 +470,7 @@ mod tests {
     #[test]
     fn trace_never_repeats_configs() {
         let bo = BayesOpt::new(ConfigSpace::default(), BoParams::default());
-        let res = bo.run(&mut Bowl { evals: 0 });
+        let res = bo.search(&mut Bowl { evals: 0 }, &SearchSpec::default());
         for i in 0..res.trace.len() {
             for j in i + 1..res.trace.len() {
                 assert_ne!(res.trace[i].0, res.trace[j].0);

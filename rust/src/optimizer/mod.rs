@@ -12,7 +12,7 @@ pub mod gp;
 pub mod rl;
 pub mod search;
 
-pub use bayesian::{BayesOpt, BoParams};
+pub use bayesian::{BayesOpt, BoParams, BoResult, SearchSpec};
 pub use gp::Gp;
 pub use search::{Config, ConfigSpace, GridSearch, RandomSearch};
 

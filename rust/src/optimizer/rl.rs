@@ -107,7 +107,7 @@ impl QLearner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optimizer::{BayesOpt, BoParams};
+    use crate::optimizer::{BayesOpt, BoParams, SearchSpec};
 
     struct Bowl;
     impl Objective for Bowl {
@@ -133,7 +133,7 @@ mod tests {
         // the Fig 4 structural result; exact ratio depends on params but
         // RL must be materially more expensive for similar quality
         let bo = BayesOpt::new(ConfigSpace::default(), BoParams::default());
-        let bo_res = bo.run(&mut Bowl);
+        let bo_res = bo.search(&mut Bowl, &SearchSpec::default());
         let rl = QLearner::new(ConfigSpace::default(), RlParams::default());
         let rl_res = rl.run(&mut Bowl);
         assert!(

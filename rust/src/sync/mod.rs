@@ -1,15 +1,20 @@
 //! Model-synchronization schemes (§3.3, Fig 5).
 //!
-//! Two faces, like [`crate::storage`]:
+//! Three faces, like [`crate::storage`]:
 //! - [`timing`] — analytic per-iteration communication breakdowns for
 //!   SMLT's hierarchical ScatterReduce and the baselines' centralized
 //!   schemes (drives Figs 1/2/7/8).
+//! - [`policy`] — *when* an iteration closes: bulk-synchronous, k-of-n
+//!   semi-synchronous, or significance-filtered aggregation, plus the
+//!   straggler tail model those policies answer (drives Fig 18).
 //! - [`real`] — the actual hierarchical aggregation protocol over the
 //!   in-process [`crate::storage::ParamStore`], executed by real worker
 //!   threads in the e2e example (gradient bytes really move).
 
+pub mod policy;
 pub mod real;
 pub mod timing;
 
+pub use policy::{StragglerModel, SyncPolicy, STALE_CREDIT};
 pub use real::{aggregate_mean, HierarchicalSync};
 pub use timing::{comm_breakdown, CommBreakdown, Scheme, SyncEnv};

@@ -1,0 +1,405 @@
+//! Pluggable synchronization policies + the straggler model they answer.
+//!
+//! SMLT's published evaluation (§3.3, Fig 5) assumes strict bulk-
+//! synchronous parallelism with identical workers: every iteration ends
+//! when the *slowest* of `n` workers reports. Follow-on serverless-ML
+//! systems show that assumption leaves the two biggest cost levers on the
+//! table:
+//!
+//! - **MLLess** (arXiv 2206.05786) aggregates as soon as `k` of `n`
+//!   workers report (*semi-synchronous*) and lets workers skip uploading
+//!   updates whose magnitude is insignificant (*significance filtering*),
+//!   trading a bounded statistical-efficiency loss for large wall-clock
+//!   and storage-traffic savings.
+//! - **Demystifying Serverless ML Training** (arXiv 2105.07806) measures
+//!   heavy-tailed per-invocation stragglers on real FaaS — exactly the
+//!   regime where waiting for the max of `n` draws is expensive and the
+//!   k-th order statistic is cheap.
+//!
+//! [`SyncPolicy`] makes the aggregation rule a first-class, swappable
+//! value threaded through the iteration model, the job driver, and the
+//! Bayesian optimizer; [`StragglerModel`] supplies the per-worker tail
+//! multipliers (sampled from the sim RNG for bit-determinism, with
+//! analytic order-statistic expectations for the planner).
+//!
+//! Determinism contract: `SyncPolicy::Bulk` plus `StragglerModel::None`
+//! takes *exactly* the pre-policy code path — no extra RNG draws, no
+//! re-ordered floating-point arithmetic — so existing golden traces stay
+//! bit-identical (pinned by `rust/tests/sync_proptests.rs`).
+
+use crate::util::rng::Pcg;
+use crate::util::stats::norm_ppf;
+
+use super::timing::CommBreakdown;
+
+/// Credit a semi-synchronous aggregation gives a late (stale) update
+/// relative to a fresh one, for the accuracy proxy: stale gradients
+/// still contribute, just less (MLLess §4 observes bounded staleness
+/// keeps convergence close to synchronous).
+pub const STALE_CREDIT: f64 = 0.5;
+
+/// How an iteration's gradient exchange is closed out.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum SyncPolicy {
+    /// Strict BSP: wait for all `n` workers (the paper's model; default).
+    #[default]
+    Bulk,
+    /// Aggregate once `k` of `n` workers report; late workers' updates
+    /// are folded in next round at [`STALE_CREDIT`] (MLLess-style).
+    /// `k` is clamped to `[1, n]` at use sites, so `k >= n` ≡ `Bulk`.
+    SemiSync { k: u32 },
+    /// Workers skip uploads whose update magnitude falls below a
+    /// relevance threshold. `threshold` is the *asymptotic* skip
+    /// fraction in `[0, 1)`; `decay` controls how fast training
+    /// approaches it (early iterations have large updates, so the skip
+    /// rate ramps up as `threshold * (1 - exp(-decay * iter))`).
+    SignificanceFiltered { threshold: f64, decay: f64 },
+}
+
+impl SyncPolicy {
+    /// Order statistic the iteration waits for: `k` for semi-sync,
+    /// `n` (the max) otherwise.
+    pub fn effective_k(&self, n: u32) -> u32 {
+        match self {
+            SyncPolicy::SemiSync { k } => (*k).clamp(1, n.max(1)),
+            _ => n.max(1),
+        }
+    }
+
+    /// Asymptotic fraction of gradient *uploads* skipped by the filter.
+    pub fn skip_asymptote(&self) -> f64 {
+        match self {
+            SyncPolicy::SignificanceFiltered { threshold, .. } => threshold.clamp(0.0, 0.95),
+            _ => 0.0,
+        }
+    }
+
+    /// Skip fraction at iteration `i` (ramps toward the asymptote as
+    /// update magnitudes shrink).
+    pub fn skip_at(&self, iter: u64) -> f64 {
+        match self {
+            SyncPolicy::SignificanceFiltered { decay, .. } => {
+                self.skip_asymptote() * (1.0 - (-decay.max(0.0) * iter as f64).exp())
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Expected per-iteration communication time under this policy,
+    /// from a bulk [`CommBreakdown`]: download legs are unaffected, but
+    /// a filter skips `skip_asymptote()` of the upload legs.
+    ///
+    /// Returns exactly `b.total()` when no filter is active, preserving
+    /// the original summation order (bit-determinism).
+    pub fn filtered_comm_s(&self, b: &CommBreakdown) -> f64 {
+        let s = self.skip_asymptote();
+        if s == 0.0 {
+            b.total()
+        } else {
+            (b.dl_shard + b.dl_grad) + (b.ul_shard + b.ul_aggr + b.ul_grad) * (1.0 - s)
+        }
+    }
+
+    /// Ratio of iteration-`i` communication time to the asymptotic
+    /// (planner's) estimate, given the upload share `ul_frac` of total
+    /// comm time. Early iterations skip less than the asymptote, so the
+    /// ratio starts above 1 and decays to 1. Exactly `1.0` for
+    /// non-filtering policies and for `threshold: 0.0`.
+    pub fn filter_ratio(&self, ul_frac: f64, iter: u64) -> f64 {
+        let s_bar = self.skip_asymptote();
+        if s_bar == 0.0 {
+            1.0
+        } else {
+            let ul = ul_frac.clamp(0.0, 1.0);
+            (1.0 - self.skip_at(iter) * ul) / (1.0 - s_bar * ul)
+        }
+    }
+
+    /// Accuracy proxy: fraction of full-information gradient signal an
+    /// iteration contributes, in `(0, 1]`. Semi-sync folds the `n - k`
+    /// late updates in at [`STALE_CREDIT`]; filtering loses the skipped
+    /// uploads outright. Exactly `1.0` for `Bulk`, `SemiSync { k: n }`,
+    /// and `threshold: 0.0`.
+    pub fn yield_at(&self, n: u32, iter: u64) -> f64 {
+        let n = n.max(1);
+        match self {
+            SyncPolicy::Bulk => 1.0,
+            SyncPolicy::SemiSync { .. } => {
+                let k = self.effective_k(n);
+                (k as f64 + STALE_CREDIT * (n - k) as f64) / n as f64
+            }
+            SyncPolicy::SignificanceFiltered { .. } => 1.0 - self.skip_at(iter),
+        }
+    }
+
+    /// Asymptotic accuracy proxy, used by the planner (the per-iteration
+    /// [`Self::yield_at`] ramps toward this).
+    pub fn expected_yield(&self, n: u32) -> f64 {
+        match self {
+            SyncPolicy::SignificanceFiltered { .. } => 1.0 - self.skip_asymptote(),
+            _ => self.yield_at(n, 0),
+        }
+    }
+
+    /// Short label for tables and reports.
+    pub fn label(&self) -> String {
+        match self {
+            SyncPolicy::Bulk => "bulk".into(),
+            SyncPolicy::SemiSync { k } => format!("semi-k{k}"),
+            SyncPolicy::SignificanceFiltered { threshold, .. } => {
+                format!("filter-{threshold:.2}")
+            }
+        }
+    }
+
+    /// Candidate grid the driver's coordinate-descent step scores when a
+    /// job opts into policy co-optimization (`SimJob::sync_search`):
+    /// bulk, semi-sync at ~90/75/50 % of the fleet, and two filter
+    /// strengths. Deduplicated for small fleets.
+    pub fn candidates(n: u32) -> Vec<SyncPolicy> {
+        let n = n.max(1);
+        let frac = |f: f64| ((n as f64 * f).ceil() as u32).clamp(1, n);
+        let mut out = vec![SyncPolicy::Bulk];
+        for k in [frac(0.9), frac(0.75), frac(0.5)] {
+            let cand = SyncPolicy::SemiSync { k };
+            if k < n && !out.contains(&cand) {
+                out.push(cand);
+            }
+        }
+        out.push(SyncPolicy::SignificanceFiltered { threshold: 0.2, decay: 0.05 });
+        out.push(SyncPolicy::SignificanceFiltered { threshold: 0.4, decay: 0.05 });
+        out
+    }
+}
+
+/// Per-worker iteration-time tail multipliers, modeling FaaS stragglers
+/// (Demystifying Serverless ML Training, arXiv 2105.07806, measures both
+/// shapes on AWS Lambda). Multipliers are ≥ 1 by construction — a
+/// straggler can only be late — which is what makes semi-sync iteration
+/// time monotonically non-increasing in `k` under *any* draw.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum StragglerModel {
+    /// No stragglers: every worker runs at the modeled speed. Draws
+    /// nothing from the RNG (bit-determinism of existing traces).
+    #[default]
+    None,
+    /// Half-lognormal tail: multiplier `exp(sigma * |Z|)`, `Z ~ N(0,1)`.
+    /// Moderate tail; `sigma` ≈ 0.2–0.6 matches warm-ish fleets.
+    LogNormal { sigma: f64 },
+    /// Pareto tail: multiplier `(1 - U)^(-1/alpha)` on support `[1, ∞)`.
+    /// Heavy tail; `alpha` ≤ 2 gives the rare-but-huge stragglers the
+    /// measurement papers report on cold serverless fleets.
+    Pareto { alpha: f64 },
+}
+
+impl StragglerModel {
+    pub fn is_none(&self) -> bool {
+        matches!(self, StragglerModel::None)
+    }
+
+    /// Quantile function of the multiplier distribution (support [1, ∞)).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0 - 1e-12);
+        match self {
+            StragglerModel::None => 1.0,
+            // |Z| has CDF 2Φ(m)-1  =>  m = Φ⁻¹((1+q)/2)
+            StragglerModel::LogNormal { sigma } => {
+                (sigma.max(0.0) * norm_ppf((1.0 + q) / 2.0)).exp()
+            }
+            StragglerModel::Pareto { alpha } => (1.0 - q).powf(-1.0 / alpha.max(1e-6)),
+        }
+    }
+
+    /// Expected k-th order statistic of `n` i.i.d. multipliers, via the
+    /// Blom plotting-position approximation `F⁻¹((k - 0.375)/(n + 0.25))`
+    /// — smooth and deterministic, which is what the planner's analytic
+    /// [`IterModel`](crate::coordinator::simrun::IterModel) needs.
+    /// Exactly `1.0` for `None`.
+    pub fn expected_kth(&self, k: u32, n: u32) -> f64 {
+        if self.is_none() {
+            return 1.0;
+        }
+        let n = n.max(1);
+        let k = k.clamp(1, n);
+        self.quantile((k as f64 - 0.375) / (n as f64 + 0.25))
+    }
+
+    /// Expected *billed* multiplier per worker when aggregating at the
+    /// k-th arrival: the first `k` workers idle until the k-th finishes
+    /// (billed the k-th order statistic), the rest run — and are billed
+    /// — to their own completion. `(Σ_j max(q_j, q_k)) / n` in Blom
+    /// positions. Equals `expected_kth(n, n)` at `k = n` (bulk) and is
+    /// strictly below it for `k < n` under a real tail.
+    pub fn billed_factor(&self, k: u32, n: u32) -> f64 {
+        if self.is_none() {
+            return 1.0;
+        }
+        let n = n.max(1);
+        let k = k.clamp(1, n);
+        let qk = self.expected_kth(k, n);
+        let mut sum = qk * k as f64;
+        for j in (k + 1)..=n {
+            sum += self.expected_kth(j, n);
+        }
+        sum / n as f64
+    }
+
+    /// Sample `n` i.i.d. multipliers (ascending order NOT guaranteed).
+    pub fn sample_multipliers(&self, rng: &mut Pcg, n: u32) -> Vec<f64> {
+        (0..n)
+            .map(|_| match self {
+                StragglerModel::None => 1.0,
+                StragglerModel::LogNormal { sigma } => {
+                    (sigma.max(0.0) * rng.normal().abs()).exp()
+                }
+                StragglerModel::Pareto { alpha } => {
+                    (1.0 - rng.next_f64()).powf(-1.0 / alpha.max(1e-6))
+                }
+            })
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            StragglerModel::None => "none".into(),
+            StragglerModel::LogNormal { sigma } => format!("lognorm-{sigma:.1}"),
+            StragglerModel::Pareto { alpha } => format!("pareto-{alpha:.1}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::timing::{comm_breakdown, Scheme, SyncEnv};
+
+    #[test]
+    fn bulk_is_the_default_and_waits_for_everyone() {
+        assert_eq!(SyncPolicy::default(), SyncPolicy::Bulk);
+        assert_eq!(SyncPolicy::Bulk.effective_k(32), 32);
+        assert_eq!(SyncPolicy::Bulk.skip_asymptote(), 0.0);
+        assert_eq!(SyncPolicy::Bulk.yield_at(32, 100), 1.0);
+    }
+
+    #[test]
+    fn semisync_k_clamps_and_full_k_is_bulk() {
+        let p = SyncPolicy::SemiSync { k: 100 };
+        assert_eq!(p.effective_k(32), 32);
+        assert_eq!(p.yield_at(32, 0), 1.0); // k >= n: nobody is stale
+        let p = SyncPolicy::SemiSync { k: 0 };
+        assert_eq!(p.effective_k(32), 1);
+    }
+
+    #[test]
+    fn semisync_yield_interpolates_with_stale_credit() {
+        let p = SyncPolicy::SemiSync { k: 16 };
+        // 16 fresh + 16 stale at half credit = 24/32
+        assert!((p.yield_at(32, 0) - 0.75).abs() < 1e-12);
+        assert!((p.expected_yield(32) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn filter_ramps_to_asymptote_and_zero_threshold_is_off() {
+        let p = SyncPolicy::SignificanceFiltered { threshold: 0.3, decay: 0.1 };
+        assert_eq!(p.skip_at(0), 0.0);
+        assert!(p.skip_at(10) > 0.0 && p.skip_at(10) < 0.3);
+        assert!((p.skip_at(1000) - 0.3).abs() < 1e-9);
+        assert!((p.expected_yield(8) - 0.7).abs() < 1e-12);
+        let off = SyncPolicy::SignificanceFiltered { threshold: 0.0, decay: 0.1 };
+        assert_eq!(off.skip_asymptote(), 0.0);
+        assert_eq!(off.filter_ratio(0.6, 5), 1.0);
+    }
+
+    #[test]
+    fn filtered_comm_skips_only_uploads_and_no_filter_is_bitwise_total() {
+        let e = SyncEnv::standard(75e6);
+        let b = comm_breakdown(Scheme::SmltHierarchical, &e, 264_000_000, 16, 0);
+        let bulk = SyncPolicy::Bulk.filtered_comm_s(&b);
+        assert_eq!(bulk.to_bits(), b.total().to_bits());
+        let filt =
+            SyncPolicy::SignificanceFiltered { threshold: 0.4, decay: 0.1 }.filtered_comm_s(&b);
+        assert!(filt < bulk);
+        // downloads survive in full
+        assert!(filt > b.dl_shard + b.dl_grad);
+    }
+
+    #[test]
+    fn filter_ratio_starts_high_and_decays_to_one() {
+        let p = SyncPolicy::SignificanceFiltered { threshold: 0.4, decay: 0.05 };
+        let r0 = p.filter_ratio(0.5, 0);
+        let r100 = p.filter_ratio(0.5, 100);
+        let r_inf = p.filter_ratio(0.5, 100_000);
+        assert!(r0 > r100 && r100 > r_inf);
+        assert!((r_inf - 1.0).abs() < 1e-6);
+        // iteration 0 skips nothing: pays full comm relative to the
+        // asymptotic estimate
+        assert!((r0 - 1.0 / (1.0 - 0.4 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_quantiles_are_one_plus_tails() {
+        for m in [
+            StragglerModel::LogNormal { sigma: 0.4 },
+            StragglerModel::Pareto { alpha: 1.5 },
+        ] {
+            assert!((m.quantile(0.0) - 1.0).abs() < 1e-9, "{m:?}");
+            assert!(m.quantile(0.5) >= 1.0);
+            assert!(m.quantile(0.99) > m.quantile(0.5), "{m:?}");
+        }
+        assert_eq!(StragglerModel::None.quantile(0.99), 1.0);
+    }
+
+    #[test]
+    fn expected_kth_is_monotone_in_k_and_none_is_identity() {
+        let m = StragglerModel::Pareto { alpha: 1.5 };
+        let n = 32;
+        let mut prev = 0.0;
+        for k in 1..=n {
+            let e = m.expected_kth(k, n);
+            assert!(e >= prev, "k={k}: {e} < {prev}");
+            prev = e;
+        }
+        assert!(m.expected_kth(n, n) > m.expected_kth(n / 2, n) * 1.2);
+        assert_eq!(StragglerModel::None.expected_kth(7, 32), 1.0);
+    }
+
+    #[test]
+    fn billed_factor_below_wall_max_for_partial_k() {
+        for m in [
+            StragglerModel::LogNormal { sigma: 0.6 },
+            StragglerModel::Pareto { alpha: 1.2 },
+        ] {
+            let n = 32;
+            let bulk_wall = m.expected_kth(n, n);
+            let semi_billed = m.billed_factor(24, n);
+            assert!(
+                semi_billed < bulk_wall,
+                "{m:?}: billed {semi_billed} !< bulk wall {bulk_wall}"
+            );
+            // ...but never below the k-th wall factor itself
+            assert!(semi_billed >= m.expected_kth(24, n));
+            assert_eq!(m.billed_factor(n, n), bulk_wall);
+        }
+    }
+
+    #[test]
+    fn sampled_multipliers_match_support_and_determinism() {
+        let m = StragglerModel::LogNormal { sigma: 0.4 };
+        let a = m.sample_multipliers(&mut Pcg::new(9), 64);
+        let b = m.sample_multipliers(&mut Pcg::new(9), 64);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| x >= 1.0));
+        assert!(StragglerModel::None.sample_multipliers(&mut Pcg::new(1), 4) == vec![1.0; 4]);
+    }
+
+    #[test]
+    fn candidate_grid_contains_bulk_and_dedupes_small_fleets() {
+        let c = SyncPolicy::candidates(32);
+        assert_eq!(c[0], SyncPolicy::Bulk);
+        assert!(c.iter().any(|p| matches!(p, SyncPolicy::SemiSync { .. })));
+        assert!(c.iter().any(|p| matches!(p, SyncPolicy::SignificanceFiltered { .. })));
+        // n = 1: every semi-sync k collapses to bulk and is dropped
+        let c1 = SyncPolicy::candidates(1);
+        assert!(!c1.iter().any(|p| matches!(p, SyncPolicy::SemiSync { .. })));
+    }
+}

@@ -70,6 +70,65 @@ pub fn norm_cdf(x: f64) -> f64 {
     0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
 }
 
+/// Standard normal quantile (inverse CDF) via Acklam's rational
+/// approximation; |relative err| < 1.15e-9 over (0, 1). Used by the
+/// straggler model's order-statistic quantiles.
+pub fn norm_ppf(p: f64) -> f64 {
+    if !(0.0..=1.0).contains(&p) {
+        return f64::NAN;
+    }
+    if p == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p == 1.0 {
+        return f64::INFINITY;
+    }
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
 /// erf via A&S 7.1.26; |err| < 1.5e-7, plenty for EI acquisition.
 pub fn erf(x: f64) -> f64 {
     let sign = if x < 0.0 { -1.0 } else { 1.0 };
@@ -115,6 +174,19 @@ mod tests {
     fn pdf_peak() {
         assert!((norm_pdf(0.0) - 0.3989422804).abs() < 1e-8);
         assert!(norm_pdf(3.0) < norm_pdf(0.0));
+    }
+
+    #[test]
+    fn ppf_inverts_cdf() {
+        for p in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.975, 0.99] {
+            let x = norm_ppf(p);
+            assert!((norm_cdf(x) - p).abs() < 1e-6, "p={p} x={x}");
+        }
+        assert!((norm_ppf(0.5)).abs() < 1e-9);
+        assert!((norm_ppf(0.975) - 1.959964).abs() < 1e-5);
+        assert!(norm_ppf(0.0) == f64::NEG_INFINITY);
+        assert!(norm_ppf(1.0) == f64::INFINITY);
+        assert!(norm_ppf(-0.1).is_nan());
     }
 
     #[test]

@@ -89,6 +89,14 @@ pub struct WarmState {
     /// $ spent spawning prewarmed containers (accepted spawns only —
     /// cap-rejected prewarm requests never start a container)
     pub spawn_cost: f64,
+    /// containers checked in late by straggling workers still running at
+    /// fleet retirement: `(image, mem_mb, n, ready_s)`; invisible to
+    /// checkouts until `ready_s`
+    pending: Vec<(ImageId, u32, u32, f64)>,
+    /// containers that ever entered the pending queue (straggler pins)
+    straggler_pins: u64,
+    /// Σ container-seconds spent pinned past fleet retirement
+    straggler_pinned_s: f64,
 }
 
 impl WarmState {
@@ -100,6 +108,9 @@ impl WarmState {
             bank: None,
             pricing: Pricing::default(),
             spawn_cost: 0.0,
+            pending: Vec::new(),
+            straggler_pins: 0,
+            straggler_pinned_s: 0.0,
         }
     }
 
@@ -109,6 +120,9 @@ impl WarmState {
             bank: params.bank.clone().map(PosteriorBank::new),
             pricing: Pricing::default(),
             spawn_cost: 0.0,
+            pending: Vec::new(),
+            straggler_pins: 0,
+            straggler_pinned_s: 0.0,
         }
     }
 
@@ -136,6 +150,7 @@ impl WarmState {
     /// memory only matters under [`PoolConfig::match_memory`] (exact
     /// Lambda semantics) — the default pool matches by image alone.
     pub fn checkout(&mut self, image: ImageId, mem_mb: u32, want: u32, now: f64) -> u32 {
+        self.flush_pending(now);
         match self.pool.as_mut() {
             Some(p) if want > 0 => p.checkout(image, mem_mb, want, now),
             _ => 0,
@@ -144,9 +159,49 @@ impl WarmState {
 
     /// Park `n` retiring containers of `image`; no-op when disabled.
     pub fn checkin(&mut self, image: ImageId, mem_mb: u32, n: u32, now: f64) {
+        self.flush_pending(now);
         if let Some(p) = self.pool.as_mut() {
             if n > 0 {
                 p.checkin(image, mem_mb, n, now);
+            }
+        }
+    }
+
+    /// Park `n` containers whose workers are *still running* at fleet
+    /// retirement (semi-sync stragglers past the aggregation point): they
+    /// enter the pool only at `ready_s`, and until then are invisible to
+    /// checkouts — the straggler pinning that shrinks the checkout-able
+    /// pool. No-op when the pool is disabled.
+    pub fn checkin_late(&mut self, image: ImageId, mem_mb: u32, n: u32, now: f64, ready_s: f64) {
+        if self.pool.is_none() || n == 0 {
+            return;
+        }
+        let ready = ready_s.max(now);
+        self.straggler_pins += n as u64;
+        self.straggler_pinned_s += n as f64 * (ready - now);
+        self.pending.push((image, mem_mb, n, ready));
+        // a zero-lag late check-in degenerates to a plain one
+        self.flush_pending(now);
+    }
+
+    /// Move pending late check-ins whose stragglers have finished by
+    /// `now` into the pool (at their actual finish time).
+    fn flush_pending(&mut self, now: f64) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let Some(p) = self.pool.as_mut() else {
+            self.pending.clear();
+            return;
+        };
+        let mut i = 0;
+        while i < self.pending.len() {
+            let (image, mem_mb, n, ready) = self.pending[i];
+            if ready <= now {
+                p.checkin(image, mem_mb, n, ready);
+                self.pending.remove(i);
+            } else {
+                i += 1;
             }
         }
     }
@@ -158,6 +213,7 @@ impl WarmState {
     /// forecast larger than the pool does not re-attempt (and re-reject)
     /// the impossible remainder on every tick.
     pub fn prewarm_to(&mut self, image: ImageId, mem_mb: u32, desired: u32, now: f64, cold_median_s: f64) {
+        self.flush_pending(now);
         let Some(p) = self.pool.as_mut() else { return };
         p.evict_expired(now);
         // count only containers that could actually serve the target:
@@ -226,9 +282,16 @@ impl WarmState {
     }
 
     /// Bill containers still parked at end of run (see [`WarmPool::drain`]).
+    /// Stragglers still pinned past `now` check in at their finish time
+    /// first, so conservation (`checkins == hits + evictions`) holds.
     pub fn finalize(&mut self, now: f64) {
+        let mut end = now;
+        for &(_, _, _, ready) in &self.pending {
+            end = end.max(ready);
+        }
+        self.flush_pending(end);
         if let Some(p) = self.pool.as_mut() {
-            p.drain(now);
+            p.drain(end);
         }
     }
 
@@ -262,6 +325,8 @@ impl WarmState {
             spawn_cost: self.spawn_cost,
             bank_deposits: self.bank.as_ref().map_or(0, |b| b.deposits),
             bank_prior_served: self.bank.as_ref().map_or(0, |b| b.prior_served),
+            straggler_pins: self.straggler_pins,
+            straggler_pinned_s: self.straggler_pinned_s,
         }
     }
 }
@@ -298,6 +363,12 @@ pub struct WarmReport {
     pub bank_deposits: u64,
     /// banked observations served as GP priors
     pub bank_prior_served: u64,
+    /// containers held past fleet retirement by straggling workers
+    /// (late check-ins; subset of `checkins` once they land)
+    pub straggler_pins: u64,
+    /// Σ container-seconds those stragglers kept their containers out of
+    /// the checkout-able pool
+    pub straggler_pinned_s: f64,
 }
 
 impl WarmReport {
@@ -376,6 +447,55 @@ mod tests {
         assert_eq!(w.checkout(1, 3072, 8, 2.0), 8, "the burst launches warm");
         // and the 1024 MB containers still serve their own size
         assert_eq!(w.checkout(1, 1024, 10, 3.0), 10);
+    }
+
+    #[test]
+    fn late_checkin_pins_containers_until_ready() {
+        let mut w = WarmState::new(&WarmParams::enabled());
+        // 8 on-time + 4 straggler-pinned until t=30
+        w.checkin(1, 1024, 8, 10.0);
+        w.checkin_late(1, 1024, 4, 10.0, 30.0);
+        // before the stragglers finish only the on-time 8 are servable
+        assert_eq!(w.checkout(1, 1024, 12, 15.0), 8);
+        w.checkin(1, 1024, 8, 16.0);
+        // after ready_s the pinned containers serve too
+        assert_eq!(w.checkout(1, 1024, 12, 31.0), 12);
+        let r = w.report();
+        assert_eq!(r.straggler_pins, 4);
+        assert!((r.straggler_pinned_s - 4.0 * 20.0).abs() < 1e-9);
+        assert_eq!(r.hits, 8 + 12);
+    }
+
+    #[test]
+    fn finalize_lands_pending_stragglers_so_conservation_holds() {
+        let mut w = WarmState::new(&WarmParams::enabled());
+        w.checkin(1, 1024, 2, 0.0);
+        // stragglers outlive the run: ready long after the last event
+        w.checkin_late(1, 1024, 3, 5.0, 500.0);
+        w.finalize(10.0);
+        let r = w.report();
+        assert_eq!(r.checkins, 5, "pending stragglers landed at finalize");
+        assert!(r.conserves(), "{r:?}");
+    }
+
+    #[test]
+    fn late_checkin_is_a_noop_when_disabled() {
+        let mut w = WarmState::disabled();
+        w.checkin_late(1, 1024, 4, 0.0, 10.0);
+        let r = w.report();
+        assert_eq!(r.straggler_pins, 0);
+        assert_eq!(r.straggler_pinned_s, 0.0);
+        assert_eq!(w.checkout(1, 1024, 4, 20.0), 0);
+    }
+
+    #[test]
+    fn zero_lag_late_checkin_degenerates_to_plain() {
+        let mut w = WarmState::new(&WarmParams::enabled());
+        w.checkin_late(1, 1024, 4, 5.0, 5.0);
+        assert_eq!(w.checkout(1, 1024, 4, 5.0), 4, "immediately servable");
+        let r = w.report();
+        assert_eq!(r.straggler_pins, 4);
+        assert_eq!(r.straggler_pinned_s, 0.0);
     }
 
     #[test]

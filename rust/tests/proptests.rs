@@ -6,7 +6,7 @@ mod common;
 use common::cases;
 use smlt::costmodel::{CostLedger, Pricing};
 use smlt::faas::{FaasPlatform, InvokeMode};
-use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective};
+use smlt::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective, SearchSpec};
 use smlt::scheduler::{CheckpointStore, TaskScheduler};
 use smlt::storage::{ParamStore, StoreModel};
 use smlt::sync::{aggregate_mean, comm_breakdown, Scheme, SyncEnv};
@@ -164,7 +164,7 @@ fn prop_bo_best_value_never_worse_than_warmup_min() {
             ConfigSpace::default(),
             BoParams { seed: rng.next_u64(), ..Default::default() },
         );
-        let res = bo.run(&mut obj);
+        let res = bo.search(&mut obj, &SearchSpec::default());
         // best == min over trace, and trace values are all >= best
         let trace_min = res
             .trace

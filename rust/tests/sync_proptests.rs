@@ -1,0 +1,170 @@
+//! Property tests for the sync-policy layer (ISSUE's four determinism /
+//! monotonicity contracts), exercised through the *public* API — fleets
+//! run through [`ClusterSim`], policy math through [`SyncPolicy`] /
+//! [`StragglerModel`] directly.
+
+mod common;
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::cluster::{ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
+use smlt::coordinator::{SimJob, Workloads};
+use smlt::perfmodel::ModelProfile;
+use smlt::sync::{StragglerModel, SyncPolicy};
+use smlt::util::rng::Pcg;
+
+fn job(system: SystemKind, sync: SyncPolicy) -> SimJob {
+    let mut j = SimJob::new(
+        system,
+        Workloads::static_run(ModelProfile::resnet18(), 10, 128),
+    );
+    j.seed = 41;
+    j.sync = sync;
+    j
+}
+
+fn run_solo(j: SimJob, straggler: StragglerModel) -> FleetOutcome {
+    let mut sim = ClusterSim::new(ClusterParams {
+        straggler,
+        ..Default::default()
+    });
+    sim.submit(j, 0.0, TenantQuota::unlimited());
+    sim.run()
+}
+
+fn assert_bitwise_equal(a: &FleetOutcome, b: &FleetOutcome, what: &str) {
+    let (a, b) = (&a.jobs[0].outcome, &b.jobs[0].outcome);
+    assert_eq!(
+        a.total_time_s.to_bits(),
+        b.total_time_s.to_bits(),
+        "{what}: total_time_s diverged ({} vs {})",
+        a.total_time_s,
+        b.total_time_s
+    );
+    assert_eq!(
+        a.total_cost().to_bits(),
+        b.total_cost().to_bits(),
+        "{what}: total_cost diverged"
+    );
+    assert_eq!(a.config_trace, b.config_trace, "{what}: config trace diverged");
+    assert_eq!(a.iters_done, b.iters_done, "{what}: iteration count diverged");
+}
+
+#[test]
+fn prop_explicit_bulk_and_disabled_stragglers_match_the_defaults() {
+    for system in [SystemKind::Smlt, SystemKind::LambdaMl, SystemKind::Siren] {
+        let default_run = run_solo(
+            SimJob::new(
+                system,
+                Workloads::static_run(ModelProfile::resnet18(), 10, 128),
+            ),
+            StragglerModel::None,
+        );
+        let mut explicit = job(system, SyncPolicy::Bulk);
+        explicit.seed = 17; // SimJob::new's default
+        explicit.sync_search = false;
+        let explicit_run = run_solo(explicit, StragglerModel::None);
+        assert_bitwise_equal(&default_run, &explicit_run, &format!("{system:?}"));
+    }
+}
+
+#[test]
+fn prop_full_k_semisync_is_bulk_bitwise_even_under_stragglers() {
+    cases(6, |rng| {
+        let strag = match rng.below(3) {
+            0 => StragglerModel::None,
+            1 => StragglerModel::LogNormal { sigma: 0.2 + rng.next_f64() },
+            _ => StragglerModel::Pareto { alpha: 1.1 + 2.0 * rng.next_f64() },
+        };
+        let bulk = run_solo(job(SystemKind::LambdaMl, SyncPolicy::Bulk), strag);
+        // k saturates at the worker count, so any k >= n is exactly bulk
+        let k = 32 + rng.below(1000) as u32;
+        let semi = run_solo(job(SystemKind::LambdaMl, SyncPolicy::SemiSync { k }), strag);
+        assert_bitwise_equal(&bulk, &semi, &format!("k={k} under {strag:?}"));
+    });
+}
+
+#[test]
+fn prop_zero_threshold_filter_is_bulk_bitwise() {
+    cases(6, |rng| {
+        let decay = rng.next_f64();
+        let strag = if rng.below(2) == 0 {
+            StragglerModel::None
+        } else {
+            StragglerModel::LogNormal { sigma: 0.5 }
+        };
+        let bulk = run_solo(job(SystemKind::LambdaMl, SyncPolicy::Bulk), strag);
+        let filtered = run_solo(
+            job(
+                SystemKind::LambdaMl,
+                SyncPolicy::SignificanceFiltered { threshold: 0.0, decay },
+            ),
+            strag,
+        );
+        assert_bitwise_equal(&bulk, &filtered, &format!("threshold=0 decay={decay}"));
+    });
+}
+
+#[test]
+fn prop_expected_iteration_time_monotone_nondecreasing_in_k() {
+    // waiting for more arrivals can never speed an iteration up: the
+    // k-th order statistic grows with k for any tail shape
+    cases(20, |rng| {
+        let n = 2 + rng.below(127) as u32;
+        let strag = if rng.below(2) == 0 {
+            StragglerModel::LogNormal { sigma: 0.1 + rng.next_f64() }
+        } else {
+            StragglerModel::Pareto { alpha: 1.05 + 3.0 * rng.next_f64() }
+        };
+        let mut prev = 0.0;
+        for k in 1..=n {
+            let e = strag.expected_kth(k, n);
+            assert!(
+                e >= prev,
+                "E[{k}:{n}] = {e} < E[{}:{n}] = {prev} under {strag:?}",
+                k - 1
+            );
+            prev = e;
+        }
+    });
+}
+
+#[test]
+fn prop_kth_smallest_of_shared_draws_monotone_in_k() {
+    // the same property under ANY realized draw, not just in expectation:
+    // on a shared sample, closing at a later arrival waits at least as long
+    cases(20, |rng| {
+        let n = 2 + rng.below(127) as u32;
+        let strag = if rng.below(2) == 0 {
+            StragglerModel::LogNormal { sigma: 0.1 + rng.next_f64() }
+        } else {
+            StragglerModel::Pareto { alpha: 1.05 + 3.0 * rng.next_f64() }
+        };
+        let mut draws = strag.sample_multipliers(&mut Pcg::new(rng.next_u64()), n);
+        draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in &draws {
+            assert!(*w >= 1.0, "multipliers are slowdowns, never speedups: {w}");
+        }
+        for k in 1..n as usize {
+            assert!(draws[k - 1] <= draws[k]);
+        }
+    });
+}
+
+#[test]
+fn prop_semisync_realized_time_nondecreasing_in_k_on_one_platform_seed() {
+    // end-to-end: same fleet seed, same job, k sweeping up — the realized
+    // completion time must never shrink as the barrier waits for more
+    // workers (32 is the fixed LambdaML worker count, i.e. bulk)
+    let strag = StragglerModel::Pareto { alpha: 1.4 };
+    let mut prev = 0.0;
+    for k in [8u32, 16, 24, 32] {
+        let out = run_solo(job(SystemKind::LambdaMl, SyncPolicy::SemiSync { k }), strag);
+        let t = out.jobs[0].outcome.total_time_s;
+        assert!(
+            t >= prev,
+            "k={k}: waiting for more workers cannot be faster ({t} < {prev})"
+        );
+        prev = t;
+    }
+}

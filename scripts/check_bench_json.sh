@@ -1,45 +1,96 @@
 #!/usr/bin/env bash
-# Sanity check for the fig14 kernel-scalability artifact: the emitted
-# bench_out/BENCH_fig14_multitenant.json must parse and carry a positive
-# `events_per_s` field (top level and per scale record). Pure shell +
-# grep — no dependencies, mirroring the crate's offline-registry
-# constraint — with the real structural validation delegated to the
-# bench binary's own `--check-json` mode (which uses util::json::parse)
-# when a built binary is available.
+# Sanity check for bench JSON artifacts (bench_out/BENCH_*.json, emitted
+# by benches/common::BenchReport). Pure shell + grep — no dependencies,
+# mirroring the crate's offline-registry constraint — with the real
+# structural validation (util::json::parse + BenchReport::validate)
+# delegated to the fig14 bench binary's `--check-json` mode when a built
+# binary is available.
 #
-# Usage: scripts/check_bench_json.sh [path]   (from the repository root)
+# Every artifact must carry the shared schema: a non-empty "name", a
+# "meta" object, and a non-empty "series" list with "points". The fig14
+# artifact additionally must report a positive `events_per_s`.
+#
+# Usage (from the repository root):
+#   scripts/check_bench_json.sh           # validate every bench_out/BENCH_*.json
+#   scripts/check_bench_json.sh <path>    # validate one artifact
 set -u
 
-json="${1:-bench_out/BENCH_fig14_multitenant.json}"
 fail=0
 
-if [ ! -f "$json" ]; then
-  echo "MISSING: $json (run: cargo bench --bench fig14_multitenant)"
-  echo "bench json check FAILED"
-  exit 1
-fi
-
-# structural validation via the crate's own JSON parser, if the bench
-# binary has been built (cargo bench / cargo build --benches)
-bin=$(ls target/release/deps/fig14_multitenant-* 2>/dev/null \
-  | grep -v '\.d$' | head -n 1)
-if [ -n "${bin:-}" ] && [ -x "$bin" ]; then
-  if ! "$bin" --check-json "$json"; then
+check_schema() {
+  # grep-level structural checks shared by every artifact
+  local json="$1"
+  if ! grep -q '"name"' "$json"; then
+    echo "FAILED: $json has no name field"
     fail=1
   fi
-else
-  echo "note: bench binary not built; falling back to grep-level checks"
-fi
+  if ! grep -q '"meta"' "$json"; then
+    echo "FAILED: $json has no meta object"
+    fail=1
+  fi
+  if ! grep -q '"series"' "$json"; then
+    echo "FAILED: $json has no series list"
+    fail=1
+  fi
+  if ! grep -q '"points"' "$json"; then
+    echo "FAILED: $json has no points"
+    fail=1
+  fi
+}
 
-# grep-level checks hold either way: the headline field must exist and
-# must not be zero/negative
-if ! grep -q '"events_per_s"' "$json"; then
-  echo "FAILED: $json has no events_per_s field"
-  fail=1
-fi
-if grep -Eq '"events_per_s": *(-|0(\.0*)?[,[:space:]])' "$json"; then
-  echo "FAILED: $json reports a non-positive events_per_s"
-  fail=1
+check_fig14() {
+  # the kernel-scalability headline must exist and be positive
+  local json="$1"
+  if ! grep -q '"events_per_s"' "$json"; then
+    echo "FAILED: $json has no events_per_s field"
+    fail=1
+  fi
+  if grep -Eq '"events_per_s": *(-|0(\.0*)?[,[:space:]])' "$json"; then
+    echo "FAILED: $json reports a non-positive events_per_s"
+    fail=1
+  fi
+}
+
+check_one() {
+  local json="$1"
+  if [ ! -f "$json" ]; then
+    echo "MISSING: $json (run the matching cargo bench)"
+    fail=1
+    return
+  fi
+  # structural validation via the crate's own JSON parser, if the bench
+  # binary has been built (cargo bench / cargo build --benches); the
+  # --check-json mode validates the shared BenchReport schema, so it
+  # accepts any artifact, with extra fig14 checks on the fig14 one
+  local bin
+  bin=$(ls target/release/deps/fig14_multitenant-* 2>/dev/null \
+    | grep -v '\.d$' | head -n 1)
+  if [ -n "${bin:-}" ] && [ -x "$bin" ]; then
+    if ! "$bin" --check-json "$json"; then
+      fail=1
+    fi
+  else
+    echo "note: bench binary not built; falling back to grep-level checks"
+  fi
+  check_schema "$json"
+  case "$json" in
+    *fig14_multitenant*) check_fig14 "$json" ;;
+  esac
+}
+
+if [ "$#" -ge 1 ]; then
+  check_one "$1"
+else
+  found=0
+  for json in bench_out/BENCH_*.json; do
+    [ -e "$json" ] || continue
+    found=1
+    check_one "$json"
+  done
+  if [ "$found" -eq 0 ]; then
+    echo "MISSING: no bench_out/BENCH_*.json artifacts (run: cargo bench)"
+    fail=1
+  fi
 fi
 
 if [ "$fail" -ne 0 ]; then
