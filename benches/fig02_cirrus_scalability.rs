@@ -33,6 +33,7 @@ fn main() {
                 cal: &cal,
                 pricing: &pricing,
                 sync: Default::default(),
+                pipeline: Default::default(),
             };
             let (comp, comm) = model.iter_time(Config { workers: w, mem_mb: mem });
             let env = SyncEnv::standard(platform.net_bw_bps(mem));

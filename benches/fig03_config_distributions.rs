@@ -53,6 +53,7 @@ fn main() {
                     cal: &cal,
                     pricing: &pricing,
                     sync: Default::default(),
+                    pipeline: Default::default(),
                 };
                 let c = Config { workers: w, mem_mb: mem };
                 let (comp, comm) = m.iter_time(c);

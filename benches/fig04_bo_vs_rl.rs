@@ -52,6 +52,7 @@ fn main() {
                     cal: &cal,
                     pricing: &pricing,
                     sync: Default::default(),
+                    pipeline: Default::default(),
                 },
             };
             // ground truth via a coarse grid

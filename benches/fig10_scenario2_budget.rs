@@ -20,6 +20,10 @@ fn main() {
     );
     let phases = Workloads::static_run(ModelProfile::bert_medium(), iters, 256);
 
+    let mut bench = common::BenchReport::new("fig10_scenario2_budget");
+    bench.meta_num("budget_usd", budget);
+    bench.meta_num("iters", iters as f64);
+
     let mut t = Table::new(
         "budget scenario",
         &["system", "total s", "profiling $", "total $", "within budget"],
@@ -37,6 +41,16 @@ fn main() {
         } else if out.total_cost() <= budget {
             baseline_best = baseline_best.min(out.total_time_s);
         }
+        bench.push(
+            "systems",
+            &[
+                ("system", common::jstr(sys.name())),
+                ("total_s", common::jnum(out.total_time_s)),
+                ("profiling_cost", common::jnum(out.profiling_cost())),
+                ("total_cost", common::jnum(out.total_cost())),
+                ("within_budget", common::jnum(f64::from(u8::from(out.total_cost() <= budget)))),
+            ],
+        );
         t.row(&[
             sys.name().to_string(),
             format!("{:.0}", out.total_time_s),
@@ -47,6 +61,7 @@ fn main() {
     }
     t.print();
     t.write_csv(format!("{}/fig10_scenario2.csv", common::OUT_DIR)).unwrap();
+    println!("-> wrote {}", bench.write());
     if baseline_best.is_finite() {
         println!(
             "-> SMLT is {:.1}x faster than the best budget-respecting baseline.",

@@ -14,6 +14,8 @@ fn main() {
     common::banner("Figure 11", "cost comparison (profiling + training), ResNet-50");
     let systems = [SystemKind::Smlt, SystemKind::Mlcd, SystemKind::LambdaMl, SystemKind::Iaas];
 
+    let mut bench = common::BenchReport::new("fig11_cost_comparison");
+
     // (a) dynamic batching
     let phases = Workloads::fig12_schedule(ModelProfile::resnet50());
     let mut t = Table::new(
@@ -24,6 +26,15 @@ fn main() {
         let out = simulate(&SimJob::new(sys, phases.clone()));
         let total = out.total_cost();
         let prof = out.profiling_cost();
+        bench.push(
+            "dynamic_batching",
+            &[
+                ("system", common::jstr(sys.name())),
+                ("profiling_cost", common::jnum(prof)),
+                ("training_cost", common::jnum(total - prof)),
+                ("total_cost", common::jnum(total)),
+            ],
+        );
         t.row(&[
             sys.name().to_string(),
             format!("{prof:.2}"),
@@ -48,6 +59,14 @@ fn main() {
             SystemKind::LambdaMl => "pay-per-use, fixed alloc",
             _ => "pay-per-use + adaptation",
         };
+        bench.push(
+            "online_24h",
+            &[
+                ("system", common::jstr(sys.name())),
+                ("total_cost", common::jnum(out.total_cost())),
+                ("notes", common::jstr(note)),
+            ],
+        );
         t.row(&[
             sys.name().to_string(),
             format!("{:.2}", out.total_cost()),
@@ -56,5 +75,6 @@ fn main() {
     }
     t.print();
     t.write_csv(format!("{}/fig11b_online.csv", common::OUT_DIR)).unwrap();
+    println!("-> wrote {}", bench.write());
     println!("-> serverless systems avoid idle-resource cost; SMLT's cheap\n   serverless profiling beats MLCD's VM-based profiling (paper §5.4).");
 }

@@ -16,6 +16,8 @@ fn main() {
     let smlt = simulate(&SimJob::new(SystemKind::Smlt, phases.clone()));
     let lml = simulate(&SimJob::new(SystemKind::LambdaMl, phases));
 
+    let mut bench = common::BenchReport::new("fig12_dynamic_batching");
+
     let mut t = Table::new(
         "(a/b/c) traces over virtual time",
         &["t_s", "batch", "SMLT workers", "LML workers", "SMLT samples/s", "LML samples/s"],
@@ -24,6 +26,17 @@ fn main() {
     for i in (0..n).step_by(24) {
         let r = &smlt.metrics.records[i];
         let li = i.min(lml.metrics.records.len() - 1);
+        bench.push(
+            "trace",
+            &[
+                ("t_s", common::jnum(r.t_start)),
+                ("batch", common::jnum(f64::from(r.batch_global))),
+                ("smlt_workers", common::jnum(f64::from(r.workers))),
+                ("lml_workers", common::jnum(f64::from(lml.metrics.records[li].workers))),
+                ("smlt_samples_per_s", common::jnum(smlt.metrics.throughput_at(i, 20))),
+                ("lml_samples_per_s", common::jnum(lml.metrics.throughput_at(li, 20))),
+            ],
+        );
         t.row(&[
             format!("{:.0}", r.t_start),
             r.batch_global.to_string(),
@@ -37,6 +50,11 @@ fn main() {
     t.write_csv(format!("{}/fig12_traces.csv", common::OUT_DIR)).unwrap();
 
     let saving = (1.0 - smlt.total_cost() / lml.total_cost()) * 100.0;
+    bench.meta_num("reconfigurations", smlt.metrics.reconfigurations as f64);
+    bench.meta_num("smlt_cost", smlt.total_cost());
+    bench.meta_num("lml_cost", lml.total_cost());
+    bench.meta_num("saving_pct", saving);
+    println!("-> wrote {}", bench.write());
     println!(
         "-> SMLT: {} reconfigurations; total ${:.2} vs LambdaML ${:.2} \
          ({saving:.0}% cheaper; paper reports >30%).",

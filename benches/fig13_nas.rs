@@ -24,6 +24,12 @@ fn main() {
     lml_job.fixed = Config { workers: 64, mem_mb: 8192 };
     let lml = simulate(&lml_job);
 
+    let mut bench = common::BenchReport::new("fig13_nas");
+    bench.meta_num("trials", f64::from(trials));
+    bench.meta_num("iters_per_trial", iters as f64);
+    bench.meta_num("smlt_cost", smlt.total_cost());
+    bench.meta_num("lml_cost", lml.total_cost());
+
     let mut t = Table::new(
         "(a/b/c) per-trial traces",
         &["trial", "model Mparams", "SMLT workers", "SMLT mem MB", "SMLT samples/s", "LML samples/s"],
@@ -32,6 +38,23 @@ fn main() {
         let lo = i * iters as usize;
         let hi = (lo + iters as usize - 1).min(smlt.metrics.records.len() - 1);
         let r = &smlt.metrics.records[hi];
+        bench.push(
+            "trials",
+            &[
+                ("trial", common::jnum(i as f64)),
+                ("model_mparams", common::jnum(phase.profile.params as f64 / 1e6)),
+                ("smlt_workers", common::jnum(f64::from(r.workers))),
+                ("smlt_mem_mb", common::jnum(f64::from(r.mem_mb))),
+                ("smlt_samples_per_s", common::jnum(smlt.metrics.throughput_at(hi, iters as usize))),
+                (
+                    "lml_samples_per_s",
+                    common::jnum(
+                        lml.metrics
+                            .throughput_at(hi.min(lml.metrics.records.len() - 1), iters as usize),
+                    ),
+                ),
+            ],
+        );
         t.row(&[
             i.to_string(),
             format!("{:.1}", phase.profile.params as f64 / 1e6),
@@ -43,6 +66,7 @@ fn main() {
     }
     t.print();
     t.write_csv(format!("{}/fig13_nas.csv", common::OUT_DIR)).unwrap();
+    println!("-> wrote {}", bench.write());
     println!(
         "-> SMLT ${:.2} vs LambdaML ${:.2}: {:.1}x cost saving via dynamic\n   allocation (paper: ~3x).",
         smlt.total_cost(),

@@ -1,0 +1,78 @@
+//! Pipeline-parallelism demo: a model too big for one function.
+//!
+//! GPT-XL's optimizer residency (weights + gradients + Adam state, 3x
+//! the gradient bytes) is ~15 GB — over the platform's 10 GB function
+//! cap — so a data-parallel fleet runs every iteration under the 4x
+//! memory-thrash penalty. The job is trained data-parallel, then under a
+//! few explicit [`PipelineSpec`]s (FuncPipe-style, arXiv 2204.13561:
+//! `S` stage groups, `M` micro-batches through the fill-drain schedule,
+//! activations handed through the gradient store), and finally with
+//! `pipeline_search` on, letting the scheduler co-optimize partition
+//! count x memory x parallelism itself.
+//!
+//! ```text
+//! cargo run --release --example pipeline_parallel -- --iters 6 --batch 256
+//! ```
+//!
+//! [`PipelineSpec`]: smlt::pipeline::PipelineSpec
+
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, SimJob, Workloads};
+use smlt::faas::FaasPlatform;
+use smlt::perfmodel::ModelProfile;
+use smlt::pipeline::PipelineSpec;
+use smlt::util::cli::Args;
+use smlt::util::table::Table;
+
+fn main() -> smlt::util::error::Result<()> {
+    let args = Args::from_env();
+    let iters = args.get_usize("iters", 6) as u64;
+    let batch = args.get_usize("batch", 256) as u32;
+    let cap_mb = FaasPlatform::with_seed(0).limits.mem_max_mb;
+    let model = ModelProfile::gpt_xl();
+
+    let specs: [(&str, PipelineSpec, bool); 4] = [
+        ("data-parallel", PipelineSpec::default(), false),
+        ("pp2x8", PipelineSpec { stages: 2, micro_batches: 8 }, false),
+        ("pp4x16", PipelineSpec { stages: 4, micro_batches: 16 }, false),
+        ("auto (pipeline_search)", PipelineSpec::default(), true),
+    ];
+
+    let mut t = Table::new(
+        &format!("GPT-XL, {cap_mb} MB function cap, global batch {batch}"),
+        &["run", "chosen", "funcs", "need MB/stage", "fits", "time s", "cost $"],
+    );
+    for (label, spec, search) in specs {
+        let mut j = SimJob::new(
+            SystemKind::Smlt,
+            Workloads::static_run(model.clone(), iters, batch),
+        );
+        j.seed = 0x2204;
+        j.pipeline = spec;
+        j.pipeline_search = search;
+        let out = simulate(&j);
+        let (_, cfg) = *out.config_trace.last().expect("configured");
+        let per_worker = (batch + cfg.workers - 1) / cfg.workers.max(1);
+        let chosen = out.pipeline;
+        let need = chosen.stage_need_mb(&model, per_worker);
+        t.row(&[
+            label.to_string(),
+            chosen.label(),
+            chosen.total_functions(cfg.workers).to_string(),
+            format!("{need:.0}"),
+            if chosen.feasible(&model, per_worker, cap_mb) { "yes".into() } else { "NO".into() },
+            format!("{:.0}", out.total_time_s),
+            format!("{:.2}", out.total_cost()),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nsplitting the model across S stage groups divides the per-function\n\
+         residency and compute by S, at the price of S x functions, the\n\
+         fill-drain bubble 1 + (S-1)/M, and per-micro-batch activation\n\
+         handoffs through the gradient store. Under the memory cap that\n\
+         trade wins outright; `pipeline_search` finds it without being told."
+    );
+    Ok(())
+}

@@ -190,6 +190,82 @@ mod tests {
     }
 
     #[test]
+    fn order_bits_is_a_total_order_on_raw_bit_patterns() {
+        // Random *bit patterns* — not uniform draws — so the pool is
+        // dominated by the regions uniform sampling never reaches:
+        // subnormals, huge/tiny exponents, both zeroes, both signs.
+        let mut rng = Pcg::new(0x0B17_5EED);
+        let mut pool: Vec<f64> = Vec::with_capacity(256);
+        pool.extend([
+            0.0,
+            -0.0,
+            f64::MIN_POSITIVE, // smallest normal
+            -f64::MIN_POSITIVE,
+            f64::from_bits(1), // smallest subnormal
+            -f64::from_bits(1),
+            f64::from_bits(0x000F_FFFF_FFFF_FFFF), // largest subnormal
+            -f64::from_bits(0x000F_FFFF_FFFF_FFFF),
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ]);
+        while pool.len() < 256 {
+            let x = f64::from_bits(rng.next_u64());
+            if !x.is_nan() {
+                pool.push(x);
+            }
+        }
+        for _ in 0..20_000 {
+            let a = pool[rng.below(pool.len() as u64) as usize];
+            let b = pool[rng.below(pool.len() as u64) as usize];
+            // Totality: every non-NaN pair maps to comparable u64 keys
+            // whose order agrees with partial_cmp (with -0.0 == 0.0).
+            assert_eq!(
+                order_bits(a).cmp(&order_bits(b)),
+                a.partial_cmp(&b).unwrap(),
+                "order mismatch for {a:e} ({:#x}) vs {b:e} ({:#x})",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn heap_discards_stale_entries_under_same_clock_reschedules() {
+        // Replicates the scheduler's pop-side validity rule: an entry is
+        // live iff its stored time bits equal the job's current clock
+        // bits. A job rescheduled repeatedly *at the same clock* (wake →
+        // park → wake with no time passing) piles up duplicate same-key
+        // entries — all of which stay valid, describing one decision —
+        // while moving the clock forward strands every earlier entry as
+        // stale.
+        let mut h = EventHeap::with_capacity(8);
+        let mut clock = [5.0f64, 9.0];
+        h.push(clock[0], 0);
+        h.push(clock[1], 1);
+        // three same-clock reschedules of job 0: duplicates, not stale
+        for _ in 0..3 {
+            h.push(clock[0], 0);
+        }
+        assert_eq!(h.len(), 5);
+        let valid = |e: (u64, u32), clock: &[f64; 2]| e.0 == order_bits(clock[e.1 as usize]);
+        // all four job-0 entries are valid while the clock sits at 5.0
+        let e = h.pop().unwrap();
+        assert_eq!(e, (order_bits(5.0), 0));
+        assert!(valid(e, &clock));
+        // job 0 steps to 12.0: the three leftover 5.0 entries go stale
+        clock[0] = 12.0;
+        h.push(clock[0], 0);
+        let mut popped = Vec::new();
+        while let Some(e) = h.pop() {
+            if valid(e, &clock) {
+                popped.push(e);
+            }
+        }
+        // stale 5.0 entries discarded; job 1 then job 0 at their clocks
+        assert_eq!(popped, vec![(order_bits(9.0), 1), (order_bits(12.0), 0)]);
+    }
+
+    #[test]
     fn heap_pops_in_time_then_index_order() {
         let mut h = EventHeap::with_capacity(8);
         h.push(3.0, 0);

@@ -982,7 +982,11 @@ impl ClusterSim {
             class: s.driver.job.goal.class(),
             arrive_s: s.arrive_s,
             weight: s.weight,
-            workers: self.lease_slots(j).unwrap_or(cfg.workers),
+            // a pipelined job's admission would request stages × lanes
+            // slots (exactly cfg.workers for data-parallel jobs)
+            workers: self
+                .lease_slots(j)
+                .unwrap_or_else(|| s.driver.current_pipeline().total_functions(cfg.workers)),
             mem_mb: cfg.mem_mb,
             holds_lease: s.driver.holds_lease(),
             in_flight: self.env.pool.tenant_in_flight(s.driver.tenant),

@@ -24,6 +24,7 @@ use crate::faas::FailureInjector;
 use crate::metrics::{IterRecord, RunMetrics};
 use crate::optimizer::{BayesOpt, BoParams, Config, ConfigSpace, Objective, SearchSpec};
 use crate::perfmodel::{compute_time_s, init_time_s, Calibration, Framework, ModelProfile};
+use crate::pipeline::PipelineSpec;
 use crate::scheduler::TaskScheduler;
 use crate::sync::{comm_breakdown, SyncEnv, SyncPolicy};
 
@@ -85,6 +86,20 @@ pub struct SimJob {
     /// analytically at the chosen config and adopts the best (coordinate
     /// descent; off by default)
     pub sync_search: bool,
+    /// how the model is partitioned across function groups (FuncPipe-
+    /// style pipeline parallelism). The default single-stage spec is
+    /// *the* data-parallel path, bit-identical to the pre-pipeline
+    /// simulator; `stages > 1` runs `stages × workers` functions per
+    /// fleet with per-stage memory footprints and storage-mediated
+    /// activation passing (serverless only; VM systems ignore it)
+    pub pipeline: PipelineSpec,
+    /// let the scheduler co-optimize the pipeline spec alongside workers
+    /// × memory × sync: each config search is followed by an analytic
+    /// rescore of [`PipelineSpec::candidates`] at the chosen config,
+    /// skipping specs whose per-stage footprint exceeds the platform's
+    /// per-function memory cap (coordinate descent, like `sync_search`;
+    /// off by default)
+    pub pipeline_search: bool,
 }
 
 impl SimJob {
@@ -101,6 +116,8 @@ impl SimJob {
             family: None,
             sync: SyncPolicy::Bulk,
             sync_search: false,
+            pipeline: PipelineSpec::default(),
+            pipeline_search: false,
         }
     }
 
@@ -140,6 +157,11 @@ pub struct SimOutcome {
     /// Σ over iterations of the sync policy's update yield (gradient-
     /// signal fraction per iteration; `iters_done` under bulk sync)
     pub update_yield_sum: f64,
+    /// pipeline spec in force when the job finished (`job.pipeline`, or
+    /// the co-optimizer's pick when `job.pipeline_search` is on) — the
+    /// property suite checks the search never selects a spec whose
+    /// per-stage footprint exceeds the per-function memory cap
+    pub pipeline: PipelineSpec,
 }
 
 impl SimOutcome {
@@ -190,6 +212,10 @@ pub struct IterModel<'a> {
     /// sync policy the modeled iterations close under; serverless only —
     /// the VM branch always models bulk allreduce
     pub sync: SyncPolicy,
+    /// pipeline partitioning the modeled fleet runs (serverless only).
+    /// Single-stage specs take the pre-pipeline arithmetic verbatim —
+    /// the bit-identity contract pinned by `pipeline_proptests.rs`.
+    pub pipeline: PipelineSpec,
 }
 
 impl IterModel<'_> {
@@ -204,6 +230,9 @@ impl IterModel<'_> {
     pub fn iter_time(&self, c: Config) -> (f64, f64) {
         let per_worker = (self.global_batch + c.workers - 1) / c.workers.max(1);
         if self.system.is_serverless() {
+            if self.pipeline.is_pipelined() {
+                return self.iter_time_pipelined(c, per_worker);
+            }
             let comp =
                 compute_time_s(self.profile, self.cal, self.platform, c.mem_mb, per_worker);
             let env = SyncEnv::standard(self.platform.net_bw_bps(c.mem_mb));
@@ -226,6 +255,39 @@ impl IterModel<'_> {
             let comm = vm_allreduce_s(self.profile.grad_bytes(), c.workers, 10e9 / 8.0);
             (comp, comm)
         }
+    }
+
+    /// The `stages > 1` half of [`iter_time`](Self::iter_time): per-stage
+    /// compute stretched by the fill-drain bubble, plus gradient sync of
+    /// the `1/stages` shard (each stage group syncs concurrently, so each
+    /// sees a `1/stages` share of the store's aggregate bandwidth —
+    /// activation handoffs contend on that same shared path). Straggler
+    /// and semi-sync factors apply per stage group with `n = workers`,
+    /// exactly like the data-parallel path.
+    fn iter_time_pipelined(&self, c: Config, per_worker: u32) -> (f64, f64) {
+        let scheme = self.system.scheme().expect("serverless scheme");
+        let env = SyncEnv::standard(self.platform.net_bw_bps(c.mem_mb));
+        let (comp, act) = self.pipeline.pipelined_iter_s(
+            self.profile,
+            self.cal,
+            self.platform,
+            scheme,
+            &env,
+            c.mem_mb,
+            c.workers,
+            per_worker,
+        );
+        let env_stage = self.pipeline.stage_sync_env(&env);
+        let grad = self.sync.filtered_comm_s(&comm_breakdown(
+            scheme,
+            &env_stage,
+            self.pipeline.stage_grad_bytes(self.profile),
+            c.workers,
+            self.profile.extra_upload_bytes,
+        ));
+        let n = c.workers.max(1);
+        let wf = self.platform.limits.straggler.expected_kth(self.sync.effective_k(n), n);
+        (comp * wf, (grad + act) * wf)
     }
 
     /// Fraction of serverless comm time spent on uploads — what a
@@ -268,7 +330,10 @@ impl IterModel<'_> {
             let wf = strag.expected_kth(k, n);
             let bf = strag.billed_factor(k, n);
             let billed = if bf == wf { t } else { t * (bf / wf) };
-            self.pricing.lambda_cost(c.workers, c.mem_mb, billed)
+            // a pipelined fleet bills stages × workers functions; the
+            // multiply is exact, so one stage keeps the old arithmetic
+            let funcs = self.pipeline.total_functions(c.workers);
+            self.pricing.lambda_cost(funcs, c.mem_mb, billed)
                 + self.pricing.param_store_cost(2, t)
         } else {
             self.pricing.vm_cost(c.workers, t)
@@ -384,6 +449,12 @@ pub struct JobDriver {
     /// sync policy in force (job.sync, or the co-optimizer's pick when
     /// `job.sync_search` is on)
     sync_active: SyncPolicy,
+    /// pipeline spec in force (job.pipeline, or the co-optimizer's pick
+    /// when `job.pipeline_search` is on); always the single-stage spec
+    /// for VM systems. The fleet this driver leases, invokes, bills, and
+    /// parks in the warm pool is `stages × cfg.workers` functions — see
+    /// [`fleet_funcs`](Self::fleet_funcs).
+    pipeline_active: PipelineSpec,
     /// upload share of comm time this phase (significance-filter ramp)
     ul_frac: f64,
     /// Σ per-iteration update yield (SimOutcome::update_yield_sum)
@@ -441,7 +512,13 @@ impl JobDriver {
         } else {
             Config { workers: (job.fixed.workers / 8).max(1), mem_mb: 32_768 }
         };
-        let scheduler = TaskScheduler::new(cfg.workers);
+        // VM systems have no function groups to partition across
+        let pipeline_active = if job.system.is_serverless() {
+            job.pipeline.normalized()
+        } else {
+            PipelineSpec::default()
+        };
+        let scheduler = TaskScheduler::new(pipeline_active.total_functions(cfg.workers));
         let sync_active = job.sync;
         JobDriver {
             job,
@@ -468,6 +545,7 @@ impl JobDriver {
             init_s: 0.0,
             guard_every: 1,
             sync_active,
+            pipeline_active,
             ul_frac: 0.0,
             yield_sum: 0.0,
             straggler_late: 0,
@@ -510,6 +588,19 @@ impl JobDriver {
 
     pub fn current_config(&self) -> Config {
         self.cfg
+    }
+
+    /// The pipeline spec currently in force (for tests and reporting).
+    pub fn current_pipeline(&self) -> PipelineSpec {
+        self.pipeline_active
+    }
+
+    /// Functions the planned fleet occupies: `stages × cfg.workers`.
+    /// Exactly `cfg.workers` at one stage (plain multiply), so every
+    /// lease / invoke / billing / warm-pool site below keeps the
+    /// pre-pipeline arithmetic bit-for-bit on the data-parallel path.
+    fn fleet_funcs(&self) -> u32 {
+        self.pipeline_active.total_functions(self.cfg.workers)
     }
 
     /// Hand the driver a lease acquired on its behalf (the fleet
@@ -596,7 +687,11 @@ impl JobDriver {
         if !self.job.system.is_serverless() {
             return s;
         }
-        let cap = env.pool.hard_cap(self.tenant).max(1);
+        // a pipelined fleet spends `stages` slots per data-parallel lane,
+        // so the searchable lane count shrinks accordingly (÷1 — the
+        // identical cap — on the single-stage path)
+        let stages = self.pipeline_active.stages.max(1);
+        let cap = (env.pool.hard_cap(self.tenant) / stages).max(1);
         if cap < s.max_workers {
             s.max_workers = cap;
             if s.min_workers > cap {
@@ -642,6 +737,29 @@ impl JobDriver {
         self.last_params = Some(phase.profile.params);
 
         if should_optimize {
+            // pipeline feasibility first: if the active spec's per-stage
+            // footprint exceeds the per-function memory cap ("model too
+            // big for one function"), move to the first feasible candidate
+            // *before* the config search so BO probes a regime where the
+            // memory knob actually works (the search below still rescores
+            // the whole grid at the chosen config). No-op whenever the
+            // active spec fits — in particular always on small models,
+            // keeping the data-parallel path bit-identical even with the
+            // search enabled.
+            if self.job.pipeline_search && self.job.system.is_serverless() {
+                let cap_mb = env.platform.limits.mem_max_mb;
+                let per_worker =
+                    (phase.global_batch + self.cfg.workers - 1) / self.cfg.workers.max(1);
+                if !self.pipeline_active.feasible(&phase.profile, per_worker, cap_mb) {
+                    if let Some(cand) = PipelineSpec::candidates()
+                        .into_iter()
+                        .find(|p| p.feasible(&phase.profile, per_worker, cap_mb))
+                    {
+                        self.pipeline_active = cand;
+                        self.scheduler.resize(self.fleet_funcs());
+                    }
+                }
+            }
             let space = self.space_capped(env);
             // cross-job warm posterior: same-family measurements banked by
             // earlier jobs, rescored under *this* job's goal and phase
@@ -681,6 +799,7 @@ impl JobDriver {
                 cal: &self.cal,
                 pricing: &self.pricing,
                 sync: self.sync_active,
+                pipeline: self.pipeline_active,
             };
             let mut obj = PhaseObjective {
                 model,
@@ -731,8 +850,14 @@ impl JobDriver {
             for (c, _) in &res.trace {
                 let probe_s = obj.eval_cost_s(*c);
                 if self.job.system.is_serverless() {
-                    self.ledger
-                        .add_lambda(&self.pricing, c.workers, c.mem_mb, probe_s);
+                    // probes launch the full stage × lane fleet (×1 — the
+                    // identical bill — on the data-parallel path)
+                    self.ledger.add_lambda(
+                        &self.pricing,
+                        self.pipeline_active.total_functions(c.workers),
+                        c.mem_mb,
+                        probe_s,
+                    );
                 } else {
                     // VM probes must provision a fleet and run a whole
                     // training trial before tearing down (~10 min each) —
@@ -767,7 +892,7 @@ impl JobDriver {
                 }
             }
             self.cfg = res.best;
-            self.scheduler.resize(self.cfg.workers);
+            self.scheduler.resize(self.fleet_funcs());
             // ---- sync-policy coordinate descent: with the config search
             // done, rescore a small policy grid *analytically* at the
             // chosen config (the model the live probes just calibrated —
@@ -784,6 +909,7 @@ impl JobDriver {
                         cal: &self.cal,
                         pricing: &self.pricing,
                         sync: pol,
+                        pipeline: self.pipeline_active,
                     };
                     let (comp, comm) = m.iter_time(self.cfg);
                     let y = pol.expected_yield(self.cfg.workers);
@@ -799,15 +925,62 @@ impl JobDriver {
                 }
                 self.sync_active = best.1;
             }
+            // ---- pipeline coordinate descent (FuncPipe's joint
+            // partition × memory × parallelism optimization): rescore the
+            // candidate stage/micro-batch grid analytically at the chosen
+            // config, skipping any spec whose per-stage footprint exceeds
+            // the per-function memory cap. The data-parallel spec is
+            // scored first and kept on ties (strict `<`), so a model that
+            // gains nothing from pipelining stays on the bit-identical
+            // path.
+            if self.job.pipeline_search && self.job.system.is_serverless() {
+                let cap_mb = env.platform.limits.mem_max_mb;
+                let per_worker =
+                    (phase.global_batch + self.cfg.workers - 1) / self.cfg.workers.max(1);
+                let mut best: Option<(f64, PipelineSpec)> = None;
+                for cand in PipelineSpec::candidates() {
+                    if !cand.feasible(&phase.profile, per_worker, cap_mb) {
+                        continue;
+                    }
+                    let m = IterModel {
+                        system: self.job.system,
+                        profile: &phase.profile,
+                        global_batch: phase.global_batch,
+                        platform: &env.platform,
+                        cal: &self.cal,
+                        pricing: &self.pricing,
+                        sync: self.sync_active,
+                        pipeline: cand,
+                    };
+                    let (comp, comm) = m.iter_time(self.cfg);
+                    let y = self.sync_active.expected_yield(self.cfg.workers);
+                    let score = goal_score(
+                        self.job.goal,
+                        (comp + comm) / y,
+                        m.iter_cost(self.cfg) / y,
+                        phase.iters,
+                    );
+                    if best.map_or(true, |(b, _)| score < b) {
+                        best = Some((score, cand));
+                    }
+                }
+                // every candidate infeasible (beyond 8-way splitting):
+                // keep the active spec and run under the thrash penalty
+                if let Some((_, cand)) = best {
+                    self.pipeline_active = cand;
+                    self.scheduler.resize(self.fleet_funcs());
+                }
+            }
         }
         // multi-tenant hard cap: fixed-config systems request what the
         // user asked for, but the account will never run more than the
         // tenant's quota — clamp so the request is always grantable
         if self.job.system.is_serverless() {
-            let cap = env.pool.hard_cap(self.tenant).max(1);
+            let stages = self.pipeline_active.stages.max(1);
+            let cap = (env.pool.hard_cap(self.tenant) / stages).max(1);
             if self.cfg.workers > cap {
                 self.cfg.workers = cap;
-                self.scheduler.resize(cap);
+                self.scheduler.resize(self.fleet_funcs());
             }
         }
         self.config_trace.push((self.iters_done, self.cfg));
@@ -821,6 +994,7 @@ impl JobDriver {
             cal: &self.cal,
             pricing: &self.pricing,
             sync: self.sync_active,
+            pipeline: self.pipeline_active,
         };
         let (comp, comm) = model.iter_time(self.cfg);
         self.comp_s = comp;
@@ -840,7 +1014,8 @@ impl JobDriver {
         let strag = env.platform.limits.straggler;
         if self.job.system.is_serverless() && !strag.is_none() && k < n {
             let wf = strag.expected_kth(k, n);
-            self.straggler_late = n - k;
+            // n - k stragglers per stage group (×1 on the data-parallel path)
+            self.straggler_late = (n - k) * self.pipeline_active.stages.max(1);
             self.straggler_lag_s = ((comp + comm) / wf) * (strag.expected_kth(n, n) - wf);
         } else {
             self.straggler_late = 0;
@@ -870,7 +1045,10 @@ impl JobDriver {
             // could never be granted and the job would park forever.
             // Re-optimize (adaptive systems) or clamp into the shrunken
             // space before asking.
-            let cap = env.pool.hard_cap(self.tenant).max(1);
+            // the quota is spent in *functions*: a pipelined fleet needs
+            // stages × workers slots (÷1 / ×1 on the data-parallel path)
+            let stages = self.pipeline_active.stages.max(1);
+            let cap = (env.pool.hard_cap(self.tenant) / stages).max(1);
             if self.cfg.workers > cap {
                 self.refit_to_cap(env, cap);
             }
@@ -879,7 +1057,7 @@ impl JobDriver {
             // containers park in the warm pool, where the re-invocation
             // below can immediately pick them back up warm
             self.retire_fleet(env);
-            let want = self.cfg.workers;
+            let want = self.fleet_funcs();
             match env.pool.try_acquire(self.tenant, want) {
                 Acquire::Granted(id) => self.lease = Some(id),
                 Acquire::Denied { .. } => return StepEvent::Blocked { want },
@@ -907,6 +1085,7 @@ impl JobDriver {
                 cal: &self.cal,
                 pricing: &self.pricing,
                 sync: self.sync_active,
+                pipeline: self.pipeline_active,
             };
             if self.job.system.adaptive() {
                 let space = self.space_capped(env);
@@ -945,15 +1124,18 @@ impl JobDriver {
             self.cfg.workers = cap;
         }
         self.cfg.workers = self.cfg.workers.min(cap).max(1);
-        self.scheduler.resize(self.cfg.workers);
+        self.scheduler.resize(self.fleet_funcs());
         self.config_trace.push((self.iters_done, self.cfg));
     }
 
     fn invoke_fleet(&mut self, env: &mut ClusterEnv) -> StepEvent {
+        // the whole pipelined fleet launches at once: stages × workers
+        // functions (exactly cfg.workers on the data-parallel path)
+        let funcs = self.fleet_funcs();
         // other tenants' in-flight workers count against the shared
         // account's concurrency limit
         let external = match self.lease {
-            Some(_) => env.pool.total_in_flight() - self.cfg.workers,
+            Some(_) => env.pool.total_in_flight() - funcs,
             None => 0,
         };
         // warm reuse: take matching containers from the fleet pool (zero
@@ -964,13 +1146,13 @@ impl JobDriver {
             // fleet's own memory size serve (exact Lambda semantics); the
             // default pool matches by image alone
             env.warm
-                .checkout(self.job.image_id(), self.cfg.mem_mb, self.cfg.workers, self.t_now)
+                .checkout(self.job.image_id(), self.cfg.mem_mb, funcs, self.t_now)
         } else {
             0
         };
         let (warm_median, warm_sigma) = env.warm.warm_start_dist();
         let invs = env.platform.invoke_workers_pooled(
-            self.cfg.workers,
+            funcs,
             self.job.system.invoke_mode(),
             external,
             hits,
@@ -979,19 +1161,19 @@ impl JobDriver {
         );
         if self.job.system.is_serverless() {
             self.warm_hits += hits as u64;
-            self.cold_starts += (self.cfg.workers - hits) as u64;
+            self.cold_starts += (funcs - hits) as u64;
         }
         let slowest = invs.iter().map(|i| i.startup_delay_s).fold(0.0, f64::max);
         // training is gang-scheduled: the barrier waits for the coldest
         // worker, so framework init only shrinks when the *whole* fleet
         // launched warm (process + framework already resident)
-        let init_eff = if hits >= self.cfg.workers && self.cfg.workers > 0 {
+        let init_eff = if hits >= funcs && funcs > 0 {
             self.init_s * env.warm.warm_init_fraction()
         } else {
             self.init_s
         };
         self.t_now += slowest + init_eff;
-        env.platform.release_workers(self.cfg.workers);
+        env.platform.release_workers(funcs);
         self.fleet_mem_mb = self.cfg.mem_mb;
         self.fleet_started = true;
         if self.first_fleet_s.is_none() {
@@ -1022,6 +1204,7 @@ impl JobDriver {
                             cal: &self.cal,
                             pricing: &self.pricing,
                             sync: self.sync_active,
+                            pipeline: self.pipeline_active,
                         },
                         goal: Goal::Fastest,
                         phase_iters: phase.iters - i,
@@ -1049,11 +1232,12 @@ impl JobDriver {
                             if let Some(id) = self.lease.take() {
                                 env.pool.release(id);
                             }
-                            match env.pool.try_acquire(self.tenant, res.best.workers) {
+                            let stages = self.pipeline_active.stages.max(1);
+                            match env.pool.try_acquire(self.tenant, res.best.workers * stages) {
                                 Acquire::Granted(id) => self.lease = Some(id),
                                 Acquire::Denied { .. } => {
                                     switched = false;
-                                    match env.pool.try_acquire(self.tenant, self.cfg.workers) {
+                                    match env.pool.try_acquire(self.tenant, self.fleet_funcs()) {
                                         Acquire::Granted(id) => self.lease = Some(id),
                                         Acquire::Denied { .. } => {
                                             // cannot even reacquire what was
@@ -1063,7 +1247,7 @@ impl JobDriver {
                                             self.fleet_started = false;
                                             self.state = DriverState::AwaitSlots;
                                             return StepEvent::Blocked {
-                                                want: self.cfg.workers,
+                                                want: self.fleet_funcs(),
                                             };
                                         }
                                     }
@@ -1072,7 +1256,7 @@ impl JobDriver {
                         }
                         if switched {
                             self.cfg = res.best;
-                            self.scheduler.resize(self.cfg.workers);
+                            self.scheduler.resize(self.fleet_funcs());
                             self.t_now += res.profiling_s.min(60.0);
                             self.profiling_time_s += res.profiling_s.min(60.0);
                             let (a, b) = obj.model.iter_time(self.cfg);
@@ -1093,7 +1277,7 @@ impl JobDriver {
         // asymptote early in training) rides the same multiplier —
         // exactly 1.0 for non-filtering policies.
         let comm_eff = if self.job.system.is_serverless() {
-            let own = if self.lease.is_some() { self.cfg.workers } else { 0 };
+            let own = if self.lease.is_some() { self.fleet_funcs() } else { 0 };
             self.comm_s * self.sync_active.filter_ratio(self.ul_frac, i) * env.comm_factor(own)
         } else {
             self.comm_s
@@ -1134,7 +1318,7 @@ impl JobDriver {
             // the k-th arrival are billed to their own completion
             let billed_s = (self.comp_s + comm_eff) * billed_r + extra;
             self.ledger
-                .add_lambda(&self.pricing, self.cfg.workers, self.cfg.mem_mb, billed_s);
+                .add_lambda(&self.pricing, self.fleet_funcs(), self.cfg.mem_mb, billed_s);
             self.ledger.add_param_store(&self.pricing, 2, comm_eff * wall_r);
             // object-store request accounting
             match self.job.system {
@@ -1202,6 +1386,7 @@ impl JobDriver {
             cold_starts: self.cold_starts,
             config_trace: self.config_trace,
             update_yield_sum: self.yield_sum,
+            pipeline: self.pipeline_active,
         }
     }
 }

@@ -15,6 +15,10 @@
 //!   and the baselines' centralized variants).
 //! - [`perfmodel`] — calibrated per-iteration time model for the paper's
 //!   five benchmark models.
+//! - [`pipeline`] — FuncPipe-style pipelined model parallelism: stage /
+//!   micro-batch specs, the fill-drain schedule and its bubble factor,
+//!   per-stage memory feasibility under the per-function cap, and
+//!   storage-mediated activation passing on the shared storage path.
 //! - [`costmodel`] — cloud pricing (Lambda / S3 / ECS / EC2).
 //! - [`optimizer`] — Gaussian-process Bayesian optimizer + RL baseline.
 //! - [`scheduler`] — task scheduler: monitoring, checkpoint/restart,
@@ -53,6 +57,7 @@ pub mod faas;
 pub mod metrics;
 pub mod optimizer;
 pub mod perfmodel;
+pub mod pipeline;
 pub mod runtime;
 pub mod scheduler;
 pub mod simclock;

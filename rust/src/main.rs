@@ -169,6 +169,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             cal: &cal,
             pricing: &pricing,
             sync: Default::default(),
+            pipeline: Default::default(),
         },
         goal,
         iters,

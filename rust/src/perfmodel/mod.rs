@@ -48,9 +48,25 @@ pub struct ModelProfile {
     pub model_init_s: f64,
 }
 
+/// Bytes of activations crossing one pipeline-stage boundary per sample,
+/// as a multiple of `sqrt(params)`: for a roughly square layer stack the
+/// boundary tensor is one hidden vector per token/pixel, whose width
+/// scales with `sqrt(params)` while the parameter count scales with its
+/// square. Deliberately a single ablatable constant — fig19 sweeps are
+/// insensitive to its exact value because gradient and compute volumes
+/// dominate.
+pub const ACT_BYTES_PER_SQRT_PARAM: f64 = 32.0;
+
 impl ModelProfile {
     pub fn grad_bytes(&self) -> u64 {
         self.params * 4
+    }
+
+    /// Activation bytes one sample pushes across a pipeline-stage cut
+    /// (see [`ACT_BYTES_PER_SQRT_PARAM`]). Zero-parameter profiles (none
+    /// in-tree) would round up to at least one byte.
+    pub fn activation_bytes_per_sample(&self) -> u64 {
+        (ACT_BYTES_PER_SQRT_PARAM * (self.params as f64).sqrt()).ceil().max(1.0) as u64
     }
 
     pub fn resnet18() -> Self {
@@ -109,6 +125,24 @@ impl ModelProfile {
             sample_bytes: 0, // generated in-function by the simulator
             extra_upload_bytes: 160 << 20,
             model_init_s: 1.5,
+        }
+    }
+
+    /// GPT-XL-class decoder (~1.3 B parameters, 256-token sequences):
+    /// the "model too big for one function" benchmark. Its optimizer
+    /// residency (3x gradients ~ 14.9 GB) exceeds every FaaS memory size
+    /// (`mem_max_mb` = 10 240), so pure data parallelism always runs
+    /// under the 4x thrash penalty — pipeline partitioning is the only
+    /// way to fit it, which is exactly the FuncPipe scenario family
+    /// fig19 maps.
+    pub fn gpt_xl() -> Self {
+        ModelProfile {
+            name: "GPT-XL",
+            params: 1_300_000_000,
+            flops_fwd_per_sample: 2.0 * 1.3e9 * 256.0,
+            sample_bytes: 2 * 256, // token ids
+            extra_upload_bytes: 0,
+            model_init_s: 8.0,
         }
     }
 
@@ -228,6 +262,36 @@ mod tests {
             atari.grad_bytes() + atari.extra_upload_bytes
                 > r50.grad_bytes() + r50.extra_upload_bytes
         );
+    }
+
+    #[test]
+    fn gpt_xl_exceeds_every_function_memory_size() {
+        let pf = platform();
+        let g = ModelProfile::gpt_xl();
+        let need_mb = (g.grad_bytes() * 3) as f64 / (1 << 20) as f64;
+        assert!(
+            need_mb > pf.limits.mem_max_mb as f64,
+            "gpt_xl must not fit one function: needs {need_mb} MB"
+        );
+        // ... so data-parallel compute always carries the thrash penalty
+        let cal = Calibration::default();
+        let t_max = compute_time_s(&g, &cal, &pf, pf.limits.mem_max_mb, 8);
+        let vcpus = pf.vcpus(pf.limits.mem_max_mb).max(0.08);
+        let unthrashed =
+            g.flops_fwd_per_sample * cal.bwd_multiplier * 8.0 / (vcpus * cal.gflops_per_vcpu * 1e9);
+        assert!((t_max - 4.0 * unthrashed).abs() < 1e-9 * t_max.abs().max(1.0));
+    }
+
+    #[test]
+    fn activation_bytes_scale_sublinearly_with_params() {
+        let small = ModelProfile::resnet18();
+        let big = ModelProfile::gpt_xl();
+        let (a, b) = (small.activation_bytes_per_sample(), big.activation_bytes_per_sample());
+        assert!(b > a, "bigger model, wider boundary tensor");
+        // sqrt scaling: ~111x the params, ~10.5x the activation bytes
+        assert!((b as f64) < (a as f64) * (big.params as f64 / small.params as f64));
+        // sane absolute magnitude: ~1.15 MB/sample for GPT-XL
+        assert!((1 << 20..4 << 20).contains(&(b as usize)), "gpt_xl act {b} B");
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! Pipelined model parallelism (FuncPipe-style, arXiv 2204.13561).
+//!
+//! A [`PipelineSpec`] partitions the model into `stages` sequential
+//! groups and slices each worker's batch into `micro_batches`
+//! micro-batches that flow through the classic GPipe fill-drain schedule:
+//! with `S` stages and `M` micro-batches the makespan is `(M + S - 1)`
+//! cell times, i.e. the ideal `1/S` per-stage compute stretched by the
+//! bubble factor `1 + (S - 1) / M`. Stage boundaries hand activations
+//! (forward) and activation gradients (backward) through the *same*
+//! shared storage path gradient exchange uses — there are no
+//! function-to-function links on FaaS — so activation traffic contends
+//! on the store's aggregate bandwidth alongside the per-stage gradient
+//! syncs ([`StoreModel::with_aggregate_share`]).
+//!
+//! The point of pipelining here is feasibility, not raw speed: a model
+//! whose optimizer residency (3x gradient bytes) exceeds the platform's
+//! per-function memory cap is unrepresentable data-parallel (it runs,
+//! but permanently under the thrash penalty), while splitting it into
+//! `S` stages divides the resident weights by `S`
+//! ([`PipelineSpec::stage_need_mb`]). The scheduler co-optimizes
+//! partition count x memory x parallelism via `pipeline_search`
+//! coordinate descent in [`crate::coordinator::simrun`], exactly the
+//! joint optimization FuncPipe performs.
+//!
+//! `stages == 1` is *the* data-parallel path — not an approximation of
+//! it: every consumer guards on [`PipelineSpec::is_pipelined`] and takes
+//! the pre-pipeline arithmetic verbatim, pinned bit-for-bit by
+//! `rust/tests/pipeline_proptests.rs`.
+//!
+//! [`StoreModel::with_aggregate_share`]: crate::storage::StoreModel::with_aggregate_share
+
+use crate::faas::FaasPlatform;
+use crate::perfmodel::{Calibration, ModelProfile};
+use crate::sync::{Scheme, SyncEnv};
+use crate::storage::StoreModel;
+
+/// How a job's model is partitioned across function groups.
+///
+/// `{ stages: 1, .. }` (the [`Default`]) is pure data parallelism;
+/// `micro_batches` is ignored in that case so a randomized spec with
+/// `stages == 1` still takes the bit-identical non-pipelined path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PipelineSpec {
+    /// sequential model partitions; each stage runs on its own group of
+    /// `workers` functions (the fleet is `stages x workers` functions)
+    pub stages: u32,
+    /// micro-batches per iteration filling the pipeline (GPipe-style);
+    /// more micro-batches shrink the fill/drain bubble
+    pub micro_batches: u32,
+}
+
+impl Default for PipelineSpec {
+    fn default() -> Self {
+        PipelineSpec { stages: 1, micro_batches: 1 }
+    }
+}
+
+/// One (stage, micro-batch) cell of the fill-drain schedule. `slot` is
+/// the cell's dispatch tick: cell `(s, m)` can only start after
+/// `(s - 1, m)` (its input activations) and `(s, m - 1)` (its stage is
+/// busy), and `slot = s + m` satisfies both with unit-time cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub stage: u32,
+    pub micro: u32,
+    pub slot: u32,
+}
+
+impl PipelineSpec {
+    /// The spec with both knobs clamped to at least 1 (a zero from a
+    /// randomized or user-built spec means "off", same as 1).
+    pub fn normalized(&self) -> PipelineSpec {
+        PipelineSpec {
+            stages: self.stages.max(1),
+            micro_batches: self.micro_batches.max(1),
+        }
+    }
+
+    /// True when this spec actually splits the model (`stages > 1`).
+    /// Every consumer branches on this — the `false` side is the
+    /// pre-pipeline code verbatim (the bit-identity contract).
+    pub fn is_pipelined(&self) -> bool {
+        self.stages > 1
+    }
+
+    /// Functions a fleet of `workers` data-parallel lanes needs: one per
+    /// (stage, lane). Plain multiplication so `stages == 1` yields
+    /// exactly `workers` (bit-identity: no clamping that could disturb
+    /// the `workers == 0` cost edge case).
+    pub fn total_functions(&self, workers: u32) -> u32 {
+        workers * self.stages.max(1)
+    }
+
+    /// Fill-drain stretch over the ideal `1/S` per-stage compute:
+    /// `1 + (S - 1) / M`. Exactly 1.0 at one stage; monotone
+    /// non-increasing in `micro_batches`, increasing in `stages`.
+    pub fn bubble_factor(&self) -> f64 {
+        let s = self.stages.max(1) as f64;
+        let m = self.micro_batches.max(1) as f64;
+        1.0 + (s - 1.0) / m
+    }
+
+    /// The full fill-drain schedule: `stages x micro_batches` cells, each
+    /// micro-batch visiting each stage exactly once, in dependency order
+    /// (see [`Cell`]). The property suite checks conservation on this.
+    pub fn schedule(&self) -> Vec<Cell> {
+        let n = self.normalized();
+        let mut cells = Vec::with_capacity((n.stages * n.micro_batches) as usize);
+        for micro in 0..n.micro_batches {
+            for stage in 0..n.stages {
+                cells.push(Cell { stage, micro, slot: stage + micro });
+            }
+        }
+        cells
+    }
+
+    /// Gradient bytes one stage group synchronizes per iteration: the
+    /// model's gradients split evenly across stages (ceil so no byte is
+    /// dropped). Equals `profile.grad_bytes()` at one stage.
+    pub fn stage_grad_bytes(&self, profile: &ModelProfile) -> u64 {
+        let s = self.stages.max(1) as u64;
+        (profile.grad_bytes() + s - 1) / s
+    }
+
+    /// Peak memory one stage-worker needs (MB): `3x` its stage's gradient
+    /// bytes (weights + gradients + optimizer state) plus one resident
+    /// micro-batch of boundary activations or input samples, whichever is
+    /// wider. At one stage this is *exactly* the data-parallel residency
+    /// rule in [`crate::perfmodel::compute_time_s`] — same arithmetic —
+    /// so feasibility and the thrash penalty agree on where "fits" ends.
+    pub fn stage_need_mb(&self, profile: &ModelProfile, per_worker_batch: u32) -> f64 {
+        const MB: f64 = (1 << 20) as f64;
+        let n = self.normalized();
+        if !n.is_pipelined() {
+            return (profile.grad_bytes() * 3) as f64 / MB
+                + per_worker_batch as f64 * profile.sample_bytes as f64 / MB;
+        }
+        let micro = per_worker_batch as f64 / n.micro_batches as f64;
+        let widest =
+            (profile.activation_bytes_per_sample() as f64).max(profile.sample_bytes as f64);
+        (profile.grad_bytes() as f64 * 3.0 / n.stages as f64) / MB + micro * widest / MB
+    }
+
+    /// Whether one stage-worker fits a function of `mem_cap_mb` — the
+    /// per-function memory cap that makes "model too big for one
+    /// function" configs infeasible.
+    pub fn feasible(&self, profile: &ModelProfile, per_worker_batch: u32, mem_cap_mb: u32) -> bool {
+        self.stage_need_mb(profile, per_worker_batch) <= mem_cap_mb as f64
+    }
+
+    /// Smallest power-of-two stage count (1..=64) whose per-stage
+    /// footprint fits `mem_cap_mb` at `micro_batches` micro-batches, or
+    /// `None` if even 64-way partitioning doesn't fit.
+    pub fn min_feasible_stages(
+        profile: &ModelProfile,
+        per_worker_batch: u32,
+        micro_batches: u32,
+        mem_cap_mb: u32,
+    ) -> Option<u32> {
+        let mut s = 1u32;
+        while s <= 64 {
+            let spec = PipelineSpec { stages: s, micro_batches };
+            if spec.feasible(profile, per_worker_batch, mem_cap_mb) {
+                return Some(s);
+            }
+            s *= 2;
+        }
+        None
+    }
+
+    /// Candidate grid for the `pipeline_search` coordinate descent. The
+    /// data-parallel spec comes first and the search keeps it on ties
+    /// (strict `<`), so enabling the search on a model that gains nothing
+    /// from pipelining leaves the bit-identical path in force.
+    pub fn candidates() -> Vec<PipelineSpec> {
+        let mut out = vec![PipelineSpec::default()];
+        for stages in [2u32, 4, 8] {
+            for micro_batches in [4u32, 8, 16] {
+                out.push(PipelineSpec { stages, micro_batches });
+            }
+        }
+        out
+    }
+
+    /// `"dp"` for the data-parallel spec, else `"pp<S>x<M>"`.
+    pub fn label(&self) -> String {
+        let n = self.normalized();
+        if n.is_pipelined() {
+            format!("pp{}x{}", n.stages, n.micro_batches)
+        } else {
+            "dp".to_string()
+        }
+    }
+
+    /// The storage environment one stage group sees: `stages` groups sync
+    /// concurrently on the same services, so each group's view of both
+    /// aggregate caps shrinks to a `1/stages` share. Unchanged at one
+    /// stage (never called on that path anyway).
+    pub fn stage_sync_env(&self, base: &SyncEnv) -> SyncEnv {
+        let s = self.stages.max(1);
+        SyncEnv {
+            param_store: base.param_store.with_aggregate_share(s),
+            object_store: base.object_store.with_aggregate_share(s),
+            client_bw_bps: base.client_bw_bps,
+        }
+    }
+
+    /// (compute_s, activation_transfer_s) of one pipelined iteration for
+    /// one worker lane at `mem_mb`, with `stages x workers` functions
+    /// live on the store.
+    ///
+    /// Compute: the full fwd+bwd FLOPs split `1/S` per stage, stretched
+    /// by the fill-drain [`bubble_factor`](Self::bubble_factor), with the
+    /// same 4x thrash penalty as the data-parallel model when the stage
+    /// footprint exceeds `mem_mb`.
+    ///
+    /// Activations: the critical path crosses `(M + S - 2)` stage-
+    /// boundary handoffs (micro-batch 0 climbs `S - 1` boundaries, then
+    /// the last stage receives the remaining `M - 1` micro-batches one
+    /// handoff each) — zero at one stage. Each handoff moves one
+    /// micro-batch as 4 streamed legs (forward activation up + down,
+    /// backward activation gradient up + down) on the scheme's store
+    /// ([`StoreModel::stream_s`] — bandwidth-only, the pipeline hides
+    /// per-request latency). Since the per-handoff payload is
+    /// `per_worker_batch / M` samples, the total is proportional to
+    /// `1 + (S - 2) / M`: monotone non-increasing in `micro_batches`
+    /// for any `S >= 2`, the property the test suite pins.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pipelined_iter_s(
+        &self,
+        profile: &ModelProfile,
+        cal: &Calibration,
+        platform: &FaasPlatform,
+        scheme: Scheme,
+        env: &SyncEnv,
+        mem_mb: u32,
+        workers: u32,
+        per_worker_batch: u32,
+    ) -> (f64, f64) {
+        let n = self.normalized();
+        let s = n.stages as f64;
+        let m = n.micro_batches as f64;
+        let vcpus = platform.vcpus(mem_mb).max(0.08);
+        let flops = profile.flops_fwd_per_sample * cal.bwd_multiplier * per_worker_batch as f64;
+        let pressure = if (mem_mb as f64) < n.stage_need_mb(profile, per_worker_batch) {
+            4.0
+        } else {
+            1.0
+        };
+        let comp = pressure * (flops / s) / (vcpus * cal.gflops_per_vcpu * 1e9)
+            * n.bubble_factor();
+        let act = if n.is_pipelined() {
+            let store = activation_store(scheme, env);
+            let concurrent = workers.max(1) * n.stages;
+            let micro_bytes =
+                per_worker_batch as f64 / m * profile.activation_bytes_per_sample() as f64;
+            let one_way = store.stream_s(micro_bytes, concurrent, env.client_bw_bps);
+            (m + s - 2.0) * 4.0 * one_way
+        } else {
+            0.0
+        };
+        (comp, act)
+    }
+}
+
+/// The store a scheme's activation handoffs ride: the same one its
+/// gradients use — SMLT and Cirrus rendezvous through the in-memory
+/// param store, Siren and LambdaML through the object store.
+fn activation_store(scheme: Scheme, env: &SyncEnv) -> &StoreModel {
+    match scheme {
+        Scheme::SmltHierarchical | Scheme::CirrusPs => &env.param_store,
+        Scheme::SirenCentral | Scheme::LambdaMlScatterReduce => &env.object_store,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faas::FaasPlatform;
+
+    fn spec(stages: u32, micro_batches: u32) -> PipelineSpec {
+        PipelineSpec { stages, micro_batches }
+    }
+
+    #[test]
+    fn default_is_data_parallel() {
+        let d = PipelineSpec::default();
+        assert!(!d.is_pipelined());
+        assert_eq!(d.bubble_factor(), 1.0);
+        assert_eq!(d.total_functions(32), 32);
+        assert_eq!(d.label(), "dp");
+        assert_eq!(spec(8, 4).label(), "pp8x4");
+    }
+
+    #[test]
+    fn bubble_shrinks_with_micro_batches_grows_with_stages() {
+        assert!((spec(4, 4).bubble_factor() - 1.75).abs() < 1e-12);
+        assert!(spec(4, 8).bubble_factor() < spec(4, 4).bubble_factor());
+        assert!(spec(8, 4).bubble_factor() > spec(4, 4).bubble_factor());
+        // zero knobs clamp to 1
+        assert_eq!(spec(0, 0).bubble_factor(), 1.0);
+    }
+
+    #[test]
+    fn schedule_conserves_cells_in_dependency_order() {
+        let p = spec(3, 5);
+        let cells = p.schedule();
+        assert_eq!(cells.len(), 15);
+        for s in 0..3 {
+            for m in 0..5 {
+                let hits: Vec<_> =
+                    cells.iter().filter(|c| c.stage == s && c.micro == m).collect();
+                assert_eq!(hits.len(), 1, "cell ({s},{m}) exactly once");
+                assert_eq!(hits[0].slot, s + m);
+            }
+        }
+        // makespan in unit cells: M + S - 1
+        let last = cells.iter().map(|c| c.slot).max().unwrap();
+        assert_eq!(last + 1, 5 + 3 - 1);
+    }
+
+    #[test]
+    fn stage_grad_bytes_conserve_the_model() {
+        let p = ModelProfile::bert_medium();
+        for s in [1u32, 2, 3, 4, 8] {
+            let per = spec(s, 4).stage_grad_bytes(&p);
+            assert!(per * s as u64 >= p.grad_bytes(), "ceil split covers all bytes");
+            assert!((per * s as u64) < p.grad_bytes() + s as u64, "no more than ceil slack");
+        }
+        assert_eq!(spec(1, 1).stage_grad_bytes(&p), p.grad_bytes());
+    }
+
+    #[test]
+    fn single_stage_need_matches_data_parallel_residency_rule() {
+        // same arithmetic as perfmodel::compute_time_s's pressure rule
+        let p = ModelProfile::bert_medium();
+        let need = spec(1, 7).stage_need_mb(&p, 32);
+        let expect = (p.grad_bytes() * 3) as f64 / (1 << 20) as f64
+            + 32.0 * p.sample_bytes as f64 / (1 << 20) as f64;
+        assert_eq!(need, expect);
+    }
+
+    #[test]
+    fn gpt_xl_infeasible_data_parallel_feasible_pipelined() {
+        let cap = FaasPlatform::with_seed(0).limits.mem_max_mb;
+        let g = ModelProfile::gpt_xl();
+        assert!(!spec(1, 1).feasible(&g, 8, cap));
+        assert_eq!(PipelineSpec::min_feasible_stages(&g, 8, 8, cap), Some(2));
+        assert!(spec(2, 8).feasible(&g, 8, cap));
+        // small models fit without partitioning
+        let r18 = ModelProfile::resnet18();
+        assert_eq!(PipelineSpec::min_feasible_stages(&r18, 32, 8, cap), Some(1));
+    }
+
+    #[test]
+    fn candidates_lead_with_data_parallel_and_are_normalized() {
+        let c = PipelineSpec::candidates();
+        assert_eq!(c[0], PipelineSpec::default());
+        assert!(c.len() > 4);
+        for p in &c {
+            assert_eq!(*p, p.normalized());
+        }
+    }
+
+    #[test]
+    fn stage_sync_env_splits_aggregate_only() {
+        let base = SyncEnv::standard(75e6);
+        let env2 = spec(2, 8).stage_sync_env(&base);
+        assert!(
+            (env2.param_store.aggregate_bw_bps - base.param_store.aggregate_bw_bps / 2.0).abs()
+                < 1.0
+        );
+        assert_eq!(env2.param_store.stream_bw_bps, base.param_store.stream_bw_bps);
+        assert_eq!(env2.client_bw_bps, base.client_bw_bps);
+    }
+
+    #[test]
+    fn pipelined_iter_monotone_in_micro_batches() {
+        let pf = FaasPlatform::with_seed(0);
+        let cal = Calibration::default();
+        let g = ModelProfile::gpt_xl();
+        let env = SyncEnv::standard(pf.net_bw_bps(10_240));
+        let iter_s = |s: u32, m: u32| {
+            let (comp, act) = spec(s, m).pipelined_iter_s(
+                &g,
+                &cal,
+                &pf,
+                Scheme::SmltHierarchical,
+                &env,
+                10_240,
+                8,
+                32,
+            );
+            comp + act
+        };
+        let mut prev = f64::INFINITY;
+        for m in [1u32, 2, 4, 8, 16, 32] {
+            let t = iter_s(4, m);
+            assert!(t <= prev + 1e-12, "M={m}: {t} > {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn more_stages_cut_per_stage_compute_but_add_bubble() {
+        let pf = FaasPlatform::with_seed(0);
+        let cal = Calibration::default();
+        let g = ModelProfile::gpt_xl();
+        let env = SyncEnv::standard(pf.net_bw_bps(10_240));
+        // at 10 GB, S=1 carries the 4x thrash penalty; S=4 fits
+        let iter_parts = |s: u32, m: u32| {
+            spec(s, m).pipelined_iter_s(
+                &g,
+                &cal,
+                &pf,
+                Scheme::SmltHierarchical,
+                &env,
+                10_240,
+                8,
+                32,
+            )
+        };
+        let (c1, _) = iter_parts(1, 1);
+        let (c4, a4) = iter_parts(4, 8);
+        // 4x penalty gone and compute split 4 ways beats the 1.375 bubble
+        assert!(c4 + a4 < c1 / 2.0, "pipelined {c4}+{a4} vs thrashed dp {c1}");
+    }
+}

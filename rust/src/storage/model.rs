@@ -75,6 +75,37 @@ impl StoreModel {
         self.first_byte_s + bytes as f64 / rate
     }
 
+    /// Time to move `bytes` over an *already-open* stream — bandwidth
+    /// only, no time-to-first-byte. Pipelined activation passing keeps one
+    /// persistent connection per stage boundary and overlaps each
+    /// micro-batch's request latency with the previous one's payload, so
+    /// steady-state handoffs pay bandwidth alone. `bytes` is `f64`: the
+    /// analytic pipeline model slices batches into fractional micro-batch
+    /// payloads. Uses the same min-of-rates model as
+    /// [`transfer_s`](Self::transfer_s), so the result is strictly
+    /// proportional to `bytes` at fixed contention — which is what makes
+    /// pipeline iteration time provably monotone in `micro_batches`.
+    pub fn stream_s(&self, bytes: f64, concurrent: u32, client_bw_bps: f64) -> f64 {
+        let fair_share = self.aggregate_bw_bps / concurrent.max(1) as f64;
+        let rate = self
+            .stream_bw_bps
+            .min(client_bw_bps)
+            .min(fair_share)
+            .max(1.0);
+        bytes.max(0.0) / rate
+    }
+
+    /// The same service as seen by one of `groups` equal cohorts syncing
+    /// concurrently: the aggregate cap is split `1/groups`; per-stream
+    /// bandwidth, latency, and shard count are unchanged. This is how
+    /// pipeline stage groups contend on the *same* storage path as plain
+    /// gradient exchange — `groups == 1` returns the model unchanged.
+    pub fn with_aggregate_share(&self, groups: u32) -> StoreModel {
+        let mut m = self.clone();
+        m.aggregate_bw_bps /= groups.max(1) as f64;
+        m
+    }
+
     /// Convenience: a full fan-in/fan-out plan (n clients each moving
     /// `bytes`), returning the *makespan* assuming simultaneous start.
     pub fn plan(&self, bytes_per_client: u64, clients: u32, client_bw_bps: f64) -> TransferPlan {
@@ -139,6 +170,30 @@ mod tests {
         let t1 = one.transfer_s(GB, 32, f64::INFINITY);
         let t4 = four.transfer_s(GB, 32, f64::INFINITY);
         assert!(t4 < t1 / 2.0);
+    }
+
+    #[test]
+    fn stream_has_no_ttfb_and_is_linear_in_bytes() {
+        let s3 = StoreModel::s3_like();
+        assert_eq!(s3.stream_s(0.0, 1, 1e9), 0.0, "empty stream is free");
+        let one = s3.stream_s(1e6, 4, 100e6);
+        let two = s3.stream_s(2e6, 4, 100e6);
+        assert!((two - 2.0 * one).abs() < 1e-12, "linear: {one} vs {two}");
+        // strictly below the request path, which pays TTFB
+        assert!(one < s3.transfer_s(1 << 20, 4, 100e6));
+    }
+
+    #[test]
+    fn aggregate_share_splits_only_the_aggregate() {
+        let redis = StoreModel::redis_like(2);
+        let half = redis.with_aggregate_share(2);
+        assert!((half.aggregate_bw_bps - redis.aggregate_bw_bps / 2.0).abs() < 1.0);
+        assert_eq!(half.stream_bw_bps, redis.stream_bw_bps);
+        assert_eq!(half.first_byte_s, redis.first_byte_s);
+        assert_eq!(half.shards, redis.shards);
+        // groups == 1 (and 0, clamped) leave the model unchanged
+        assert_eq!(redis.with_aggregate_share(1).aggregate_bw_bps, redis.aggregate_bw_bps);
+        assert_eq!(redis.with_aggregate_share(0).aggregate_bw_bps, redis.aggregate_bw_bps);
     }
 
     #[test]

@@ -212,16 +212,16 @@ impl StragglerModel {
 
     /// Expected k-th order statistic of `n` i.i.d. multipliers, via the
     /// Blom plotting-position approximation `F⁻¹((k - 0.375)/(n + 0.25))`
-    /// — smooth and deterministic, which is what the planner's analytic
+    /// (delegated to [`crate::util::stats::expected_kth`] — identical
+    /// clamping and arithmetic) — smooth and deterministic, which is what
+    /// the planner's analytic
     /// [`IterModel`](crate::coordinator::simrun::IterModel) needs.
     /// Exactly `1.0` for `None`.
     pub fn expected_kth(&self, k: u32, n: u32) -> f64 {
         if self.is_none() {
             return 1.0;
         }
-        let n = n.max(1);
-        let k = k.clamp(1, n);
-        self.quantile((k as f64 - 0.375) / (n as f64 + 0.25))
+        crate::util::stats::expected_kth(|q| self.quantile(q), k, n)
     }
 
     /// Expected *billed* multiplier per worker when aggregating at the

@@ -1,0 +1,223 @@
+//! Property tests for the pipeline layer (the ISSUE's four contracts),
+//! exercised through the public API — fleets through [`simulate`],
+//! schedule/feasibility math through [`PipelineSpec`] directly.
+//!
+//! The load-bearing one is the first: a `stages == 1` spec is not an
+//! *approximation* of data parallelism, it IS the pre-pipeline code path,
+//! bit-for-bit, on randomized jobs.
+
+mod common;
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::coordinator::{simulate, Goal, SimJob, SimOutcome, Workloads};
+use smlt::faas::FaasPlatform;
+use smlt::perfmodel::{Calibration, ModelProfile};
+use smlt::pipeline::PipelineSpec;
+use smlt::sync::{Scheme, SyncEnv, SyncPolicy};
+
+fn assert_bitwise_equal(a: &SimOutcome, b: &SimOutcome, what: &str) {
+    assert_eq!(
+        a.total_time_s.to_bits(),
+        b.total_time_s.to_bits(),
+        "{what}: total_time_s diverged ({} vs {})",
+        a.total_time_s,
+        b.total_time_s
+    );
+    assert_eq!(
+        a.total_cost().to_bits(),
+        b.total_cost().to_bits(),
+        "{what}: total_cost diverged"
+    );
+    assert_eq!(a.config_trace, b.config_trace, "{what}: config trace diverged");
+    assert_eq!(a.iters_done, b.iters_done, "{what}: iteration count diverged");
+}
+
+#[test]
+fn prop_single_stage_spec_is_data_parallel_bitwise() {
+    // an explicit { stages: 1 } spec — whatever the micro-batch knob
+    // says, and on VM systems that ignore pipelining entirely — must
+    // reproduce the default-spec run exactly
+    cases(8, |rng| {
+        let systems = [
+            SystemKind::Smlt,
+            SystemKind::LambdaMl,
+            SystemKind::Siren,
+            SystemKind::Iaas,
+        ];
+        let system = systems[rng.below(systems.len() as u64) as usize];
+        let sync = if rng.below(2) == 0 {
+            SyncPolicy::Bulk
+        } else {
+            SyncPolicy::SemiSync { k: 1 + rng.below(64) as u32 }
+        };
+        let seed = rng.below(1000);
+        let build = |pipeline: PipelineSpec| {
+            let mut j = SimJob::new(
+                system,
+                Workloads::static_run(ModelProfile::resnet18(), 8, 128),
+            );
+            j.seed = seed;
+            j.sync = sync;
+            j.pipeline = pipeline;
+            j
+        };
+        let baseline = simulate(&build(PipelineSpec::default()));
+        let stages_one = PipelineSpec {
+            stages: 1,
+            micro_batches: 1 + rng.below(63) as u32,
+        };
+        let explicit = simulate(&build(stages_one));
+        assert_bitwise_equal(
+            &baseline,
+            &explicit,
+            &format!("{system:?} seed={seed} spec={stages_one:?}"),
+        );
+    });
+}
+
+#[test]
+fn prop_schedule_conserves_micro_batches_across_stages() {
+    // every micro-batch traverses every stage exactly once, in
+    // dependency order, and the makespan is M + S - 1 unit cells
+    cases(20, |rng| {
+        let spec = PipelineSpec {
+            stages: 1 + rng.below(8) as u32,
+            micro_batches: 1 + rng.below(16) as u32,
+        };
+        let cells = spec.schedule();
+        let (s, m) = (spec.stages, spec.micro_batches);
+        assert_eq!(cells.len() as u32, s * m, "{spec:?}: cell count");
+        let mut seen = vec![0u32; (s * m) as usize];
+        for c in &cells {
+            assert!(c.stage < s && c.micro < m, "{spec:?}: cell out of range");
+            assert_eq!(c.slot, c.stage + c.micro, "{spec:?}: dependency slot");
+            seen[(c.micro * s + c.stage) as usize] += 1;
+        }
+        assert!(
+            seen.iter().all(|&n| n == 1),
+            "{spec:?}: some (stage, micro) cell missing or duplicated"
+        );
+        let makespan = cells.iter().map(|c| c.slot).max().unwrap() + 1;
+        assert_eq!(makespan, m + s - 1, "{spec:?}: fill-drain makespan");
+    });
+}
+
+#[test]
+fn prop_pipelined_iter_time_monotone_nonincreasing_in_micro_batches() {
+    // slicing the batch finer can never slow an iteration down: the
+    // bubble shrinks, the per-handoff payload shrinks in proportion to
+    // the handoff count's growth, and memory pressure only eases
+    cases(20, |rng| {
+        let profiles = [
+            ModelProfile::resnet18(),
+            ModelProfile::resnet50(),
+            ModelProfile::bert_medium(),
+            ModelProfile::gpt_xl(),
+        ];
+        let profile = &profiles[rng.below(profiles.len() as u64) as usize];
+        let pf = FaasPlatform::with_seed(rng.below(100));
+        let cal = Calibration::default();
+        let mem_mb = pf.limits.mem_min_mb
+            + rng.below((pf.limits.mem_max_mb - pf.limits.mem_min_mb) as u64 + 1) as u32;
+        let env = SyncEnv::standard(pf.net_bw_bps(mem_mb));
+        let schemes = [
+            Scheme::SmltHierarchical,
+            Scheme::SirenCentral,
+            Scheme::LambdaMlScatterReduce,
+            Scheme::CirrusPs,
+        ];
+        let scheme = schemes[rng.below(schemes.len() as u64) as usize];
+        let workers = 1 + rng.below(64) as u32;
+        let per_worker_batch = 1 + rng.below(512) as u32;
+        let stages = [2u32, 4, 8][rng.below(3) as usize];
+        let mut prev = f64::INFINITY;
+        for m in [1u32, 2, 4, 8, 16, 32, 64] {
+            let spec = PipelineSpec { stages, micro_batches: m };
+            let (comp, act) = spec.pipelined_iter_s(
+                profile,
+                &cal,
+                &pf,
+                scheme,
+                &env,
+                mem_mb,
+                workers,
+                per_worker_batch,
+            );
+            let t = comp + act;
+            assert!(
+                t <= prev * (1.0 + 1e-12),
+                "{}@S={stages},M={m}: {t} > {prev} (mem={mem_mb}, b={per_worker_batch})",
+                profile.name
+            );
+            prev = t;
+        }
+    });
+}
+
+#[test]
+fn prop_pipeline_search_never_selects_an_infeasible_spec() {
+    // gpt_xl's optimizer residency (3x gradients ~ 14.9 GB) exceeds the
+    // 10 GB per-function cap: data-parallel is infeasible, so the search
+    // must land on a multi-stage spec whose per-stage footprint fits
+    let cap_mb = FaasPlatform::with_seed(0).limits.mem_max_mb;
+    let gpt = ModelProfile::gpt_xl();
+    assert!(
+        !PipelineSpec::default().feasible(&gpt, 1, cap_mb),
+        "precondition: gpt_xl must not fit one function data-parallel"
+    );
+    cases(6, |rng| {
+        let goal = match rng.below(3) {
+            0 => Goal::None,
+            1 => Goal::Fastest,
+            _ => Goal::Budget { s_max: 50.0 + 500.0 * rng.next_f64() },
+        };
+        let global_batch = 64 << rng.below(3); // 64 / 128 / 256
+        let mut j = SimJob::new(
+            SystemKind::Smlt,
+            Workloads::static_run(ModelProfile::gpt_xl(), 3, global_batch),
+        );
+        j.seed = rng.below(1000);
+        j.pipeline_search = true;
+        let out = simulate(&j);
+        let chosen = out.pipeline;
+        assert!(
+            chosen.is_pipelined(),
+            "{goal:?} batch={global_batch}: search kept the infeasible \
+             data-parallel spec ({chosen:?})"
+        );
+        let (_, final_cfg) = *out.config_trace.last().expect("at least one config");
+        let per_worker =
+            (global_batch + final_cfg.workers - 1) / final_cfg.workers.max(1);
+        assert!(
+            chosen.feasible(&gpt, per_worker, cap_mb),
+            "{goal:?}: selected {chosen:?} needs {:.0} MB per stage-worker, \
+             over the {cap_mb} MB cap (workers={})",
+            chosen.stage_need_mb(&gpt, per_worker),
+            final_cfg.workers
+        );
+    });
+}
+
+#[test]
+fn prop_search_on_a_feasible_model_only_ever_picks_candidates() {
+    // whatever the co-optimizer adopts comes from the published grid —
+    // no synthesized specs — and is feasible for the model it scored
+    cases(4, |rng| {
+        let profile = if rng.below(2) == 0 {
+            ModelProfile::resnet18()
+        } else {
+            ModelProfile::bert_medium()
+        };
+        let mut j = SimJob::new(SystemKind::Smlt, Workloads::static_run(profile, 6, 128));
+        j.seed = rng.below(1000);
+        j.pipeline_search = true;
+        j.sync_search = rng.below(2) == 0;
+        let out = simulate(&j);
+        assert!(
+            PipelineSpec::candidates().contains(&out.pipeline),
+            "adopted spec {:?} is not on the candidate grid",
+            out.pipeline
+        );
+    });
+}
