@@ -19,9 +19,19 @@
 //! `bench_out/BENCH_fig14_multitenant.json`; `--check-json <path>`
 //! re-validates an emitted file (CI runs this).
 //!
+//! A traced 8-job fleet closes the run: its spans fold into per-job
+//! time/cost attributions (the `attribution` series — components sum
+//! bit-exactly to each job's duration and bill), the scale sweep repeats
+//! with tracing on for the overhead column (`scales_traced`), and
+//! `--trace-out <path>` exports Perfetto-loadable Chrome trace JSON
+//! (`--check-trace <path>` re-validates one, as CI does via
+//! `scripts/check_trace_json.sh`).
+//!
 //!   cargo bench --bench fig14_multitenant -- --limit 1000 --iters 20
 //!   cargo bench --bench fig14_multitenant -- --scale-max 100000
+//!   cargo bench --bench fig14_multitenant -- --scale-max 10000 --trace-out bench_out/TRACE_fig14_multitenant.json
 //!   cargo bench --bench fig14_multitenant -- --check-json bench_out/BENCH_fig14_multitenant.json
+//!   cargo bench --bench fig14_multitenant -- --check-trace bench_out/TRACE_fig14_multitenant.json
 
 mod common;
 
@@ -30,8 +40,9 @@ use std::time::Instant;
 use smlt::baselines::SystemKind;
 use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
 use smlt::coordinator::{Goal, SimJob, Workloads};
-use smlt::metrics::BillingReport;
+use smlt::metrics::{attribute_fleet, attributed_fleet_cost, BillingReport};
 use smlt::perfmodel::ModelProfile;
+use smlt::trace::{validate_chrome, write_chrome_trace, TraceConfig};
 use smlt::util::cli::Args;
 use smlt::util::json::Json;
 use smlt::util::stats::percentile_sorted;
@@ -45,10 +56,17 @@ fn goal_for(i: usize, deadline_s: f64) -> Goal {
     }
 }
 
-fn build_fleet(n_jobs: usize, account_limit: u32, iters: u64, deadline_s: f64) -> ClusterSim {
+fn build_fleet(
+    n_jobs: usize,
+    account_limit: u32,
+    iters: u64,
+    deadline_s: f64,
+    trace: TraceConfig,
+) -> ClusterSim {
     let mut sim = ClusterSim::new(ClusterParams {
         seed: 2205,
         account_limit,
+        trace,
         ..Default::default()
     });
     let jobs: Vec<SimJob> = (0..n_jobs)
@@ -71,7 +89,7 @@ fn build_fleet(n_jobs: usize, account_limit: u32, iters: u64, deadline_s: f64) -
 }
 
 fn run_fleet(n_jobs: usize, account_limit: u32, iters: u64, deadline_s: f64) -> FleetOutcome {
-    build_fleet(n_jobs, account_limit, iters, deadline_s).run()
+    build_fleet(n_jobs, account_limit, iters, deadline_s, TraceConfig::off()).run()
 }
 
 /// Fraction of jobs whose arrival→completion span fits the nominal
@@ -139,10 +157,46 @@ fn check_json(path: &str) -> ! {
     std::process::exit(0);
 }
 
+/// `--check-trace <path>`: structurally validate a previously emitted
+/// Chrome trace-event JSON (schema, per-track time order, span overlap)
+/// with the same validator the in-tree tests use. Exits non-zero on any
+/// failure so CI can gate on it (`scripts/check_trace_json.sh` calls
+/// this).
+fn check_trace(path: &str) -> ! {
+    fn fail(path: &str, msg: &str) -> ! {
+        eprintln!("FAILED {path}: {msg}");
+        std::process::exit(1);
+    }
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => fail(path, &format!("unreadable ({e})")),
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => fail(path, &format!("parse error ({e})")),
+    };
+    match validate_chrome(&doc) {
+        Ok(stats) => {
+            if stats.spans == 0 {
+                fail(path, "trace contains no spans");
+            }
+            println!(
+                "OK {path}: {} events ({} spans, {} instants) on {} tracks, max ts {:.0} us",
+                stats.events, stats.spans, stats.instants, stats.tracks, stats.max_ts_us
+            );
+            std::process::exit(0);
+        }
+        Err(e) => fail(path, &e),
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     if let Some(path) = args.get("check-json") {
         check_json(path);
+    }
+    if let Some(path) = args.get("check-trace") {
+        check_trace(path);
     }
     let account_limit = args.get_usize("limit", 1000) as u32;
     let iters = args.get_usize("iters", 20) as u64;
@@ -253,6 +307,94 @@ fn main() {
          and preempting best-effort fleets, which absorb the queueing delay."
     );
 
+    // ---- virtual-time tracing: per-job attribution + Chrome export ----
+    //
+    // A small traced fleet (tracing changes nothing but what is
+    // recorded — the observation-only property test pins that): fold
+    // each job's spans into its exact wall-clock and cost decomposition,
+    // and optionally export the whole fleet as Perfetto-loadable Chrome
+    // trace JSON (`--trace-out <path>`, validated by
+    // `scripts/check_trace_json.sh` in CI).
+    let traced_jobs = 8usize;
+    let traced =
+        build_fleet(traced_jobs, account_limit, iters, deadline_s, TraceConfig::on()).run();
+    let atts = attribute_fleet(&traced);
+    let mut at = Table::new(
+        "per-job time attribution (traced 8-job fleet, virtual seconds)",
+        &[
+            "tenant", "total s", "queue", "profile", "init", "compute", "bubble", "comm",
+            "straggle", "restart", "idle", "cost $",
+        ],
+    );
+    for (att, j) in atts.iter().zip(traced.jobs.iter()) {
+        // the acceptance bar: components + residual reproduce the
+        // duration and the bill *bit-exactly*, not approximately
+        assert_eq!(
+            att.time.total_s().to_bits(),
+            j.duration_s().to_bits(),
+            "tenant {}: time attribution must sum exactly to the duration",
+            j.tenant
+        );
+        assert_eq!(
+            att.cost.total().to_bits(),
+            j.outcome.total_cost().to_bits(),
+            "tenant {}: cost attribution must sum exactly to the bill",
+            j.tenant
+        );
+        at.row(&[
+            att.tenant.to_string(),
+            format!("{:.0}", att.time.total_s()),
+            format!("{:.0}", att.time.queueing_s),
+            format!("{:.0}", att.time.profiling_s),
+            format!("{:.1}", att.time.init_s),
+            format!("{:.0}", att.time.compute_s),
+            format!("{:.1}", att.time.bubble_s),
+            format!("{:.0}", att.time.comm_s),
+            format!("{:.1}", att.time.straggler_wait_s),
+            format!("{:.1}", att.time.restart_s),
+            format!("{:.1}", att.time.idle_s),
+            format!("{:.3}", att.cost.total()),
+        ]);
+        report.push(
+            "attribution",
+            &[
+                ("tenant", common::jnum(f64::from(att.tenant))),
+                ("duration_s", common::jnum(att.time.total_s())),
+                ("queueing_s", common::jnum(att.time.queueing_s)),
+                ("profiling_s", common::jnum(att.time.profiling_s)),
+                ("init_s", common::jnum(att.time.init_s)),
+                ("compute_s", common::jnum(att.time.compute_s)),
+                ("bubble_s", common::jnum(att.time.bubble_s)),
+                ("comm_s", common::jnum(att.time.comm_s)),
+                ("straggler_wait_s", common::jnum(att.time.straggler_wait_s)),
+                ("restart_s", common::jnum(att.time.restart_s)),
+                ("unattributed_s", common::jnum(att.time.unattributed_s)),
+                ("cost_profiling", common::jnum(att.cost.profiling)),
+                ("cost_compute", common::jnum(att.cost.compute)),
+                ("cost_comm", common::jnum(att.cost.comm)),
+                ("cost_storage", common::jnum(att.cost.storage)),
+                ("cost_total", common::jnum(att.cost.total())),
+            ],
+        );
+    }
+    at.print();
+    let rebuilt = attributed_fleet_cost(&atts, traced.warm.total_cost());
+    assert_eq!(
+        rebuilt.to_bits(),
+        traced.total_cost().to_bits(),
+        "per-job attributions must reconcile with the billed fleet total"
+    );
+    if let Some(path) = args.get("trace-out") {
+        write_chrome_trace(path, &traced).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let stats = validate_chrome(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("emitted trace failed validation: {e}"));
+        println!(
+            "-> wrote {path}: {} events on {} tracks (load in ui.perfetto.dev)",
+            stats.events, stats.tracks
+        );
+    }
+
     // ---- discrete-event kernel scalability: 10^3 → `--scale-max` jobs ----
     //
     // Same fleet shape as above, shorter jobs (`--scale-iters`), measured
@@ -283,7 +425,7 @@ fn main() {
     );
     let mut last_eps = 0.0_f64;
     for &n_jobs in &scales {
-        let sim = build_fleet(n_jobs, account_limit, scale_iters, deadline_s);
+        let sim = build_fleet(n_jobs, account_limit, scale_iters, deadline_s, TraceConfig::off());
         let t0 = Instant::now();
         let out = sim.run();
         let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
@@ -296,7 +438,8 @@ fn main() {
         let sim_h = out.makespan_s / 3600.0;
         let wall_per_sim_h = wall_s / sim_h.max(1e-9);
         let legacy_eps = if n_jobs <= 1_000 {
-            let sim = build_fleet(n_jobs, account_limit, scale_iters, deadline_s);
+            let sim =
+                build_fleet(n_jobs, account_limit, scale_iters, deadline_s, TraceConfig::off());
             let t0 = Instant::now();
             let legacy = sim.run_legacy_scan();
             let legacy_wall = t0.elapsed().as_secs_f64().max(1e-9);
@@ -333,6 +476,30 @@ fn main() {
             ],
         );
         last_eps = eps;
+
+        // same fleet with tracing on: the recorded-events overhead the
+        // BENCH artifact tracks release over release (events/s delta vs
+        // the untraced run above)
+        let sim = build_fleet(n_jobs, account_limit, scale_iters, deadline_s, TraceConfig::on());
+        let t0 = Instant::now();
+        let traced_out = sim.run();
+        let traced_wall = t0.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(
+            traced_out.events, out.events,
+            "tracing changed the kernel's step count at {n_jobs} jobs"
+        );
+        let traced_eps = traced_out.events as f64 / traced_wall;
+        let trace_events = traced_out.trace.len()
+            + traced_out.jobs.iter().map(|j| j.outcome.trace.len()).sum::<usize>();
+        report.push(
+            "scales_traced",
+            &[
+                ("jobs", common::jnum(n_jobs as f64)),
+                ("events_per_s", common::jnum(traced_eps)),
+                ("overhead_ratio", common::jnum(eps / traced_eps)),
+                ("trace_events", common::jnum(trace_events as f64)),
+            ],
+        );
     }
     st.print();
     report.meta_num("scale_iters", scale_iters as f64);

@@ -25,7 +25,13 @@
 //! `straggler_pinned_s` in [`WarmReport`]), so semi-sync's time win has a
 //! visible warm-layer cost.
 //!
+//! A traced semi-sync fleet under the Pareto tail closes the run: the
+//! `attribution` series splits each job's wall clock into compute /
+//! comm / straggler-wait bit-exactly, and `--trace-out <path>` exports
+//! the fleet as Perfetto-loadable Chrome trace JSON.
+//!
 //!   cargo bench --bench fig18_semisync -- --jobs 8 --iters 16
+//!   cargo bench --bench fig18_semisync -- --trace-out bench_out/TRACE_fig18_semisync.json
 //!
 //! Writes `bench_out/fig18_semisync.csv` + `bench_out/BENCH_fig18_semisync.json`.
 //!
@@ -37,12 +43,16 @@ mod common;
 use smlt::baselines::SystemKind;
 use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, FleetOutcome, TenantQuota};
 use smlt::coordinator::{SimJob, Workloads};
+use smlt::metrics::attribute_fleet;
 use smlt::perfmodel::ModelProfile;
 use smlt::sync::{StragglerModel, SyncPolicy};
+use smlt::trace::{validate_chrome, write_chrome_trace, TraceConfig};
 use smlt::util::cli::Args;
+use smlt::util::json::Json;
 use smlt::util::table::Table;
 use smlt::warm::WarmParams;
 
+#[allow(clippy::too_many_arguments)]
 fn run_fleet(
     system: SystemKind,
     sync: SyncPolicy,
@@ -51,6 +61,7 @@ fn run_fleet(
     n_jobs: usize,
     account_limit: u32,
     iters: u64,
+    trace: TraceConfig,
 ) -> FleetOutcome {
     let mut sim = ClusterSim::new(ClusterParams {
         seed: 2218,
@@ -61,6 +72,7 @@ fn run_fleet(
             prewarm: None,
             bank: None,
         },
+        trace,
         ..Default::default()
     });
     let jobs: Vec<SimJob> = (0..n_jobs)
@@ -159,6 +171,7 @@ fn main() {
                 n_jobs,
                 account_limit,
                 iters,
+                TraceConfig::off(),
             );
             assert!(out.warm.conserves(), "pool accounting must balance");
             for j in &out.jobs {
@@ -278,6 +291,7 @@ fn main() {
                 n_jobs,
                 account_limit,
                 iters,
+                TraceConfig::off(),
             );
             for j in &out.jobs {
                 assert_eq!(j.outcome.iters_done, iters, "tenant {} wedged", j.tenant);
@@ -331,6 +345,66 @@ fn main() {
         }
     }
     at.print();
+
+    // ---- traced semi-sync fleet under the heavy tail: where does the
+    // straggler premium actually land? The attribution series splits
+    // each job's wall clock into compute / comm / straggler-wait (the
+    // realized spread past the no-spread baseline) with components that
+    // sum bit-exactly to the duration; `--trace-out` exports the fleet
+    // as Chrome trace JSON for Perfetto.
+    let traced = run_fleet(
+        SystemKind::LambdaMl,
+        SyncPolicy::SemiSync { k: 24 },
+        false,
+        StragglerModel::Pareto { alpha: 1.3 },
+        n_jobs,
+        account_limit,
+        iters,
+        TraceConfig::on(),
+    );
+    let atts = attribute_fleet(&traced);
+    let mut strag_wait_total = 0.0;
+    for (att, j) in atts.iter().zip(traced.jobs.iter()) {
+        assert_eq!(
+            att.time.total_s().to_bits(),
+            j.duration_s().to_bits(),
+            "tenant {}: time attribution must sum exactly to the duration",
+            j.tenant
+        );
+        assert_eq!(
+            att.cost.total().to_bits(),
+            j.outcome.total_cost().to_bits(),
+            "tenant {}: cost attribution must sum exactly to the bill",
+            j.tenant
+        );
+        strag_wait_total += att.time.straggler_wait_s;
+        bench.push(
+            "attribution",
+            &[
+                ("tenant", common::jnum(f64::from(att.tenant))),
+                ("duration_s", common::jnum(att.time.total_s())),
+                ("compute_s", common::jnum(att.time.compute_s)),
+                ("comm_s", common::jnum(att.time.comm_s)),
+                ("straggler_wait_s", common::jnum(att.time.straggler_wait_s)),
+                ("straggler_premium", common::jnum(att.cost.straggler_premium)),
+                ("cost_total", common::jnum(att.cost.total())),
+            ],
+        );
+    }
+    assert!(
+        strag_wait_total > 0.0,
+        "a Pareto-1.3 semi-sync fleet must record straggler wait somewhere"
+    );
+    if let Some(path) = args.get("trace-out") {
+        write_chrome_trace(path, &traced).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let stats = validate_chrome(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("emitted trace failed validation: {e}"));
+        println!(
+            "-> wrote {path}: {} events on {} tracks (load in ui.perfetto.dev)",
+            stats.events, stats.tracks
+        );
+    }
     println!("-> wrote {}", bench.write());
     println!(
         "-> bulk pays the slowest worker's tail every iteration; closing at the\n   \

@@ -3,14 +3,21 @@
 //! account, outranks the best-effort fleets (preempting one if it must),
 //! and still lands inside its target; everyone else absorbs the queueing.
 //!
+//! With `--trace-out <path>` the whole run is re-recorded through the
+//! virtual-time tracing layer and exported as Chrome trace-event JSON —
+//! load it in ui.perfetto.dev to see each tenant's queueing / profiling /
+//! compute / comm spans against the fleet's kernel track.
+//!
 //! ```text
 //! cargo run --release --example multi_tenant -- --limit 64
+//! cargo run --release --example multi_tenant -- --limit 64 --trace-out trace.json
 //! ```
 
 use smlt::baselines::SystemKind;
 use smlt::cluster::{ArrivalProcess, ClusterParams, ClusterSim, TenantQuota};
 use smlt::coordinator::{Goal, SimJob, Workloads};
 use smlt::perfmodel::ModelProfile;
+use smlt::trace::{write_chrome_trace, TraceConfig};
 use smlt::util::cli::Args;
 use smlt::util::table::Table;
 
@@ -19,10 +26,12 @@ fn main() -> smlt::util::error::Result<()> {
     let limit = args.get_usize("limit", 64) as u32;
     let iters = args.get_usize("iters", 20) as u64;
     let deadline = args.get_f64("deadline", 1800.0);
+    let trace_out = args.get("trace-out");
 
     let mut sim = ClusterSim::new(ClusterParams {
         seed: 11,
         account_limit: limit,
+        trace: if trace_out.is_some() { TraceConfig::on() } else { TraceConfig::off() },
         ..Default::default()
     });
     let goals = [
@@ -98,6 +107,10 @@ fn main() -> smlt::util::error::Result<()> {
                 if j.met_deadline(t_max_s) { "MET" } else { "MISSED" }
             );
         }
+    }
+    if let Some(path) = trace_out {
+        write_chrome_trace(path, &out)?;
+        println!("wrote Chrome trace to {path} (open in ui.perfetto.dev)");
     }
     Ok(())
 }

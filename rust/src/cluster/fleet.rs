@@ -71,6 +71,7 @@ use super::quota::TenantQuota;
 use super::{ClusterEnv, TenantId};
 use crate::coordinator::simrun::{Goal, JobDriver, SimJob, SimOutcome, StepEvent};
 use crate::sync::StragglerModel;
+use crate::trace::{EventKind, TraceConfig, TraceLog, Tracer};
 use crate::util::stats::percentile_sorted;
 use crate::warm::{
     ForecastBank, ForecastSource, ImageId, PrewarmPolicy, WarmParams, WarmReport, WarmState,
@@ -104,6 +105,12 @@ pub struct ClusterParams {
     /// the default [`StragglerModel::None`] draws nothing from the RNG —
     /// bit-identical to the pre-straggler fleet
     pub straggler: StragglerModel,
+    /// virtual-time tracing ([`crate::trace`]): typed span/instant events
+    /// from the drivers, the kernel, and the warm layer, exportable as
+    /// Chrome trace JSON and foldable into per-job time/cost attribution.
+    /// Off by default — the disabled path records nothing and is
+    /// bit-identical to the untraced fleet
+    pub trace: TraceConfig,
 }
 
 impl Default for ClusterParams {
@@ -117,6 +124,7 @@ impl Default for ClusterParams {
             capacity: CapacityTrace::Static,
             warm: WarmParams::default(),
             straggler: StragglerModel::None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -439,6 +447,11 @@ pub struct FleetOutcome {
     /// Bit-identical between the heap kernel and the legacy scan; the
     /// fig14 scale sweep divides this by wall-clock time for events/s
     pub events: u64,
+    /// fleet-level trace events (kernel dispatch, wake-lists, control
+    /// ticks, shocks, prewarms) recorded when [`ClusterParams::trace`]
+    /// was enabled; per-job events live in each
+    /// [`JobOutcome`]'s `outcome.trace`. Empty when tracing is off
+    pub trace: TraceLog,
 }
 
 impl FleetOutcome {
@@ -497,6 +510,7 @@ impl ClusterSim {
         );
         env.warm = WarmState::new(&params.warm);
         env.platform.limits.straggler = params.straggler;
+        env.trace = Tracer::new(&params.trace);
         if let Some(p) = &params.warm.prewarm {
             assert!(
                 p.tick_s > 0.0 && p.lead_s.is_finite(),
@@ -651,6 +665,7 @@ impl ClusterSim {
                     }
                     bank.advance_to(ctl.next_prewarm_s);
                 }
+                self.env.trace.instant(EventKind::ControlTick, ctl.next_prewarm_s);
                 for t in &policy.targets {
                     let desired = policy.desired_from(ctl.learned.as_ref(), t, ctl.next_prewarm_s);
                     self.env.warm.prewarm_to(
@@ -660,6 +675,11 @@ impl ClusterSim {
                         ctl.next_prewarm_s,
                         cold_median,
                     );
+                    if desired > 0 {
+                        self.env
+                            .trace
+                            .instant(EventKind::Prewarm { desired }, ctl.next_prewarm_s);
+                    }
                 }
                 ctl.next_prewarm_s += policy.tick_s;
             }
@@ -729,6 +749,7 @@ impl ClusterSim {
                     },
                 },
             };
+            self.env.trace.instant(EventKind::KernelStep { job: idx as u32 }, frontier);
 
             let releases_before = self.env.pool.releases;
             let t_before = self.jobs[idx].driver.now();
@@ -751,6 +772,7 @@ impl ClusterSim {
             if self.env.pool.releases > releases_before {
                 let t = self.jobs[idx].driver.now();
                 let woke: Vec<u32> = k.blocked.iter().copied().collect();
+                let n_woke = woke.len() as u32;
                 for i in woke {
                     let j = i as usize;
                     k.unpark(j);
@@ -759,6 +781,9 @@ impl ClusterSim {
                     slot.blocked = false;
                     slot.starved_retry = false;
                     k.heap.push(slot.driver.now(), i);
+                }
+                if n_woke > 0 {
+                    self.env.trace.instant(EventKind::Wake { jobs: n_woke }, t);
                 }
             }
             match ev {
@@ -866,6 +891,7 @@ impl ClusterSim {
                     },
                 },
             };
+            self.env.trace.instant(EventKind::KernelStep { job: idx as u32 }, frontier);
 
             let releases_before = self.env.pool.releases;
             let t_before = self.jobs[idx].driver.now();
@@ -878,12 +904,17 @@ impl ClusterSim {
             // (see run() — the semantics and ordering are identical)
             if self.env.pool.releases > releases_before {
                 let t = self.jobs[idx].driver.now();
+                let mut n_woke = 0u32;
                 for slot in self.jobs.iter_mut() {
                     if !slot.finished && slot.blocked {
                         slot.driver.stall_until(t);
                         slot.blocked = false;
                         slot.starved_retry = false;
+                        n_woke += 1;
                     }
+                }
+                if n_woke > 0 {
+                    self.env.trace.instant(EventKind::Wake { jobs: n_woke }, t);
                 }
             }
             match ev {
@@ -1131,6 +1162,9 @@ impl ClusterSim {
         if to == from {
             return;
         }
+        self.env
+            .trace
+            .instant(EventKind::Shock { from_limit: from, to_limit: to }, at_s);
         let mut victim_tenants: Vec<TenantId> = Vec::new();
         let mut reclaimed_slots = 0u32;
         if self.env.pool.excess_over(to) > 0 {
@@ -1256,6 +1290,7 @@ impl ClusterSim {
         // then snapshot the warm layer's run totals
         env.warm.finalize(last_finish);
         let warm = env.warm.report();
+        let trace = env.trace.take_log();
         FleetOutcome {
             jobs,
             makespan_s: if first_arrive.is_finite() {
@@ -1272,6 +1307,7 @@ impl ClusterSim {
             shocks,
             warm,
             events,
+            trace,
         }
     }
 }

@@ -61,6 +61,7 @@ pub use fleet::{ClusterParams, ClusterSim, FleetOutcome, JobOutcome, ShockRecord
 pub use quota::{Acquire, Lease, QuotaPool, TenantId, TenantQuota};
 
 use crate::faas::FaasPlatform;
+use crate::trace::Tracer;
 use crate::warm::WarmState;
 
 /// Shared world state one [`JobDriver`](crate::coordinator::simrun::JobDriver)
@@ -81,6 +82,11 @@ pub struct ClusterEnv {
     /// by `1 + W / saturation`. `f64::INFINITY` disables contention
     /// (single-tenant mode).
     pub storage_saturation_workers: f64,
+    /// Fleet-level event sink of the [`crate::trace`] layer (kernel
+    /// dispatch, control-lane ticks, capacity shocks). [`Tracer::off`]
+    /// (the default) is a strict no-op; per-job drivers carry their own
+    /// sinks, cloned from this one's enabled flag at submission.
+    pub trace: Tracer,
 }
 
 impl ClusterEnv {
@@ -96,6 +102,7 @@ impl ClusterEnv {
             pool,
             warm: WarmState::disabled(),
             storage_saturation_workers: f64::INFINITY,
+            trace: Tracer::off(),
         }
     }
 
@@ -117,6 +124,7 @@ impl ClusterEnv {
             pool: QuotaPool::new(account_limit),
             warm: WarmState::disabled(),
             storage_saturation_workers,
+            trace: Tracer::off(),
         }
     }
 

@@ -5,5 +5,7 @@ pub mod simrun;
 pub mod workload;
 
 pub use endclient::{ArtifactManager, EndClient, ResourceManager};
-pub use simrun::{simulate, Goal, IterModel, JobDriver, SimJob, SimOutcome, StepEvent};
+pub use simrun::{
+    simulate, simulate_traced, Goal, IterModel, JobDriver, SimJob, SimOutcome, StepEvent,
+};
 pub use workload::{Phase, Workloads};

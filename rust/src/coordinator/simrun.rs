@@ -27,6 +27,7 @@ use crate::perfmodel::{compute_time_s, init_time_s, Calibration, Framework, Mode
 use crate::pipeline::PipelineSpec;
 use crate::scheduler::TaskScheduler;
 use crate::sync::{comm_breakdown, SyncEnv, SyncPolicy};
+use crate::trace::{EventKind, TraceLog, Tracer};
 
 /// User-centric goal (§3.2).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -162,6 +163,11 @@ pub struct SimOutcome {
     /// property suite checks the search never selects a spec whose
     /// per-stage footprint exceeds the per-function memory cap
     pub pipeline: PipelineSpec,
+    /// virtual-time trace of the run ([`crate::trace`]): the driver's
+    /// leaf spans tile `[arrive_s, finish_s]` and fold into the exact
+    /// time/cost attribution of [`crate::metrics::attribution`]. Empty
+    /// when tracing was disabled (the default)
+    pub trace: TraceLog,
 }
 
 impl SimOutcome {
@@ -482,6 +488,15 @@ pub struct JobDriver {
     pub warm_hits: u64,
     /// serverless worker launches that paid a cold start
     pub cold_starts: u64,
+    /// per-job event sink of the [`crate::trace`] layer; enabled iff the
+    /// environment's tracer was enabled at submission. Every `t_now`
+    /// advance below emits exactly one leaf span into it, so a traced
+    /// job's spans tile `[arrive_s, finish_s]` gap-free — the invariant
+    /// the attribution pass and the Perfetto export both build on
+    trace: Tracer,
+    /// when the phase currently being processed began (its
+    /// [`EventKind::PhaseSpan`] start)
+    phase_t0: f64,
 }
 
 impl JobDriver {
@@ -520,6 +535,8 @@ impl JobDriver {
         };
         let scheduler = TaskScheduler::new(pipeline_active.total_functions(cfg.workers));
         let sync_active = job.sync;
+        let mut trace = if env.trace.enabled() { Tracer::on() } else { Tracer::off() };
+        trace.instant(EventKind::Submit, arrive_s);
         JobDriver {
             job,
             tenant,
@@ -559,6 +576,8 @@ impl JobDriver {
             bo_probes: 0,
             warm_hits: 0,
             cold_starts: 0,
+            trace,
+            phase_t0: arrive_s,
         }
     }
 
@@ -616,6 +635,7 @@ impl JobDriver {
     pub fn stall_until(&mut self, t: f64) {
         if t > self.t_now {
             self.stalled_s += t - self.t_now;
+            self.trace.span(EventKind::Queued, self.t_now, t);
             self.t_now = t;
         }
     }
@@ -635,6 +655,7 @@ impl JobDriver {
             // checkouts until then (straggler pinning, WarmReport)
             let late = self.straggler_late.min(n);
             env.warm.checkin(self.job.image_id(), self.fleet_mem_mb, n - late, self.t_now);
+            self.trace.instant(EventKind::WarmCheckin { n: n - late }, self.t_now);
             if late > 0 {
                 env.warm.checkin_late(
                     self.job.image_id(),
@@ -642,6 +663,13 @@ impl JobDriver {
                     late,
                     self.t_now,
                     self.t_now + self.straggler_lag_s,
+                );
+                self.trace.instant(
+                    EventKind::WarmCheckinLate {
+                        n: late,
+                        ready_s: self.t_now + self.straggler_lag_s,
+                    },
+                    self.t_now,
                 );
             }
         }
@@ -662,6 +690,7 @@ impl JobDriver {
         }
         self.fleet_started = false;
         self.preemptions += 1;
+        self.trace.instant(EventKind::Preempt, self.t_now);
         if matches!(self.state, DriverState::Iterate) {
             self.state = DriverState::AwaitSlots;
         }
@@ -704,18 +733,24 @@ impl JobDriver {
     fn phase_start(&mut self, env: &mut ClusterEnv) -> StepEvent {
         if self.phase_idx >= self.job.phases.len() {
             self.retire_fleet(env);
+            self.trace.instant(EventKind::Done { iters: self.iters_done }, self.t_now);
             self.state = DriverState::Finished;
             return StepEvent::Finished;
         }
         let phase = self.job.phases[self.phase_idx].clone();
+        // phase_start runs exactly once per phase (a blocked acquisition
+        // re-enters at AwaitSlots), so this anchors the phase's span
+        self.phase_t0 = self.t_now;
 
         // ---- idle gap (online learning): VMs pay, serverless doesn't
         if phase.idle_before_s > 0.0 {
+            let idle_t0 = self.t_now;
             self.t_now += phase.idle_before_s;
             if self.job.system.pays_idle() {
                 self.ledger
                     .add_vm(&self.pricing, self.cfg.workers, phase.idle_before_s);
             }
+            self.trace.span(EventKind::Idle, idle_t0, self.t_now);
         }
 
         // ---- adaptation decision
@@ -730,6 +765,11 @@ impl JobDriver {
             self.job.system.adaptive() && config_changed && phase.iters > 0
         };
         if phase.iters == 0 {
+            self.trace.span(
+                EventKind::PhaseSpan { phase: self.phase_idx as u32, iters: 0 },
+                self.phase_t0,
+                self.t_now,
+            );
             self.phase_idx += 1;
             return StepEvent::Progressed;
         }
@@ -845,8 +885,10 @@ impl JobDriver {
             let res = bo.search(&mut obj, &SearchSpec::from_weighted_prior(&prior));
             self.bo_probes += res.evaluations as u64;
             // profiling wall time + money
+            let probe_t0 = self.t_now;
             self.profiling_time_s += res.profiling_s;
             self.t_now += res.profiling_s;
+            let mut probe_cost = 0.0f64;
             for (c, _) in &res.trace {
                 let probe_s = obj.eval_cost_s(*c);
                 if self.job.system.is_serverless() {
@@ -858,6 +900,13 @@ impl JobDriver {
                         c.mem_mb,
                         probe_s,
                     );
+                    if self.trace.enabled() {
+                        probe_cost += self.pricing.lambda_cost(
+                            self.pipeline_active.total_functions(c.workers),
+                            c.mem_mb,
+                            probe_s,
+                        );
+                    }
                 } else {
                     // VM probes must provision a fleet and run a whole
                     // training trial before tearing down (~10 min each) —
@@ -866,8 +915,16 @@ impl JobDriver {
                     // total" [paper §1, citing MLCD/Yi et al.]
                     self.ledger
                         .add_vm(&self.pricing, c.workers, probe_s.max(600.0));
+                    if self.trace.enabled() {
+                        probe_cost += self.pricing.vm_cost(c.workers, probe_s.max(600.0));
+                    }
                 }
             }
+            self.trace.span(
+                EventKind::Probe { probes: res.evaluations, cost: probe_cost },
+                probe_t0,
+                self.t_now,
+            );
             if first_active {
                 self.ledger.mark_profiling(&self.pricing);
             }
@@ -983,7 +1040,7 @@ impl JobDriver {
                 self.scheduler.resize(self.fleet_funcs());
             }
         }
-        self.config_trace.push((self.iters_done, self.cfg));
+        self.note_reconfig();
 
         // ---- per-phase iteration model
         let model = IterModel {
@@ -1059,7 +1116,10 @@ impl JobDriver {
             self.retire_fleet(env);
             let want = self.fleet_funcs();
             match env.pool.try_acquire(self.tenant, want) {
-                Acquire::Granted(id) => self.lease = Some(id),
+                Acquire::Granted(id) => {
+                    self.lease = Some(id);
+                    self.trace.instant(EventKind::Leased { funcs: want }, self.t_now);
+                }
                 Acquire::Denied { .. } => return StepEvent::Blocked { want },
             }
         }
@@ -1109,8 +1169,14 @@ impl JobDriver {
                 self.bo_probes += res.evaluations as u64;
                 self.cfg = res.best;
                 // quick refresh probes, not a full profiling pass
-                self.t_now += res.profiling_s.min(60.0);
-                self.profiling_time_s += res.profiling_s.min(60.0);
+                let dt = res.profiling_s.min(60.0);
+                self.trace.span(
+                    EventKind::Probe { probes: res.evaluations, cost: 0.0 },
+                    self.t_now,
+                    self.t_now + dt,
+                );
+                self.t_now += dt;
+                self.profiling_time_s += dt;
                 let (comp, comm) = obj.model.iter_time(self.cfg);
                 self.comp_s = comp;
                 self.comm_s = comm;
@@ -1125,7 +1191,19 @@ impl JobDriver {
         }
         self.cfg.workers = self.cfg.workers.min(cap).max(1);
         self.scheduler.resize(self.fleet_funcs());
+        self.note_reconfig();
+    }
+
+    /// Record a configuration adoption in one place: the config trace,
+    /// the live `reconfigurations` counter, and (when tracing) a
+    /// [`EventKind::Reconfig`] instant — so the three can never drift.
+    fn note_reconfig(&mut self) {
         self.config_trace.push((self.iters_done, self.cfg));
+        self.metrics.reconfigurations += 1;
+        self.trace.instant(
+            EventKind::Reconfig { workers: self.cfg.workers, mem_mb: self.cfg.mem_mb },
+            self.t_now,
+        );
     }
 
     fn invoke_fleet(&mut self, env: &mut ClusterEnv) -> StepEvent {
@@ -1145,8 +1223,11 @@ impl JobDriver {
             // under memory-keyed matching only containers parked with the
             // fleet's own memory size serve (exact Lambda semantics); the
             // default pool matches by image alone
-            env.warm
-                .checkout(self.job.image_id(), self.cfg.mem_mb, funcs, self.t_now)
+            let h = env
+                .warm
+                .checkout(self.job.image_id(), self.cfg.mem_mb, funcs, self.t_now);
+            self.trace.instant(EventKind::WarmCheckout { want: funcs, hits: h }, self.t_now);
+            h
         } else {
             0
         };
@@ -1172,7 +1253,9 @@ impl JobDriver {
         } else {
             self.init_s
         };
+        let init_t0 = self.t_now;
         self.t_now += slowest + init_eff;
+        self.trace.span(EventKind::Init { funcs, warm_hits: hits }, init_t0, self.t_now);
         env.platform.release_workers(funcs);
         self.fleet_mem_mb = self.cfg.mem_mb;
         self.fleet_started = true;
@@ -1257,12 +1340,18 @@ impl JobDriver {
                         if switched {
                             self.cfg = res.best;
                             self.scheduler.resize(self.fleet_funcs());
-                            self.t_now += res.profiling_s.min(60.0);
-                            self.profiling_time_s += res.profiling_s.min(60.0);
+                            let dt = res.profiling_s.min(60.0);
+                            self.trace.span(
+                                EventKind::Probe { probes: res.evaluations, cost: 0.0 },
+                                self.t_now,
+                                self.t_now + dt,
+                            );
+                            self.t_now += dt;
+                            self.profiling_time_s += dt;
                             let (a, b) = obj.model.iter_time(self.cfg);
                             self.comp_s = a;
                             self.comm_s = b;
-                            self.config_trace.push((self.iters_done, self.cfg));
+                            self.note_reconfig();
                         }
                     }
                 }
@@ -1295,12 +1384,19 @@ impl JobDriver {
         let mut extra = 0.0;
         let mut restarted = 0;
         if self.job.system.is_serverless() {
+            let fails_before = self.scheduler.failures_detected;
             let (r, add) = self.scheduler.lifecycle_step(
                 &mut env.platform,
                 &mut self.injector,
                 (self.comp_s + comm_eff) * wall_r,
                 self.init_s,
             );
+            let new_fails = self.scheduler.failures_detected - fails_before;
+            if new_fails > 0 {
+                self.metrics.failures_detected += new_fails;
+                self.trace
+                    .instant(EventKind::Failure { workers: new_fails as u32 }, self.t_now);
+            }
             restarted = r;
             extra = if self.job.system.amortizes_init() {
                 add
@@ -1346,6 +1442,74 @@ impl JobDriver {
             batch_global: phase.global_batch,
             restarted_workers: restarted,
         });
+        // ---- trace decomposition: tile [t_now, t_now + iter_total] into
+        // useful compute / pipeline bubble / communication / straggler
+        // spread / restart segments. Observation only — nothing below
+        // feeds back into time, billing, or RNG state — and fully inside
+        // the enabled() guard, so the disabled path stays bit-identical.
+        if self.trace.enabled() {
+            let t0 = self.t_now;
+            let t1 = t0 + iter_total;
+            // restart/re-init overhead occupies the tail [r0, t1]
+            let r0 = t1 - extra;
+            let (wf, bubble_f) = if self.job.system.is_serverless() {
+                let n = self.cfg.workers.max(1);
+                let k = self.sync_active.effective_k(n);
+                (
+                    env.platform.limits.straggler.expected_kth(k, n),
+                    self.pipeline_active.bubble_factor(),
+                )
+            } else {
+                (1.0, 1.0)
+            };
+            // comp_s already folds in the expected straggler spread and
+            // the pipeline bubble; peel both back out to size the useful-
+            // work segment, and let the monotone clamp chain absorb any
+            // lucky (below-expectation) draw
+            let compute_useful = (self.comp_s / wf) / bubble_f;
+            let bubble = (self.comp_s / wf) - compute_useful;
+            let comm_ns = comm_eff / wf;
+            let e1 = (t0 + compute_useful).min(r0);
+            let e2 = (e1 + bubble).min(r0);
+            let e3 = (e2 + comm_ns).min(r0);
+            if e1 > t0 {
+                self.trace.span(EventKind::Compute, t0, e1);
+            }
+            if e2 > e1 {
+                self.trace.span(EventKind::Bubble, e1, e2);
+            }
+            if e3 > e2 {
+                self.trace.span(EventKind::Comm, e2, e3);
+            }
+            // straggler premium: the billed tail past this iteration's
+            // wall time (semi-sync stragglers billed to their own
+            // completion) — zero whenever billing and wall coincide
+            let premium = if self.job.system.is_serverless() && billed_r != wall_r {
+                let wall_s = (self.comp_s + comm_eff) * wall_r + extra;
+                let billed_s = (self.comp_s + comm_eff) * billed_r + extra;
+                self.pricing
+                    .lambda_cost(self.fleet_funcs(), self.cfg.mem_mb, billed_s)
+                    - self.pricing.lambda_cost(self.fleet_funcs(), self.cfg.mem_mb, wall_s)
+            } else {
+                0.0
+            };
+            if r0 > e3 || premium != 0.0 {
+                self.trace
+                    .span(EventKind::StragglerWait { premium_cost: premium }, e3, r0.max(e3));
+            }
+            if t1 > r0 {
+                self.trace.span(EventKind::Restart { workers: restarted }, r0, t1);
+            }
+            if self.pipeline_active.is_pipelined() {
+                self.trace.instant(
+                    EventKind::StageHandoff {
+                        stages: self.pipeline_active.stages,
+                        micro_batches: self.pipeline_active.micro_batches,
+                    },
+                    t0,
+                );
+            }
+        }
         self.t_now += iter_total;
         self.yield_sum += self.sync_active.yield_at(self.cfg.workers, i);
         self.iters_done += 1;
@@ -1355,6 +1519,11 @@ impl JobDriver {
             // periodic data fetch from the object store (one GET per
             // worker per phase — epoch-granular, §4.3)
             self.ledger.add_s3(self.cfg.workers as u64, 0);
+            self.trace.span(
+                EventKind::PhaseSpan { phase: self.phase_idx as u32, iters: phase.iters },
+                self.phase_t0,
+                self.t_now,
+            );
             self.phase_idx += 1;
             self.state = DriverState::PhaseStart;
         }
@@ -1371,8 +1540,11 @@ impl JobDriver {
             self.lease.is_none(),
             "harvesting a driver that still holds a slot lease — preempt() it first"
         );
-        self.metrics.reconfigurations = self.config_trace.len() as u64;
-        self.metrics.failures_detected = self.scheduler.failures_detected;
+        // both counters are now incremented live (note_reconfig, the
+        // lifecycle delta in iterate) — these pin the two bookkeeping
+        // paths to each other
+        debug_assert_eq!(self.metrics.reconfigurations, self.config_trace.len() as u64);
+        debug_assert_eq!(self.metrics.failures_detected, self.scheduler.failures_detected);
         SimOutcome {
             system: self.job.system,
             metrics: self.metrics,
@@ -1387,6 +1559,7 @@ impl JobDriver {
             config_trace: self.config_trace,
             update_yield_sum: self.yield_sum,
             pipeline: self.pipeline_active,
+            trace: self.trace.into_log(),
         }
     }
 }
@@ -1395,6 +1568,26 @@ impl JobDriver {
 /// deterministic given `job.seed`.
 pub fn simulate(job: &SimJob) -> SimOutcome {
     let mut env = ClusterEnv::single(job.seed);
+    let mut driver = JobDriver::new(job.clone(), 0, &env, 0.0);
+    loop {
+        match driver.step(&mut env) {
+            StepEvent::Finished => break,
+            StepEvent::Progressed => {}
+            StepEvent::Blocked { want } => {
+                unreachable!("single-tenant pool denied {want} slots")
+            }
+        }
+    }
+    driver.into_outcome()
+}
+
+/// [`simulate`] with the tracing layer on: identical virtual-time outcome
+/// (tracing is observation-only), plus a populated `outcome.trace` whose
+/// leaf spans tile `[0, total_time_s]` — the input the attribution pass
+/// ([`crate::metrics::attribution`]) and the Chrome exporter consume.
+pub fn simulate_traced(job: &SimJob) -> SimOutcome {
+    let mut env = ClusterEnv::single(job.seed);
+    env.trace = Tracer::on();
     let mut driver = JobDriver::new(job.clone(), 0, &env, 0.0);
     loop {
         match driver.step(&mut env) {

@@ -44,8 +44,13 @@
 //!   profiling-posterior bank (with age-based staleness discounting)
 //!   that seeds repeat jobs' Bayesian searches.
 //! - [`baselines`] — Siren, Cirrus, LambdaML, MLCD, IaaS comparators.
-//! - [`metrics`] — run recorders, CSV emission, and per-tenant
-//!   fairness / shock-degradation roll-ups.
+//! - [`metrics`] — run recorders, CSV emission, per-tenant
+//!   fairness / shock-degradation roll-ups, and the per-job
+//!   time/cost attribution pass over recorded traces.
+//! - [`trace`] — virtual-time tracing layer: typed span/instant events
+//!   from the driver, fleet kernel, warm pool, and pipeline paths
+//!   (off by default, strict no-op when disabled), with a Chrome
+//!   trace-event / Perfetto JSON exporter and validator.
 //! - [`util`] — PRNG, JSON, CLI, stats, error plumbing
 //!   (offline-registry substitutes).
 
@@ -63,6 +68,7 @@ pub mod scheduler;
 pub mod simclock;
 pub mod storage;
 pub mod sync;
+pub mod trace;
 pub mod util;
 pub mod warm;
 pub mod worker;

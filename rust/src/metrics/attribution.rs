@@ -1,0 +1,286 @@
+//! Exact per-job time and cost attribution over recorded traces.
+//!
+//! Folds a traced job's leaf spans ([`crate::trace`]) into a wall-clock
+//! decomposition (queueing / idle / profiling / init / compute / bubble /
+//! comm / straggler wait / restart) and its billing ledger into a cost
+//! decomposition (profiling / compute / straggler premium / comm /
+//! storage) — each with an explicit `unattributed` residual computed as
+//! the *last term* of a pinned-order fold:
+//!
+//! ```text
+//! partial       = b1 + b2 + ... + bk          (fixed order)
+//! unattributed  = total - partial
+//! ```
+//!
+//! `total_s()` / `total()` re-run the identical fold and add the residual
+//! back, so they reproduce the job's `duration_s` / `total_cost()`
+//! **bit-exactly** (`==` on `to_bits()`, not an epsilon): whenever
+//! `partial` lands within a factor of two of the total — guaranteed by
+//! complete span coverage, since the driver emits a leaf span for every
+//! virtual-clock advance — Sterbenz's lemma makes `total - partial`
+//! exact, and the final add cancels back to `total` exactly. The residual
+//! also soaks ordinary float noise from re-tiling the per-iteration
+//! segments, so it doubles as a quality signal: large `unattributed`
+//! means missing spans, not rounding.
+//!
+//! The pass is read-only and works on any [`JobOutcome`] /
+//! [`SimOutcome`]; untraced runs simply attribute everything to the
+//! residual (still bit-exact).
+
+use crate::cluster::{FleetOutcome, JobOutcome, TenantId};
+use crate::coordinator::simrun::SimOutcome;
+use crate::costmodel::{CostLedger, Pricing};
+use crate::trace::{EventKind, TimeBucket, TraceLog};
+
+/// Wall-clock decomposition of one job's arrival-to-completion span.
+/// All fields in virtual seconds; `total_s()` reproduces the job's
+/// duration bit-exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimeAttribution {
+    /// waiting for slots in the shared account's queue
+    pub queueing_s: f64,
+    /// declared idle gaps between phases (online-learning traces)
+    pub idle_s: f64,
+    /// Bayesian-optimizer probe time (initial search + re-optimizations)
+    pub profiling_s: f64,
+    /// fleet launch: cold/warm startup delay + framework init
+    pub init_s: f64,
+    /// useful gradient computation (straggler spread and pipeline
+    /// bubble peeled out)
+    pub compute_s: f64,
+    /// pipeline fill/drain bubble
+    pub bubble_s: f64,
+    /// gradient synchronization (param-store / object-store traffic)
+    pub comm_s: f64,
+    /// waiting on stragglers past the no-spread baseline
+    pub straggler_wait_s: f64,
+    /// failure-recovery overhead on the critical path
+    pub restart_s: f64,
+    /// residual: `duration - (sum of the above)`, exactly
+    pub unattributed_s: f64,
+}
+
+impl TimeAttribution {
+    /// Pinned-order partial sum of the named buckets (no residual).
+    fn partial(&self) -> f64 {
+        self.queueing_s
+            + self.idle_s
+            + self.profiling_s
+            + self.init_s
+            + self.compute_s
+            + self.bubble_s
+            + self.comm_s
+            + self.straggler_wait_s
+            + self.restart_s
+    }
+
+    /// Total of all components including the residual — bitwise equal to
+    /// the `duration_s` this attribution was computed from.
+    pub fn total_s(&self) -> f64 {
+        self.partial() + self.unattributed_s
+    }
+}
+
+/// Dollar decomposition of one job's bill; `total()` reproduces the
+/// job's `total_cost()` bit-exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostAttribution {
+    /// optimizer probe spend (serverless probe fleets / VM trial fleets)
+    pub profiling: f64,
+    /// training execution spend (lambda + VM, minus probes and the
+    /// straggler premium)
+    pub compute: f64,
+    /// billed straggler tails past each iteration's wall time
+    /// (semi-sync: stragglers billed to their own completion)
+    pub straggler_premium: f64,
+    /// parameter-store traffic
+    pub comm: f64,
+    /// object-store requests
+    pub storage: f64,
+    /// residual: `total_cost - (sum of the above)`, exactly
+    pub unattributed: f64,
+}
+
+impl CostAttribution {
+    fn partial(&self) -> f64 {
+        self.profiling + self.compute + self.straggler_premium + self.comm + self.storage
+    }
+
+    /// Total including the residual — bitwise equal to the job's
+    /// `total_cost()`.
+    pub fn total(&self) -> f64 {
+        self.partial() + self.unattributed
+    }
+}
+
+/// One job's complete attribution.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct JobAttribution {
+    pub tenant: TenantId,
+    pub time: TimeAttribution,
+    pub cost: CostAttribution,
+}
+
+fn attribute_parts(
+    trace: &TraceLog,
+    duration_s: f64,
+    ledger: &CostLedger,
+    pricing: &Pricing,
+    total_cost: f64,
+) -> (TimeAttribution, CostAttribution) {
+    let mut time = TimeAttribution {
+        queueing_s: trace.bucket_sum_s(TimeBucket::Queueing),
+        idle_s: trace.bucket_sum_s(TimeBucket::Idle),
+        profiling_s: trace.bucket_sum_s(TimeBucket::Profiling),
+        init_s: trace.bucket_sum_s(TimeBucket::Init),
+        compute_s: trace.bucket_sum_s(TimeBucket::Compute),
+        bubble_s: trace.bucket_sum_s(TimeBucket::Bubble),
+        comm_s: trace.bucket_sum_s(TimeBucket::Comm),
+        straggler_wait_s: trace.bucket_sum_s(TimeBucket::StragglerWait),
+        restart_s: trace.bucket_sum_s(TimeBucket::Restart),
+        unattributed_s: 0.0,
+    };
+    time.unattributed_s = duration_s - time.partial();
+
+    // probe spend and straggler premiums ride the trace (the ledger
+    // aggregates them into lambda_compute / vm); everything else comes
+    // from the ledger's own categories
+    let mut profiling = 0.0f64;
+    let mut premium = 0.0f64;
+    for e in &trace.events {
+        match e.kind {
+            EventKind::Probe { cost, .. } => profiling += cost,
+            EventKind::StragglerWait { premium_cost } => premium += cost_nonnan(premium_cost),
+            _ => {}
+        }
+    }
+    let mut cost = CostAttribution {
+        profiling,
+        compute: (ledger.lambda_compute + ledger.vm) - profiling - premium,
+        straggler_premium: premium,
+        comm: ledger.param_store,
+        storage: ledger.s3_cost(pricing),
+        unattributed: 0.0,
+    };
+    cost.unattributed = total_cost - cost.partial();
+    (time, cost)
+}
+
+/// NaN guard for payload sums: a NaN premium would poison the whole
+/// decomposition; treat it as zero and let the residual absorb it.
+fn cost_nonnan(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// Attribute one fleet job: its trace spans against
+/// `duration_s() = finish_s - arrive_s`, its ledger against
+/// `outcome.total_cost()`.
+pub fn attribute_job(j: &JobOutcome) -> JobAttribution {
+    let (time, cost) = attribute_parts(
+        &j.outcome.trace,
+        j.duration_s(),
+        &j.outcome.ledger,
+        &j.outcome.pricing,
+        j.outcome.total_cost(),
+    );
+    JobAttribution { tenant: j.tenant, time, cost }
+}
+
+/// Attribute a single-tenant run (`simulate` / `simulate_traced`): the
+/// job arrives at t = 0, so its duration is `total_time_s`.
+pub fn attribute_sim(out: &SimOutcome) -> JobAttribution {
+    let (time, cost) = attribute_parts(
+        &out.trace,
+        out.total_time_s,
+        &out.ledger,
+        &out.pricing,
+        out.total_cost(),
+    );
+    JobAttribution { tenant: 0, time, cost }
+}
+
+/// Attribute every job of a fleet run, in `jobs` order.
+pub fn attribute_fleet(out: &FleetOutcome) -> Vec<JobAttribution> {
+    out.jobs.iter().map(attribute_job).collect()
+}
+
+/// Reconstruct the fleet's billed grand total from per-job attributions
+/// plus the shared warm-pool cost — the same left fold as
+/// [`FleetOutcome::total_cost`], so when each job's `cost.total()`
+/// reproduces its bill exactly, this reproduces the fleet total (and the
+/// [`BillingReport`](crate::metrics::BillingReport) grand total pinned
+/// to it) exactly too.
+pub fn attributed_fleet_cost(atts: &[JobAttribution], warm_cost: f64) -> f64 {
+    atts.iter().map(|a| a.cost.total()).sum::<f64>() + warm_cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::SystemKind;
+    use crate::coordinator::simrun::{simulate, simulate_traced, SimJob};
+    use crate::coordinator::Workloads;
+    use crate::perfmodel::ModelProfile;
+
+    fn quick_job(system: SystemKind) -> SimJob {
+        let phases = Workloads::static_run(ModelProfile::bert_small(), 60, 256);
+        SimJob::new(system, phases)
+    }
+
+    #[test]
+    fn traced_single_job_attribution_is_bit_exact() {
+        let job = quick_job(SystemKind::Smlt);
+        let out = simulate_traced(&job);
+        assert!(!out.trace.is_empty(), "traced run must record events");
+        let att = attribute_sim(&out);
+        assert_eq!(
+            att.time.total_s().to_bits(),
+            out.total_time_s.to_bits(),
+            "time components + residual must reproduce the duration exactly"
+        );
+        assert_eq!(
+            att.cost.total().to_bits(),
+            out.total_cost().to_bits(),
+            "cost components + residual must reproduce the bill exactly"
+        );
+        // the leaf spans cover the whole run: the residual is float
+        // noise, not a missing category
+        assert!(
+            att.time.unattributed_s.abs() < 1e-6 * out.total_time_s.max(1.0),
+            "unattributed {} vs duration {}",
+            att.time.unattributed_s,
+            out.total_time_s
+        );
+        assert!(att.time.compute_s > 0.0);
+        assert!(att.time.profiling_s > 0.0, "SMLT profiles its initial config");
+        assert!(att.cost.compute > 0.0);
+    }
+
+    #[test]
+    fn untraced_run_attributes_everything_to_the_residual() {
+        let job = quick_job(SystemKind::Smlt);
+        let out = simulate(&job);
+        assert!(out.trace.is_empty());
+        let att = attribute_sim(&out);
+        assert_eq!(att.time.partial(), 0.0);
+        assert_eq!(att.time.unattributed_s.to_bits(), out.total_time_s.to_bits());
+        assert_eq!(att.time.total_s().to_bits(), out.total_time_s.to_bits());
+        assert_eq!(att.cost.total().to_bits(), out.total_cost().to_bits());
+    }
+
+    #[test]
+    fn tracing_never_changes_the_outcome() {
+        for sys in [SystemKind::Smlt, SystemKind::Mlcd] {
+            let job = quick_job(sys);
+            let a = simulate(&job);
+            let b = simulate_traced(&job);
+            assert_eq!(a.total_time_s.to_bits(), b.total_time_s.to_bits());
+            assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+            assert_eq!(a.iters_done, b.iters_done);
+        }
+    }
+}

@@ -1,10 +1,17 @@
 //! Run metrics: per-iteration records + aggregation for EXPERIMENTS.md,
-//! per-tenant fairness / shock-degradation roll-ups ([`fairness`]), and
-//! the per-tenant billing view of a fleet run ([`billing`]).
+//! per-tenant fairness / shock-degradation roll-ups ([`fairness`]), the
+//! per-tenant billing view of a fleet run ([`billing`]), and the exact
+//! per-job time/cost attribution pass over recorded traces
+//! ([`attribution`]).
 
+pub mod attribution;
 pub mod billing;
 pub mod fairness;
 
+pub use attribution::{
+    attribute_fleet, attribute_job, attribute_sim, attributed_fleet_cost, CostAttribution,
+    JobAttribution, TimeAttribution,
+};
 pub use billing::{BillingReport, TenantBill};
 pub use fairness::{dominant_share, jain_index, FairnessReport, SloMiss, TenantFairness};
 
@@ -81,7 +88,12 @@ impl RunMetrics {
     }
 
     /// Throughput (samples/s) over a trailing window ending at `iter`.
+    /// 0.0 when no records exist (an empty run has no throughput — and
+    /// `records.len() - 1` would underflow).
     pub fn throughput_at(&self, idx: usize, window: usize) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
         let lo = idx.saturating_sub(window.saturating_sub(1));
         let slice = &self.records[lo..=idx.min(self.records.len() - 1)];
         let samples: f64 = slice.iter().map(|r| r.batch_global as f64).sum();
@@ -105,7 +117,10 @@ impl RunMetrics {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "iter,t_start,compute_s,comm_s,loss,workers,mem_mb,batch_global,restarts")?;
+        writeln!(
+            f,
+            "iter,t_start,compute_s,comm_s,loss,workers,mem_mb,batch_global,restarted_workers"
+        )?;
         for r in &self.records {
             writeln!(
                 f,
@@ -153,6 +168,13 @@ mod tests {
     }
 
     #[test]
+    fn throughput_on_empty_run_is_zero() {
+        let m = RunMetrics::default();
+        assert_eq!(m.throughput_at(0, 8), 0.0);
+        assert_eq!(m.throughput_at(5, 1), 0.0);
+    }
+
+    #[test]
     fn restart_counting() {
         let mut m = RunMetrics::default();
         m.push(IterRecord { restarted_workers: 3, ..Default::default() });
@@ -178,6 +200,15 @@ mod tests {
         m.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.lines().count() == 2);
-        assert!(text.contains("iter,"));
+        let header = text.lines().next().unwrap();
+        let row = text.lines().nth(1).unwrap();
+        assert_eq!(
+            header.split(',').count(),
+            row.split(',').count(),
+            "header and rows must have the same arity"
+        );
+        // the last column holds per-iteration restarted_workers, not the
+        // run-level restart total — the header must say so
+        assert_eq!(header.split(',').last().unwrap(), "restarted_workers");
     }
 }

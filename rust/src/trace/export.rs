@@ -1,0 +1,382 @@
+//! Chrome trace-event JSON export (Perfetto-loadable) and its validator.
+//!
+//! [`chrome_trace`] renders a finished [`FleetOutcome`]'s recorded
+//! [`TraceLog`]s in the Chrome trace-event format (the JSON flavor both
+//! `chrome://tracing` and [Perfetto](https://ui.perfetto.dev) load):
+//! one *process* per tenant (pid = tenant + 1) plus a fleet-level
+//! process (pid 0) for kernel/control events, and one *thread* per
+//! [`Lane`] inside each process. Span kinds become `"X"` complete
+//! events, instants become `"i"`, and `"M"` metadata events name every
+//! track. Virtual seconds map to trace microseconds (`ts = t * 1e6`).
+//!
+//! [`validate_chrome`] is the schema / monotonicity / span-nesting
+//! checker behind `scripts/check_trace_json.sh` and the fig14
+//! `--check-trace` mode: it re-parses an emitted file and verifies the
+//! event grammar, that timestamps are finite and non-negative, and that
+//! the spans on each (pid, tid) track are disjoint in emission order —
+//! the tracing layer emits leaf spans as a gap-free *sequential* tiling
+//! per track, so any overlap is an emitter bug. Exactly-abutting `f64`
+//! spans round to microseconds independently, so the disjointness check
+//! allows [`OVERLAP_SLACK_US`] of slop (an ulp at simulated hours is
+//! ~2e-5 us — 1 us is three orders of magnitude of headroom). Instants
+//! are exempt from ordering: fleet wake events carry the *woken* jobs'
+//! park times, which are not globally ordered even though the kernel's
+//! frontier is.
+//!
+//! [`FleetOutcome`]: crate::cluster::FleetOutcome
+
+use std::collections::BTreeMap;
+
+use super::{EventKind, Lane, TraceEvent, TraceLog};
+use crate::cluster::FleetOutcome;
+use crate::util::json::Json;
+
+/// Tolerated overlap between consecutive spans on one track, in trace
+/// microseconds (independent rounding of exactly-abutting `f64` span
+/// edges — see the module docs).
+pub const OVERLAP_SLACK_US: f64 = 1.0;
+
+/// What [`validate_chrome`] measured while checking a trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceStats {
+    /// total events, metadata included
+    pub events: usize,
+    /// `"X"` complete events
+    pub spans: usize,
+    /// `"i"` instant events
+    pub instants: usize,
+    /// distinct (pid, tid) tracks carrying spans or instants
+    pub tracks: usize,
+    /// largest `ts + dur` seen, in trace microseconds
+    pub max_ts_us: f64,
+}
+
+fn lane_tid(lane: Lane) -> u32 {
+    match lane {
+        Lane::Lifecycle => 0,
+        Lane::Activity => 1,
+        Lane::Warm => 2,
+        Lane::Kernel => 3,
+        Lane::Control => 4,
+    }
+}
+
+fn lane_name(lane: Lane) -> &'static str {
+    match lane {
+        Lane::Lifecycle => "lifecycle",
+        Lane::Activity => "activity",
+        Lane::Warm => "warm",
+        Lane::Kernel => "kernel",
+        Lane::Control => "control",
+    }
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn uint(x: u32) -> Json {
+    Json::Num(x as f64)
+}
+
+/// The typed payload of `kind`, as a Chrome `args` object (`None` for
+/// payload-free kinds).
+fn args_for(kind: &EventKind) -> Option<Json> {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    match kind {
+        EventKind::Probe { probes, cost } => {
+            m.insert("probes".into(), uint(*probes));
+            m.insert("cost_usd".into(), num(*cost));
+        }
+        EventKind::Init { funcs, warm_hits } => {
+            m.insert("funcs".into(), uint(*funcs));
+            m.insert("warm_hits".into(), uint(*warm_hits));
+        }
+        EventKind::StragglerWait { premium_cost } => {
+            m.insert("premium_usd".into(), num(*premium_cost));
+        }
+        EventKind::Restart { workers } | EventKind::Failure { workers } => {
+            m.insert("workers".into(), uint(*workers));
+        }
+        EventKind::PhaseSpan { phase, iters } => {
+            m.insert("phase".into(), uint(*phase));
+            m.insert("iters".into(), num(*iters as f64));
+        }
+        EventKind::Leased { funcs } => {
+            m.insert("funcs".into(), uint(*funcs));
+        }
+        EventKind::Reconfig { workers, mem_mb } => {
+            m.insert("workers".into(), uint(*workers));
+            m.insert("mem_mb".into(), uint(*mem_mb));
+        }
+        EventKind::StageHandoff { stages, micro_batches } => {
+            m.insert("stages".into(), uint(*stages));
+            m.insert("micro_batches".into(), uint(*micro_batches));
+        }
+        EventKind::Done { iters } => {
+            m.insert("iters".into(), num(*iters as f64));
+        }
+        EventKind::WarmCheckout { want, hits } => {
+            m.insert("want".into(), uint(*want));
+            m.insert("hits".into(), uint(*hits));
+        }
+        EventKind::WarmCheckin { n } => {
+            m.insert("n".into(), uint(*n));
+        }
+        EventKind::WarmCheckinLate { n, ready_s } => {
+            m.insert("n".into(), uint(*n));
+            m.insert("ready_s".into(), num(*ready_s));
+        }
+        EventKind::Prewarm { desired } => {
+            m.insert("desired".into(), uint(*desired));
+        }
+        EventKind::KernelStep { job } => {
+            m.insert("job".into(), uint(*job));
+        }
+        EventKind::Wake { jobs } => {
+            m.insert("jobs".into(), uint(*jobs));
+        }
+        EventKind::Shock { from_limit, to_limit } => {
+            m.insert("from_limit".into(), uint(*from_limit));
+            m.insert("to_limit".into(), uint(*to_limit));
+        }
+        EventKind::Queued
+        | EventKind::Idle
+        | EventKind::Compute
+        | EventKind::Bubble
+        | EventKind::Comm
+        | EventKind::Submit
+        | EventKind::Preempt
+        | EventKind::ControlTick => return None,
+    }
+    Some(Json::Obj(m))
+}
+
+/// One recorded event as a Chrome trace-event object on track
+/// (`pid`, tid = its lane).
+fn event_json(e: &TraceEvent, pid: u32) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("name".into(), Json::Str(e.kind.name().into()));
+    m.insert("cat".into(), Json::Str(lane_name(e.kind.lane()).into()));
+    m.insert("pid".into(), uint(pid));
+    m.insert("tid".into(), uint(lane_tid(e.kind.lane())));
+    m.insert("ts".into(), num(e.t0 * 1e6));
+    if e.kind.is_span() {
+        m.insert("ph".into(), Json::Str("X".into()));
+        m.insert("dur".into(), num((e.t1 - e.t0) * 1e6));
+    } else {
+        m.insert("ph".into(), Json::Str("i".into()));
+        m.insert("s".into(), Json::Str("t".into()));
+    }
+    if let Some(args) = args_for(&e.kind) {
+        m.insert("args".into(), args);
+    }
+    Json::Obj(m)
+}
+
+/// `"M"` metadata event: `process_name` / `thread_name` labels.
+fn meta_json(what: &str, pid: u32, tid: Option<u32>, label: &str) -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("name".into(), Json::Str(what.into()));
+    m.insert("ph".into(), Json::Str("M".into()));
+    m.insert("pid".into(), uint(pid));
+    if let Some(t) = tid {
+        m.insert("tid".into(), uint(t));
+    }
+    let mut args: BTreeMap<String, Json> = BTreeMap::new();
+    args.insert("name".into(), Json::Str(label.into()));
+    m.insert("args".into(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+fn push_log(events: &mut Vec<Json>, log: &TraceLog, pid: u32, proc_label: &str) {
+    if log.is_empty() {
+        return;
+    }
+    events.push(meta_json("process_name", pid, None, proc_label));
+    let mut lanes_seen: Vec<Lane> = Vec::new();
+    for e in &log.events {
+        let lane = e.kind.lane();
+        if !lanes_seen.contains(&lane) {
+            lanes_seen.push(lane);
+            events.push(meta_json("thread_name", pid, Some(lane_tid(lane)), lane_name(lane)));
+        }
+        events.push(event_json(e, pid));
+    }
+}
+
+/// Render a finished fleet's recorded trace as a Chrome trace-event
+/// JSON document (`{"traceEvents": [...]}`). Empty-but-valid when the
+/// fleet ran with tracing disabled.
+pub fn chrome_trace(out: &FleetOutcome) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    push_log(&mut events, &out.trace, 0, "fleet");
+    for j in &out.jobs {
+        let pid = j.tenant + 1;
+        push_log(&mut events, &j.outcome.trace, pid, &format!("tenant {}", j.tenant));
+    }
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
+    top.insert("traceEvents".into(), Json::Arr(events));
+    top.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(top)
+}
+
+/// [`chrome_trace`] straight to a file (parent directories created).
+pub fn write_chrome_trace(path: &str, out: &FleetOutcome) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(out).to_string_pretty())
+}
+
+/// Validate a Chrome trace-event document: the schema every event must
+/// follow, finite non-negative timestamps, and per-track span
+/// disjointness (see the module docs for the slack rationale). Returns
+/// what it measured, or the first violation.
+pub fn validate_chrome(doc: &Json) -> Result<TraceStats, String> {
+    let events = doc
+        .get("traceEvents")
+        .ok_or("top-level object must carry \"traceEvents\"")?
+        .as_arr()
+        .ok_or("\"traceEvents\" must be an array")?;
+    let mut stats = TraceStats::default();
+    // per-(pid, tid) end of the last span, in trace microseconds
+    let mut track_end: BTreeMap<(u64, u64), (f64, f64)> = BTreeMap::new();
+    let mut tracks: BTreeMap<(u64, u64), ()> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ctx = |msg: String| format!("event {i}: {msg}");
+        let obj = e.as_obj().ok_or_else(|| ctx("not an object".into()))?;
+        let name = obj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| ctx("missing \"name\"".into()))?;
+        if name.is_empty() {
+            return Err(ctx("empty \"name\"".into()));
+        }
+        let ph = obj
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| ctx("missing \"ph\"".into()))?;
+        stats.events += 1;
+        match ph {
+            "M" => continue, // metadata carries no timeline
+            "X" | "i" => {}
+            other => return Err(ctx(format!("unknown phase {other:?}"))),
+        }
+        let pid = obj
+            .get("pid")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| ctx("missing numeric \"pid\"".into()))?;
+        let tid = obj
+            .get("tid")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| ctx("missing numeric \"tid\"".into()))?;
+        let ts = obj
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| ctx("missing numeric \"ts\"".into()))?;
+        if !ts.is_finite() || ts < 0.0 {
+            return Err(ctx(format!("bad ts {ts}")));
+        }
+        let track = (pid.to_bits(), tid.to_bits());
+        tracks.insert(track, ());
+        if ph == "i" {
+            stats.instants += 1;
+            stats.max_ts_us = stats.max_ts_us.max(ts);
+            continue;
+        }
+        stats.spans += 1;
+        let dur = obj
+            .get("dur")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| ctx("\"X\" event missing numeric \"dur\"".into()))?;
+        if !dur.is_finite() || dur < 0.0 {
+            return Err(ctx(format!("bad dur {dur}")));
+        }
+        stats.max_ts_us = stats.max_ts_us.max(ts + dur);
+        if let Some(&(prev_ts, prev_end)) = track_end.get(&track) {
+            if ts < prev_ts {
+                return Err(ctx(format!(
+                    "span starts at {ts} us, before the previous span's start {prev_ts} us \
+                     on track ({pid}, {tid}) — tracks must be emitted in time order"
+                )));
+            }
+            if ts + OVERLAP_SLACK_US < prev_end {
+                return Err(ctx(format!(
+                    "span starts at {ts} us, inside the previous span ending {prev_end} us \
+                     on track ({pid}, {tid}) — sibling spans must not overlap"
+                )));
+            }
+        }
+        track_end.insert(track, (ts, ts + dur));
+    }
+    stats.tracks = tracks.len();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(pid: f64, tid: f64, ts: f64, dur: f64) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("name".into(), Json::Str("compute".into()));
+        m.insert("ph".into(), Json::Str("X".into()));
+        m.insert("pid".into(), Json::Num(pid));
+        m.insert("tid".into(), Json::Num(tid));
+        m.insert("ts".into(), Json::Num(ts));
+        m.insert("dur".into(), Json::Num(dur));
+        Json::Obj(m)
+    }
+
+    fn doc(events: Vec<Json>) -> Json {
+        let mut top: BTreeMap<String, Json> = BTreeMap::new();
+        top.insert("traceEvents".into(), Json::Arr(events));
+        Json::Obj(top)
+    }
+
+    #[test]
+    fn validator_accepts_disjoint_spans_and_counts_tracks() {
+        let d = doc(vec![
+            span(1.0, 0.0, 0.0, 10.0),
+            span(1.0, 0.0, 10.0, 5.0),
+            span(2.0, 0.0, 3.0, 4.0),
+        ]);
+        let stats = validate_chrome(&d).unwrap();
+        assert_eq!(stats.spans, 3);
+        assert_eq!(stats.instants, 0);
+        assert_eq!(stats.tracks, 2);
+        assert_eq!(stats.max_ts_us, 15.0);
+    }
+
+    #[test]
+    fn validator_rejects_overlap_beyond_slack() {
+        let d = doc(vec![span(1.0, 0.0, 0.0, 10.0), span(1.0, 0.0, 5.0, 2.0)]);
+        let err = validate_chrome(&d).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+        // within-slack abutment rounding is tolerated
+        let ok = doc(vec![span(1.0, 0.0, 0.0, 10.0), span(1.0, 0.0, 9.5, 2.0)]);
+        assert!(validate_chrome(&ok).is_ok());
+    }
+
+    #[test]
+    fn validator_rejects_schema_violations() {
+        assert!(validate_chrome(&Json::Num(3.0)).is_err());
+        assert!(validate_chrome(&doc(vec![Json::Num(1.0)])).is_err());
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("name".into(), Json::Str("x".into()));
+        m.insert("ph".into(), Json::Str("Q".into()));
+        assert!(validate_chrome(&doc(vec![Json::Obj(m)])).is_err());
+        // an X event with a negative duration
+        assert!(validate_chrome(&doc(vec![span(1.0, 0.0, 0.0, -1.0)])).is_err());
+    }
+
+    #[test]
+    fn empty_trace_document_is_valid() {
+        let stats = validate_chrome(&doc(Vec::new())).unwrap();
+        assert_eq!(stats.events, 0);
+        assert_eq!(stats.tracks, 0);
+    }
+}

@@ -1,0 +1,465 @@
+//! Virtual-time tracing layer: typed span/instant events from every
+//! layer of the simulator, recorded on the jobs' **virtual** clocks.
+//!
+//! The simulator's headline numbers ([`FleetOutcome`], `BenchReport`) are
+//! end-of-run aggregates; every "where did the time go" question so far
+//! has been answered from closed forms instead of observation. This
+//! module records what actually happened: the [`JobDriver`] emits one
+//! leaf span per virtual-clock advance (queueing, idle gaps, profiling
+//! probes, cold-start/init, and a per-iteration compute / bubble / comm /
+//! straggler-wait / restart tiling), plus lifecycle instants (submit,
+//! lease, reconfig, preempt, failure, done); the fleet kernel emits
+//! dispatch instants (heap pops, wake-lists, control-lane ticks,
+//! capacity shocks); the warm layer's checkout / check-in / late
+//! check-in / prewarm traffic is stamped at its call sites.
+//!
+//! Two consumers:
+//! - [`export`] renders a finished fleet as Chrome trace-event JSON
+//!   (Perfetto-loadable, one track per tenant plus a fleet-level track),
+//!   via the zero-dependency [`crate::util::json`] writer;
+//! - [`crate::metrics::attribution`] folds a job's leaf spans into an
+//!   exact wall-clock and cost decomposition that sums **bit-exactly**
+//!   (`==`, not approximately) to
+//!   [`JobOutcome::duration_s`](crate::cluster::JobOutcome::duration_s)
+//!   and the billed total.
+//!
+//! # The disabled path is a strict no-op
+//!
+//! Tracing is **off by default** ([`TraceConfig::default`]). A disabled
+//! [`Tracer`] allocates nothing, draws nothing from any RNG, reads no
+//! clock, and performs none of the decomposition arithmetic — every
+//! emit site is guarded by [`Tracer::on`], so the disabled simulator
+//! executes the exact pre-trace instruction stream. Tracing *enabled*
+//! is observation-only: it never feeds back into scheduling, billing,
+//! or the RNG, so traced runs produce bitwise-identical outcomes too —
+//! both contracts are pinned by `rust/tests/trace_proptests.rs`.
+//!
+//! # Leaf spans tile the job's timeline
+//!
+//! Every `t_now` advance in the driver is covered by exactly one leaf
+//! span `[t_before, t_after]`, so a traced job's leaf spans tile
+//! `[arrive_s, finish_s]` with no gaps and no overlaps (per-iteration
+//! sub-segments are laid out cumulatively with a monotone clamp, so a
+//! lucky straggler draw — a sampled k-th order statistic *below* its
+//! expectation — collapses the straggler-wait segment to zero width
+//! instead of going negative). That construction is what makes both the
+//! Perfetto nesting validation and the attribution pass's bit-exact
+//! closure possible.
+//!
+//! [`FleetOutcome`]: crate::cluster::FleetOutcome
+//! [`JobDriver`]: crate::coordinator::simrun::JobDriver
+
+pub mod export;
+
+pub use export::{chrome_trace, validate_chrome, write_chrome_trace, TraceStats};
+
+/// Tracing knob on [`ClusterParams`](crate::cluster::ClusterParams) (and,
+/// via [`simulate_traced`](crate::coordinator::simrun::simulate_traced),
+/// on single-job runs). The default is **off** — the strict-no-op path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// record typed span/instant events in virtual time
+    pub enabled: bool,
+}
+
+impl TraceConfig {
+    /// Tracing off (the default): the strict no-op, bit-identical path.
+    pub fn off() -> TraceConfig {
+        TraceConfig { enabled: false }
+    }
+
+    /// Tracing on: record events from every layer.
+    pub fn on() -> TraceConfig {
+        TraceConfig { enabled: true }
+    }
+}
+
+/// Which track a kind renders on in the Chrome export. Leaf spans are
+/// strictly sequential within [`Lane::Activity`] by construction (each
+/// covers one virtual-clock advance), which is what the span-nesting
+/// validation in `scripts/check_trace_json.sh` leans on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// phase spans + job lifecycle instants
+    Lifecycle,
+    /// leaf spans: the gap-free tiling of the job's timeline
+    Activity,
+    /// warm-pool checkout / check-in / prewarm traffic
+    Warm,
+    /// fleet-kernel dispatch: heap pops, wake-lists
+    Kernel,
+    /// control lane: capacity shocks, prewarm ticks
+    Control,
+}
+
+/// Attribution bucket a leaf span's duration folds into — the categories
+/// of [`TimeAttribution`](crate::metrics::attribution::TimeAttribution),
+/// one per leaf-span kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeBucket {
+    Queueing,
+    Idle,
+    Profiling,
+    Init,
+    Compute,
+    Bubble,
+    Comm,
+    StragglerWait,
+    Restart,
+}
+
+/// Typed payload of one trace event. Span kinds carry `[t0, t1]` on the
+/// owning [`TraceEvent`]; instant kinds have `t1 == t0`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    // ---- leaf spans (Activity lane): tile [arrive_s, finish_s] ----
+    /// parked waiting for concurrency slots (queue wait)
+    Queued,
+    /// declared idle gap between phases (online-learning traces)
+    Idle,
+    /// live Bayesian profiling probes; `cost` is the $ the probes billed
+    /// (0 for the unbilled refresh probes of mid-run re-optimization)
+    Probe { probes: u32, cost: f64 },
+    /// fleet (re)invocation: slowest startup delay + framework init
+    Init { funcs: u32, warm_hits: u32 },
+    /// useful compute (net of the pipeline bubble and straggler spread)
+    Compute,
+    /// pipeline fill/drain bubble share of the compute leg
+    Bubble,
+    /// gradient-synchronization communication
+    Comm,
+    /// realized straggler spread past the no-spread baseline; the
+    /// billed-vs-wall lambda premium of the iteration rides along
+    StragglerWait { premium_cost: f64 },
+    /// worker restart overhead on the critical path
+    Restart { workers: u32 },
+
+    // ---- lifecycle (per-job) ----
+    /// job submitted (driver constructed) at its arrival time
+    Submit,
+    /// a whole training phase, preamble included
+    PhaseSpan { phase: u32, iters: u64 },
+    /// slot lease granted
+    Leased { funcs: u32 },
+    /// configuration adopted (phase start, quota refit, deadline guard)
+    Reconfig { workers: u32, mem_mb: u32 },
+    /// fleet revoked by a higher-class job or a capacity shock
+    Preempt,
+    /// worker failures detected by the lifecycle protocol this iteration
+    Failure { workers: u32 },
+    /// pipeline stage handoff pattern in force this iteration
+    StageHandoff { stages: u32, micro_batches: u32 },
+    /// job complete
+    Done { iters: u64 },
+
+    // ---- warm layer ----
+    WarmCheckout { want: u32, hits: u32 },
+    WarmCheckin { n: u32 },
+    /// sync-policy straggler pinning: containers checking in late
+    WarmCheckinLate { n: u32, ready_s: f64 },
+    Prewarm { desired: u32 },
+
+    // ---- fleet kernel (fleet-level track) ----
+    /// one scheduler dispatch (heap pop / forced retry) of job `job`
+    KernelStep { job: u32 },
+    /// release-driven wake of `jobs` parked jobs
+    Wake { jobs: u32 },
+    /// prewarm control-lane tick
+    ControlTick,
+    /// capacity changepoint applied (account limit moved)
+    Shock { from_limit: u32, to_limit: u32 },
+}
+
+impl EventKind {
+    /// Short stable name for the Chrome export / validators.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Idle => "idle",
+            EventKind::Probe { .. } => "probe",
+            EventKind::Init { .. } => "init",
+            EventKind::Compute => "compute",
+            EventKind::Bubble => "bubble",
+            EventKind::Comm => "comm",
+            EventKind::StragglerWait { .. } => "straggler_wait",
+            EventKind::Restart { .. } => "restart",
+            EventKind::Submit => "submit",
+            EventKind::PhaseSpan { .. } => "phase",
+            EventKind::Leased { .. } => "leased",
+            EventKind::Reconfig { .. } => "reconfig",
+            EventKind::Preempt => "preempt",
+            EventKind::Failure { .. } => "failure",
+            EventKind::StageHandoff { .. } => "stage_handoff",
+            EventKind::Done { .. } => "done",
+            EventKind::WarmCheckout { .. } => "warm_checkout",
+            EventKind::WarmCheckin { .. } => "warm_checkin",
+            EventKind::WarmCheckinLate { .. } => "warm_checkin_late",
+            EventKind::Prewarm { .. } => "prewarm",
+            EventKind::KernelStep { .. } => "kernel_step",
+            EventKind::Wake { .. } => "wake",
+            EventKind::ControlTick => "control_tick",
+            EventKind::Shock { .. } => "shock",
+        }
+    }
+
+    /// The track this kind renders on.
+    pub fn lane(&self) -> Lane {
+        match self {
+            EventKind::Queued
+            | EventKind::Idle
+            | EventKind::Probe { .. }
+            | EventKind::Init { .. }
+            | EventKind::Compute
+            | EventKind::Bubble
+            | EventKind::Comm
+            | EventKind::StragglerWait { .. }
+            | EventKind::Restart { .. } => Lane::Activity,
+            EventKind::Submit
+            | EventKind::PhaseSpan { .. }
+            | EventKind::Leased { .. }
+            | EventKind::Reconfig { .. }
+            | EventKind::Preempt
+            | EventKind::Failure { .. }
+            | EventKind::StageHandoff { .. }
+            | EventKind::Done { .. } => Lane::Lifecycle,
+            EventKind::WarmCheckout { .. }
+            | EventKind::WarmCheckin { .. }
+            | EventKind::WarmCheckinLate { .. }
+            | EventKind::Prewarm { .. } => Lane::Warm,
+            EventKind::KernelStep { .. } | EventKind::Wake { .. } => Lane::Kernel,
+            EventKind::ControlTick | EventKind::Shock { .. } => Lane::Control,
+        }
+    }
+
+    /// Attribution bucket for leaf spans; `None` for lifecycle / warm /
+    /// kernel kinds (they carry no exclusive wall-clock).
+    pub fn bucket(&self) -> Option<TimeBucket> {
+        match self {
+            EventKind::Queued => Some(TimeBucket::Queueing),
+            EventKind::Idle => Some(TimeBucket::Idle),
+            EventKind::Probe { .. } => Some(TimeBucket::Profiling),
+            EventKind::Init { .. } => Some(TimeBucket::Init),
+            EventKind::Compute => Some(TimeBucket::Compute),
+            EventKind::Bubble => Some(TimeBucket::Bubble),
+            EventKind::Comm => Some(TimeBucket::Comm),
+            EventKind::StragglerWait { .. } => Some(TimeBucket::StragglerWait),
+            EventKind::Restart { .. } => Some(TimeBucket::Restart),
+            _ => None,
+        }
+    }
+
+    /// Whether the kind is a span (renders as a Chrome `"X"` complete
+    /// event) rather than an instant (`"i"`).
+    pub fn is_span(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Queued
+                | EventKind::Idle
+                | EventKind::Probe { .. }
+                | EventKind::Init { .. }
+                | EventKind::Compute
+                | EventKind::Bubble
+                | EventKind::Comm
+                | EventKind::StragglerWait { .. }
+                | EventKind::Restart { .. }
+                | EventKind::PhaseSpan { .. }
+        )
+    }
+}
+
+/// One recorded event: a kind plus its virtual-time extent. Instants
+/// have `t1 == t0`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl TraceEvent {
+    /// Span width in virtual seconds (0 for instants).
+    pub fn dur_s(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// The event sink: one per [`JobDriver`] (its own lifecycle + activity +
+/// warm events) and one on the [`ClusterEnv`] (fleet-level kernel and
+/// control events). Disabled ([`Tracer::off`], the default) it is a
+/// strict no-op: no allocation, no event construction — emit sites guard
+/// on [`on`](Self::on) so even the events' payload arithmetic is skipped.
+///
+/// [`JobDriver`]: crate::coordinator::simrun::JobDriver
+/// [`ClusterEnv`]: crate::cluster::ClusterEnv
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    enabled: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl Tracer {
+    /// The disabled no-op sink (the default).
+    pub fn off() -> Tracer {
+        Tracer { enabled: false, events: Vec::new() }
+    }
+
+    /// An enabled sink.
+    pub fn on() -> Tracer {
+        Tracer { enabled: true, events: Vec::new() }
+    }
+
+    /// Build from a [`TraceConfig`].
+    pub fn new(cfg: &TraceConfig) -> Tracer {
+        if cfg.enabled {
+            Tracer::on()
+        } else {
+            Tracer::off()
+        }
+    }
+
+    /// Whether events are being recorded. Emit sites with non-trivial
+    /// payload arithmetic (the per-iteration decomposition) must check
+    /// this first so the disabled path does zero extra work.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Alias of [`enabled`](Self::enabled) reading naturally in guards.
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record a span `[t0, t1]`. No-op when disabled.
+    #[inline]
+    pub fn span(&mut self, kind: EventKind, t0: f64, t1: f64) {
+        if self.enabled {
+            debug_assert!(t1 >= t0, "span {} runs backwards: [{t0}, {t1}]", kind.name());
+            self.events.push(TraceEvent { kind, t0, t1 });
+        }
+    }
+
+    /// Record an instant at `t`. No-op when disabled.
+    #[inline]
+    pub fn instant(&mut self, kind: EventKind, t: f64) {
+        if self.enabled {
+            self.events.push(TraceEvent { kind, t0: t, t1: t });
+        }
+    }
+
+    /// Events recorded so far.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Consume the tracer into its log.
+    pub fn into_log(self) -> TraceLog {
+        TraceLog { events: self.events }
+    }
+
+    /// Move the recorded events out, leaving the tracer empty (same
+    /// enabled flag).
+    pub fn take_log(&mut self) -> TraceLog {
+        TraceLog { events: std::mem::take(&mut self.events) }
+    }
+}
+
+/// A finished run's recorded events, in emission order (per-source
+/// virtual-time order: each driver's log is monotone on its own clock).
+/// Empty when tracing was disabled.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceLog {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Summed duration of leaf spans folding into `bucket`, in emission
+    /// order — the attribution pass's per-category accumulator.
+    pub fn bucket_sum_s(&self, bucket: TimeBucket) -> f64 {
+        let mut s = 0.0f64;
+        for e in &self.events {
+            if e.kind.bucket() == Some(bucket) {
+                s += e.t1 - e.t0;
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::off();
+        t.span(EventKind::Compute, 0.0, 1.0);
+        t.instant(EventKind::Submit, 0.0);
+        assert!(!t.enabled());
+        assert!(t.events().is_empty());
+        assert!(t.into_log().is_empty());
+    }
+
+    #[test]
+    fn enabled_tracer_records_in_order() {
+        let mut t = Tracer::new(&TraceConfig::on());
+        t.instant(EventKind::Submit, 0.0);
+        t.span(EventKind::Queued, 0.0, 2.0);
+        t.span(EventKind::Compute, 2.0, 5.0);
+        let log = t.into_log();
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.events[1].dur_s(), 2.0);
+        assert_eq!(log.bucket_sum_s(TimeBucket::Queueing), 2.0);
+        assert_eq!(log.bucket_sum_s(TimeBucket::Compute), 3.0);
+        assert_eq!(log.bucket_sum_s(TimeBucket::Comm), 0.0);
+    }
+
+    #[test]
+    fn every_kind_has_a_lane_and_spans_have_buckets_or_are_phases() {
+        let kinds = [
+            EventKind::Queued,
+            EventKind::Idle,
+            EventKind::Probe { probes: 1, cost: 0.0 },
+            EventKind::Init { funcs: 4, warm_hits: 0 },
+            EventKind::Compute,
+            EventKind::Bubble,
+            EventKind::Comm,
+            EventKind::StragglerWait { premium_cost: 0.0 },
+            EventKind::Restart { workers: 1 },
+            EventKind::Submit,
+            EventKind::PhaseSpan { phase: 0, iters: 4 },
+            EventKind::Leased { funcs: 4 },
+            EventKind::Reconfig { workers: 4, mem_mb: 2048 },
+            EventKind::Preempt,
+            EventKind::Failure { workers: 1 },
+            EventKind::StageHandoff { stages: 2, micro_batches: 4 },
+            EventKind::Done { iters: 4 },
+            EventKind::WarmCheckout { want: 4, hits: 2 },
+            EventKind::WarmCheckin { n: 4 },
+            EventKind::WarmCheckinLate { n: 1, ready_s: 10.0 },
+            EventKind::Prewarm { desired: 2 },
+            EventKind::KernelStep { job: 0 },
+            EventKind::Wake { jobs: 2 },
+            EventKind::ControlTick,
+            EventKind::Shock { from_limit: 64, to_limit: 32 },
+        ];
+        for k in kinds {
+            assert!(!k.name().is_empty());
+            // leaf spans (Activity lane) are exactly the bucketed kinds
+            assert_eq!(k.lane() == Lane::Activity, k.bucket().is_some(), "{}", k.name());
+            // bucketed kinds must render as spans
+            if k.bucket().is_some() {
+                assert!(k.is_span(), "{}", k.name());
+            }
+        }
+    }
+}

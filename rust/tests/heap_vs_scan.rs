@@ -20,6 +20,7 @@ use smlt::cluster::{
 };
 use smlt::coordinator::{Goal, SimJob, Workloads};
 use smlt::perfmodel::ModelProfile;
+use smlt::trace::TraceConfig;
 use smlt::util::rng::Pcg;
 use smlt::warm::{
     ForecastConfig, ForecastSource, PoolConfig, PrewarmPolicy, PrewarmTarget, WarmParams,
@@ -108,6 +109,10 @@ fn build_fleet(case_seed: u64) -> ClusterSim {
         arbiter,
         capacity,
         warm,
+        // tracing on in half the cases: both kernels must emit the very
+        // same event stream, not just the same outcomes
+        trace: if rng.next_f64() < 0.5 { TraceConfig::on() } else { TraceConfig::off() },
+        ..Default::default()
     });
     let goals = [
         Goal::None,
@@ -183,9 +188,20 @@ fn prop_heap_kernel_bit_identical_to_legacy_scan() {
             assert_eq!(x.outcome.total_cost().to_bits(), y.outcome.total_cost().to_bits());
             assert_eq!(x.outcome.iters_done, y.outcome.iters_done);
             assert_eq!(x.outcome.config_trace, y.outcome.config_trace);
+            assert_eq!(
+                x.outcome.trace.events, y.outcome.trace.events,
+                "tenant {} recorded different trace streams (seed {case_seed})",
+                x.tenant
+            );
         }
         assert_eq!(heap.warm.hits, scan.warm.hits);
         assert_eq!(heap.warm.misses, scan.warm.misses);
         assert_eq!(heap.warm.prewarm_spawns, scan.warm.prewarm_spawns);
+        // the fleet-level kernel/control tracks (KernelStep, Wake,
+        // ControlTick, Shock) must also agree event-for-event
+        assert_eq!(
+            heap.trace.events, scan.trace.events,
+            "fleet kernels recorded different trace streams (seed {case_seed})"
+        );
     });
 }

@@ -1,0 +1,282 @@
+//! The tracing layer's contract, pinned on randomized fleets:
+//!
+//! 1. **Observation only.** A traced run and an untraced run of the same
+//!    fleet produce bit-identical outcomes — finish times, costs, shock
+//!    records. Tracing may never feed back into scheduling, billing, or
+//!    RNG state; and with `TraceConfig::off()` (the default) the sinks
+//!    record nothing at all.
+//! 2. **Exact attribution.** Each traced job's time components sum back
+//!    to its `duration_s` and its cost components to its `total_cost()`
+//!    with `==` on bits, not an epsilon; the per-job cost totals re-fold
+//!    into the fleet's billed grand total (the one `BillingReport` pins)
+//!    bit-exactly too.
+//! 3. **Round-trippable export.** The Chrome trace-event document
+//!    survives `to_string_pretty` → `parse` unchanged and passes the
+//!    structural validator (the same checks `scripts/check_trace_json.sh`
+//!    runs in CI).
+//! 4. **Live counters.** `reconfigurations` / `failures_detected` are
+//!    incremented on the driver's live paths and agree with the recorded
+//!    `reconfig` / `failure` events.
+
+mod common;
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::cluster::{
+    ArbiterKind, CapacityTrace, ClusterParams, ClusterSim, FleetOutcome, TenantQuota,
+};
+use smlt::coordinator::{simulate, simulate_traced, Goal, SimJob, Workloads};
+use smlt::metrics::{attribute_fleet, attribute_sim, attributed_fleet_cost, BillingReport};
+use smlt::perfmodel::ModelProfile;
+use smlt::pipeline::PipelineSpec;
+use smlt::sync::{StragglerModel, SyncPolicy};
+use smlt::trace::{chrome_trace, validate_chrome, EventKind, TraceConfig};
+use smlt::util::json::Json;
+use smlt::util::rng::Pcg;
+use smlt::warm::{PoolConfig, WarmParams};
+
+fn tiny_job(system: SystemKind, seed: u64, goal: Goal, rng: &mut Pcg) -> SimJob {
+    let mut j = SimJob::new(
+        system,
+        Workloads::static_run(ModelProfile::resnet18(), 6 + rng.below(8), 128),
+    );
+    j.seed = seed;
+    j.goal = goal;
+    // exercise the decomposition's straggler / pipeline / failure legs
+    if rng.next_f64() < 0.4 {
+        j.sync = SyncPolicy::SemiSync { k: 6 };
+    }
+    if rng.next_f64() < 0.3 {
+        j.pipeline = PipelineSpec { stages: 2, micro_batches: 4 };
+    }
+    if rng.next_f64() < 0.3 {
+        j.hazard_per_s = 1e-4;
+    }
+    j
+}
+
+/// A randomized fleet over the knobs the tracer instruments: arbiters,
+/// capacity shocks, warm pool, stragglers, semi-sync, pipelining,
+/// failure injection. Deterministic given `case_seed`.
+fn build_fleet(case_seed: u64, trace: TraceConfig) -> ClusterSim {
+    let mut rng = Pcg::new(case_seed);
+    let account_limit = 8 + rng.below(100) as u32;
+    let arbiter = match rng.below(3) {
+        0 => ArbiterKind::GoalClass,
+        1 => ArbiterKind::WeightedFair { starvation_bound_s: f64::INFINITY },
+        _ => ArbiterKind::Drf { starvation_bound_s: 1200.0 },
+    };
+    let capacity = if rng.next_f64() < 0.5 {
+        CapacityTrace::Static
+    } else {
+        CapacityTrace::Step { at_s: 120.0 + rng.uniform(0.0, 600.0), to: 4 + rng.below(12) as u32 }
+    };
+    let warm = if rng.next_f64() < 0.5 {
+        WarmParams::default()
+    } else {
+        WarmParams {
+            pool: Some(PoolConfig { ttl_s: 900.0, ..Default::default() }),
+            prewarm: None,
+            bank: None,
+        }
+    };
+    let straggler = if rng.next_f64() < 0.4 {
+        StragglerModel::Pareto { alpha: 2.5 }
+    } else {
+        StragglerModel::None
+    };
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: rng.below(1 << 20),
+        account_limit,
+        storage_saturation_workers: 128.0,
+        preemption: rng.next_f64() < 0.7,
+        arbiter,
+        capacity,
+        warm,
+        straggler,
+        trace,
+    });
+    let goals = [Goal::None, Goal::Fastest, Goal::Deadline { t_max_s: 4.0 * 3600.0 }];
+    let systems = [SystemKind::Smlt, SystemKind::LambdaMl, SystemKind::Siren];
+    let n_jobs = 2 + rng.below(4) as usize;
+    for i in 0..n_jobs {
+        let sys = systems[rng.below(systems.len() as u64) as usize];
+        let goal =
+            if sys.user_centric() { goals[rng.below(goals.len() as u64) as usize] } else { Goal::None };
+        let quota = if rng.next_f64() < 0.5 {
+            TenantQuota::unlimited()
+        } else {
+            TenantQuota::capped(4 + rng.below(account_limit as u64) as u32)
+        };
+        let seed = 9000 + i as u64 + rng.below(1 << 16);
+        let job = tiny_job(sys, seed, goal, &mut rng);
+        sim.submit_weighted(job, rng.uniform(0.0, 240.0), quota, 1.0 + rng.below(3) as f64);
+    }
+    sim
+}
+
+fn assert_outcomes_bit_identical(a: &FleetOutcome, b: &FleetOutcome, seed: u64) {
+    assert_eq!(a.events, b.events, "seed {seed}");
+    assert_eq!(a.denials, b.denials, "seed {seed}");
+    assert_eq!(a.preemptions, b.preemptions, "seed {seed}");
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "seed {seed}");
+    assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits(), "seed {seed}");
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+        assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits(), "seed {seed} tenant {}", x.tenant);
+        assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+        assert_eq!(x.outcome.total_cost().to_bits(), y.outcome.total_cost().to_bits());
+        assert_eq!(x.outcome.iters_done, y.outcome.iters_done);
+        assert_eq!(x.outcome.config_trace, y.outcome.config_trace);
+        assert_eq!(x.outcome.metrics.reconfigurations, y.outcome.metrics.reconfigurations);
+        assert_eq!(x.outcome.metrics.failures_detected, y.outcome.metrics.failures_detected);
+    }
+}
+
+#[test]
+fn prop_tracing_is_observation_only() {
+    cases(6, |rng| {
+        let case_seed = rng.next_u64();
+        let off = build_fleet(case_seed, TraceConfig::off()).run();
+        let on = build_fleet(case_seed, TraceConfig::on()).run();
+        assert_outcomes_bit_identical(&off, &on, case_seed);
+        // the disabled sinks recorded nothing…
+        assert!(off.trace.is_empty(), "seed {case_seed}: fleet trace not empty when off");
+        for j in &off.jobs {
+            assert!(j.outcome.trace.is_empty(), "seed {case_seed}: job trace not empty when off");
+        }
+        // …and the enabled ones recorded every layer
+        assert!(!on.trace.is_empty(), "seed {case_seed}: no fleet events");
+        for j in &on.jobs {
+            assert!(
+                !j.outcome.trace.is_empty(),
+                "seed {case_seed}: tenant {} recorded no events",
+                j.tenant
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_attribution_is_bit_exact_per_job_and_fleet() {
+    cases(6, |rng| {
+        let case_seed = rng.next_u64();
+        let out = build_fleet(case_seed, TraceConfig::on()).run();
+        let atts = attribute_fleet(&out);
+        assert_eq!(atts.len(), out.jobs.len());
+        for (att, j) in atts.iter().zip(out.jobs.iter()) {
+            assert_eq!(
+                att.time.total_s().to_bits(),
+                j.duration_s().to_bits(),
+                "seed {case_seed} tenant {}: time components must sum to the duration exactly",
+                j.tenant
+            );
+            assert_eq!(
+                att.cost.total().to_bits(),
+                j.outcome.total_cost().to_bits(),
+                "seed {case_seed} tenant {}: cost components must sum to the bill exactly",
+                j.tenant
+            );
+            // complete coverage: the residual is rounding noise, not a
+            // missing span category
+            assert!(
+                att.time.unattributed_s.abs() <= 1e-6 * j.duration_s().max(1.0),
+                "seed {case_seed} tenant {}: unattributed {} of {}",
+                j.tenant,
+                att.time.unattributed_s,
+                j.duration_s()
+            );
+        }
+        // the per-job folds reconcile with the billed grand total
+        let bill = BillingReport::from_fleet(&out);
+        let rebuilt = attributed_fleet_cost(&atts, out.warm.total_cost());
+        assert_eq!(rebuilt.to_bits(), out.total_cost().to_bits(), "seed {case_seed}");
+        assert_eq!(rebuilt.to_bits(), bill.grand_total.to_bits(), "seed {case_seed}");
+    });
+}
+
+#[test]
+fn prop_chrome_export_roundtrips_and_validates() {
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let out = build_fleet(case_seed, TraceConfig::on()).run();
+        let doc = chrome_trace(&out);
+        let text = doc.to_string_pretty();
+        let parsed = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {case_seed}: export did not re-parse: {e}"));
+        assert_eq!(parsed, doc, "seed {case_seed}: Chrome JSON must round-trip exactly");
+        let stats = validate_chrome(&doc)
+            .unwrap_or_else(|e| panic!("seed {case_seed}: invalid Chrome trace: {e}"));
+        assert!(stats.spans > 0, "seed {case_seed}: no spans exported");
+        assert!(stats.tracks > 1, "seed {case_seed}: expected fleet + per-tenant tracks");
+    });
+}
+
+#[test]
+fn prop_counters_agree_with_recorded_events() {
+    cases(6, |rng| {
+        let case_seed = rng.next_u64();
+        let out = build_fleet(case_seed, TraceConfig::on()).run();
+        for j in &out.jobs {
+            let m = &j.outcome.metrics;
+            assert_eq!(
+                m.reconfigurations,
+                j.outcome.config_trace.len() as u64,
+                "seed {case_seed} tenant {}",
+                j.tenant
+            );
+            let reconfig_events = j
+                .outcome
+                .trace
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Reconfig { .. }))
+                .count() as u64;
+            assert_eq!(m.reconfigurations, reconfig_events, "seed {case_seed}");
+            let failure_events: u64 = j
+                .outcome
+                .trace
+                .events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    EventKind::Failure { workers } => Some(workers as u64),
+                    _ => None,
+                })
+                .sum();
+            assert_eq!(m.failures_detected, failure_events, "seed {case_seed}");
+        }
+    });
+}
+
+#[test]
+fn traced_single_job_spans_tile_the_whole_timeline() {
+    let mut j = SimJob::new(
+        SystemKind::Smlt,
+        Workloads::static_run(ModelProfile::resnet18(), 12, 128),
+    );
+    j.hazard_per_s = 1e-4;
+    let out = simulate_traced(&j);
+    let untraced = simulate(&j);
+    assert_eq!(out.total_time_s.to_bits(), untraced.total_time_s.to_bits());
+    // leaf spans are sequential and gap-free over [0, total_time_s]
+    let mut cursor = 0.0f64;
+    for e in out.trace.events.iter().filter(|e| e.kind.bucket().is_some()) {
+        assert!(
+            (e.t0 - cursor).abs() < 1e-9 * out.total_time_s.max(1.0),
+            "gap before {:?}: span starts {} cursor {}",
+            e.kind,
+            e.t0,
+            cursor
+        );
+        assert!(e.t1 >= e.t0, "negative span {:?}", e.kind);
+        cursor = e.t1;
+    }
+    assert!(
+        (cursor - out.total_time_s).abs() < 1e-9 * out.total_time_s.max(1.0),
+        "leaf spans end at {cursor}, run ends at {}",
+        out.total_time_s
+    );
+    let att = attribute_sim(&out);
+    assert_eq!(att.time.total_s().to_bits(), out.total_time_s.to_bits());
+    assert_eq!(att.cost.total().to_bits(), out.total_cost().to_bits());
+}

@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# Sanity check for Chrome trace-event artifacts (bench_out/TRACE_*.json,
+# emitted by the benches' `--trace-out` mode). Pure shell + grep — no
+# dependencies, mirroring the crate's offline-registry constraint — with
+# the real structural validation (util::json::parse + trace::validate_chrome:
+# schema, per-track monotone timestamps, span nesting/overlap) delegated
+# to the fig14 bench binary's `--check-trace` mode when a built binary is
+# available.
+#
+# Every artifact must be a Chrome trace-event document: a "traceEvents"
+# list whose records carry "ph" / "pid" / "tid" / "ts" fields, including
+# at least one "X" complete (span) event.
+#
+# Usage (from the repository root):
+#   scripts/check_trace_json.sh           # validate every bench_out/TRACE_*.json
+#   scripts/check_trace_json.sh <path>    # validate one artifact
+set -u
+
+fail=0
+
+check_schema() {
+  # grep-level structural checks shared by every artifact
+  local json="$1"
+  if ! grep -q '"traceEvents"' "$json"; then
+    echo "FAILED: $json has no traceEvents list"
+    fail=1
+  fi
+  for field in '"ph"' '"pid"' '"tid"' '"ts"'; do
+    if ! grep -q "$field" "$json"; then
+      echo "FAILED: $json events lack the $field field"
+      fail=1
+    fi
+  done
+  if ! grep -q '"ph": *"X"' "$json"; then
+    echo "FAILED: $json has no complete (\"X\") span events"
+    fail=1
+  fi
+}
+
+check_one() {
+  local json="$1"
+  if [ ! -f "$json" ]; then
+    echo "MISSING: $json (run the matching cargo bench with --trace-out)"
+    fail=1
+    return
+  fi
+  # structural validation via the crate's own parser + validator, if the
+  # bench binary has been built (cargo bench / cargo build --benches);
+  # --check-trace runs the same validate_chrome pass the in-tree
+  # property tests pin, so it accepts any bench's trace artifact
+  local bin
+  bin=$(ls target/release/deps/fig14_multitenant-* 2>/dev/null \
+    | grep -v '\.d$' | head -n 1)
+  if [ -n "${bin:-}" ] && [ -x "$bin" ]; then
+    if ! "$bin" --check-trace "$json"; then
+      fail=1
+    fi
+  else
+    echo "note: bench binary not built; falling back to grep-level checks"
+  fi
+  check_schema "$json"
+}
+
+if [ "$#" -ge 1 ]; then
+  check_one "$1"
+else
+  found=0
+  for json in bench_out/TRACE_*.json; do
+    [ -e "$json" ] || continue
+    found=1
+    check_one "$json"
+  done
+  if [ "$found" -eq 0 ]; then
+    echo "MISSING: no bench_out/TRACE_*.json artifacts (run a bench with --trace-out)"
+    fail=1
+  fi
+fi
+
+if [ "$fail" -ne 0 ]; then
+  echo "trace json check FAILED"
+  exit 1
+fi
+echo "trace json check OK"
