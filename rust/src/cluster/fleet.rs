@@ -434,6 +434,11 @@ pub struct FleetOutcome {
     pub denials: u64,
     /// launches the platform throttled (account pressure, Map caps)
     pub throttled_invocations: u64,
+    /// fleet launches refused outright for insufficient capacity, summed
+    /// over jobs (each refusal cost its job one backoff-and-retry)
+    pub capacity_retries: u64,
+    /// virtual seconds jobs spent backing off after those refusals
+    pub capacity_wait_s: f64,
     /// fleet revocations across the whole run (preemptions + shocks)
     pub preemptions: u64,
     /// arbitration policy the fleet ran under
@@ -1286,6 +1291,8 @@ impl ClusterSim {
                 }
             })
             .collect();
+        let capacity_retries = jobs.iter().map(|j| j.outcome.capacity_retries).sum();
+        let capacity_wait_s = jobs.iter().map(|j| j.outcome.capacity_wait_s).sum();
         // bill the containers still parked when the last job finished,
         // then snapshot the warm layer's run totals
         env.warm.finalize(last_finish);
@@ -1302,6 +1309,8 @@ impl ClusterSim {
             account_limit,
             denials,
             throttled_invocations: throttled,
+            capacity_retries,
+            capacity_wait_s,
             preemptions: preempt_total,
             arbiter,
             shocks,

@@ -6,6 +6,7 @@ pub mod workload;
 
 pub use endclient::{ArtifactManager, EndClient, ResourceManager};
 pub use simrun::{
-    simulate, simulate_traced, Goal, IterModel, JobDriver, SimJob, SimOutcome, StepEvent,
+    simulate, simulate_traced, Goal, IterModel, JobDriver, LaunchRecord, SimJob, SimOutcome,
+    StepEvent,
 };
 pub use workload::{Phase, Workloads};

@@ -101,6 +101,24 @@ pub struct SimJob {
     /// per-function memory cap (coordinate descent, like `sync_search`;
     /// off by default)
     pub pipeline_search: bool,
+    /// let the scheduler re-pick `mem_mb` at *every* phase boundary once
+    /// the fleet is up (mid-run memory autoscaling): a coordinate-descent
+    /// sweep of [`ConfigSpace::mem_candidates`] rescored analytically at
+    /// the active workers/sync/pipeline, incumbent kept on ties (strict
+    /// `<`). Adopting a new size forces a fleet relaunch whose retiring
+    /// containers park at the *old* size — under
+    /// [`PoolConfig::match_memory`](crate::warm::PoolConfig::match_memory)
+    /// they stop being servable inventory and the new fleet re-bills its
+    /// cold starts. Serverless only; off by default (bit-identical path).
+    pub resize_search: bool,
+    /// account-pressure hazard of the provider refusing a fleet launch
+    /// outright (`insufficient_capacity`): each launch attempt is
+    /// rejected with probability `1 - exp(-hazard · pressure)` where
+    /// pressure is the account's in-flight load over its concurrency
+    /// limit. Rejected attempts bill nothing and retry after an
+    /// exponential backoff (see `CAPACITY_BACKOFF_S`). 0 = off — the
+    /// injector draws nothing, the bit-identical default.
+    pub capacity_hazard: f64,
 }
 
 impl SimJob {
@@ -119,6 +137,8 @@ impl SimJob {
             sync_search: false,
             pipeline: PipelineSpec::default(),
             pipeline_search: false,
+            resize_search: false,
+            capacity_hazard: 0.0,
         }
     }
 
@@ -135,6 +155,29 @@ impl SimJob {
             crate::util::rng::fnv1a(self.system.name()) ^ (self.framework as u64 + 1)
         })
     }
+}
+
+/// One fleet launch as `invoke_fleet` billed it: what the resize and
+/// capacity layers are measured by (cold-starts-per-launch after a
+/// resize, retries under account pressure). Recorded for every
+/// serverless launch — tracking it costs no RNG draws or virtual time,
+/// so populating it never perturbs existing outcomes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LaunchRecord {
+    /// phase index the launch served
+    pub phase: u32,
+    /// virtual time the fleet finished initializing
+    pub t_s: f64,
+    /// memory size the fleet launched with
+    pub mem_mb: u32,
+    /// functions launched (stages × workers)
+    pub funcs: u32,
+    /// workers served by a warm container
+    pub warm_hits: u32,
+    /// workers that paid a cold start (`funcs - warm_hits`)
+    pub cold_starts: u32,
+    /// `insufficient_capacity` refusals this launch retried through
+    pub capacity_retries: u32,
 }
 
 #[derive(Clone, Debug)]
@@ -163,6 +206,14 @@ pub struct SimOutcome {
     /// property suite checks the search never selects a spec whose
     /// per-stage footprint exceeds the per-function memory cap
     pub pipeline: PipelineSpec,
+    /// fleet launches `insufficient_capacity` refusals forced this job
+    /// to retry (0 unless `capacity_hazard > 0`)
+    pub capacity_retries: u64,
+    /// virtual seconds spent backing off after those refusals
+    pub capacity_wait_s: f64,
+    /// every serverless fleet launch in order — the resize/capacity
+    /// evidence trail (cold starts per launch, retries per launch)
+    pub launches: Vec<LaunchRecord>,
     /// virtual-time trace of the run ([`crate::trace`]): the driver's
     /// leaf spans tile `[arrive_s, finish_s]` and fold into the exact
     /// time/cost attribution of [`crate::metrics::attribution`]. Empty
@@ -488,6 +539,13 @@ pub struct JobDriver {
     pub warm_hits: u64,
     /// serverless worker launches that paid a cold start
     pub cold_starts: u64,
+    /// fleet launches the provider refused for insufficient capacity
+    /// (each refusal costs one backoff wait, then a retry)
+    pub capacity_retries: u64,
+    /// virtual seconds spent in those backoffs
+    pub capacity_wait_s: f64,
+    /// every serverless fleet launch, in order (SimOutcome::launches)
+    launches: Vec<LaunchRecord>,
     /// per-job event sink of the [`crate::trace`] layer; enabled iff the
     /// environment's tracer was enabled at submission. Every `t_now`
     /// advance below emits exactly one leaf span into it, so a traced
@@ -498,6 +556,14 @@ pub struct JobDriver {
     /// [`EventKind::PhaseSpan`] start)
     phase_t0: f64,
 }
+
+/// Most `insufficient_capacity` refusals one launch retries through
+/// before the platform admits it anyway: real accounts are not refused
+/// forever, and a bounded retry wall keeps every job finishing.
+const CAPACITY_RETRY_CAP: u32 = 8;
+/// Base backoff (s) after a capacity refusal; doubles per attempt
+/// (2, 4, 8, ... — at most ~510 s of added wall per launch).
+const CAPACITY_BACKOFF_S: f64 = 2.0;
 
 impl JobDriver {
     /// A driver for `job` as tenant `tenant`, arriving at `arrive_s` on
@@ -576,6 +642,9 @@ impl JobDriver {
             bo_probes: 0,
             warm_hits: 0,
             cold_starts: 0,
+            capacity_retries: 0,
+            capacity_wait_s: 0.0,
+            launches: Vec::new(),
             trace,
             phase_t0: arrive_s,
         }
@@ -1029,6 +1098,55 @@ impl JobDriver {
                 }
             }
         }
+        // ---- mid-run memory autoscaling: unlike the searches above
+        // (which ride the adaptive systems' re-optimization trigger),
+        // this runs at *every* active phase boundary once the fleet is
+        // up, so even fixed-config systems can resize as training
+        // dynamics shift. A pure-arithmetic rescore of the memory grid
+        // at the active workers/sync/pipeline — no probes, no RNG — with
+        // the incumbent scored first and kept on ties (strict `<`), so a
+        // phase whose best size is unchanged stays on the bit-identical
+        // no-relaunch path. Gated on `fleet_started`: the first launch
+        // already picks freely, so single-phase jobs never diverge.
+        let mut resized = false;
+        if self.job.resize_search && self.job.system.is_serverless() && self.fleet_started {
+            let space = self.space_capped(env);
+            let model = IterModel {
+                system: self.job.system,
+                profile: &phase.profile,
+                global_batch: phase.global_batch,
+                platform: &env.platform,
+                cal: &self.cal,
+                pricing: &self.pricing,
+                sync: self.sync_active,
+                pipeline: self.pipeline_active,
+            };
+            let y = self.sync_active.expected_yield(self.cfg.workers);
+            let mut best: Option<(f64, u32)> = None;
+            for mem_mb in space.mem_candidates(self.cfg.mem_mb) {
+                let cand = Config { workers: self.cfg.workers, mem_mb };
+                let (comp, comm) = model.iter_time(cand);
+                let score = goal_score(
+                    self.job.goal,
+                    (comp + comm) / y,
+                    model.iter_cost(cand) / y,
+                    phase.iters,
+                );
+                if best.map_or(true, |(b, _)| score < b) {
+                    best = Some((score, mem_mb));
+                }
+            }
+            if let Some((_, mem_mb)) = best {
+                if mem_mb != self.cfg.mem_mb {
+                    self.trace.instant(
+                        EventKind::Resize { from_mb: self.cfg.mem_mb, to_mb: mem_mb },
+                        self.t_now,
+                    );
+                    self.cfg.mem_mb = mem_mb;
+                    resized = true;
+                }
+            }
+        }
         // multi-tenant hard cap: fixed-config systems request what the
         // user asked for, but the account will never run more than the
         // tenant's quota — clamp so the request is always grantable
@@ -1082,8 +1200,12 @@ impl JobDriver {
         self.guard_every = (phase.iters / 4).max(1);
         self.iter_in_phase = 0;
 
-        // ---- phase start: (re)invoke the fleet when config changed
-        if !self.fleet_started || should_optimize {
+        // ---- phase start: (re)invoke the fleet when config changed. A
+        // resize adoption forces the relaunch too: the old-size fleet
+        // retires into the warm pool (at `fleet_mem_mb`), and the new
+        // launch's checkout asks for the new size — under memory-keyed
+        // matching it finds nothing and re-bills cold starts.
+        if !self.fleet_started || should_optimize || resized {
             self.state = DriverState::AwaitSlots;
             // try immediately so the uncontended path completes the whole
             // phase preamble in one step, like the pre-cluster simulator
@@ -1207,6 +1329,39 @@ impl JobDriver {
     }
 
     fn invoke_fleet(&mut self, env: &mut ClusterEnv) -> StepEvent {
+        // ---- capacity admission: near its concurrency limit a real
+        // account sees whole launches refused outright
+        // (`insufficient_capacity` / TooManyRequests). Each refusal
+        // bills nothing — no workers started, no warm checkout — and
+        // costs one exponential-backoff wait before the retry; after
+        // CAPACITY_RETRY_CAP refusals the platform admits the launch
+        // (accounts are not refused forever), so every job finishes.
+        // With `capacity_hazard` 0 the injector draws nothing and this
+        // whole block is invisible — the bit-identical default.
+        let mut launch_retries: u32 = 0;
+        if self.job.capacity_hazard > 0.0 && self.job.system.is_serverless() {
+            while launch_retries < CAPACITY_RETRY_CAP {
+                // recomputed per attempt: capacity shocks move the limit
+                // (and so the pressure) while this launch backs off
+                let limit = env.pool.account_limit.max(1) as f64;
+                let pressure = env.pool.total_in_flight() as f64 / limit;
+                if env
+                    .platform
+                    .admit_fleet(&mut self.injector, self.job.capacity_hazard, pressure)
+                    .is_ok()
+                {
+                    break;
+                }
+                let wait = CAPACITY_BACKOFF_S * (1u64 << launch_retries.min(16)) as f64;
+                launch_retries += 1;
+                self.trace
+                    .instant(EventKind::CapacityRejected { attempt: launch_retries }, self.t_now);
+                self.trace.span(EventKind::CapacityWait, self.t_now, self.t_now + wait);
+                self.t_now += wait;
+                self.capacity_wait_s += wait;
+                self.capacity_retries += 1;
+            }
+        }
         // the whole pipelined fleet launches at once: stages × workers
         // functions (exactly cfg.workers on the data-parallel path)
         let funcs = self.fleet_funcs();
@@ -1257,6 +1412,17 @@ impl JobDriver {
         self.t_now += slowest + init_eff;
         self.trace.span(EventKind::Init { funcs, warm_hits: hits }, init_t0, self.t_now);
         env.platform.release_workers(funcs);
+        if self.job.system.is_serverless() {
+            self.launches.push(LaunchRecord {
+                phase: self.phase_idx as u32,
+                t_s: self.t_now,
+                mem_mb: self.cfg.mem_mb,
+                funcs,
+                warm_hits: hits,
+                cold_starts: funcs - hits,
+                capacity_retries: launch_retries,
+            });
+        }
         self.fleet_mem_mb = self.cfg.mem_mb;
         self.fleet_started = true;
         if self.first_fleet_s.is_none() {
@@ -1559,6 +1725,9 @@ impl JobDriver {
             config_trace: self.config_trace,
             update_yield_sum: self.yield_sum,
             pipeline: self.pipeline_active,
+            capacity_retries: self.capacity_retries,
+            capacity_wait_s: self.capacity_wait_s,
+            launches: self.launches,
             trace: self.trace.into_log(),
         }
     }

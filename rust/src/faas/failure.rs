@@ -13,11 +13,19 @@ pub struct FailureInjector {
     /// per-second hazard rate of a running worker crashing
     pub hazard_per_s: f64,
     pub injected: u64,
+    /// fleet launches refused for insufficient account capacity (see
+    /// [`insufficient_capacity`](Self::insufficient_capacity))
+    pub capacity_rejections: u64,
 }
 
 impl FailureInjector {
     pub fn new(hazard_per_s: f64, seed: u64) -> Self {
-        FailureInjector { rng: Pcg::new(seed ^ 0xFA11), hazard_per_s, injected: 0 }
+        FailureInjector {
+            rng: Pcg::new(seed ^ 0xFA11),
+            hazard_per_s,
+            injected: 0,
+            capacity_rejections: 0,
+        }
     }
 
     /// No failures (hazard 0).
@@ -34,6 +42,30 @@ impl FailureInjector {
         let hit = self.rng.next_f64() < p;
         if hit {
             self.injected += 1;
+        }
+        hit
+    }
+
+    /// Does the provider refuse to place a fleet launch outright — the
+    /// `insufficient_capacity` / `TooManyRequestsException` class of
+    /// error real platforms return near the account concurrency limit?
+    /// `pressure` is the account's in-flight load over its current limit
+    /// (so capacity shocks that move the limit move the hazard too); the
+    /// rejection probability is `1 - exp(-hazard · pressure)` — zero at
+    /// an idle account, approaching `1 - exp(-hazard)` at saturation.
+    ///
+    /// With `hazard <= 0` (the default) this returns `false` **before
+    /// drawing anything**, exactly like
+    /// [`fails_within`](Self::fails_within)'s zero-hazard guard — the
+    /// bit-identity contract for every pre-capacity trace.
+    pub fn insufficient_capacity(&mut self, hazard: f64, pressure: f64) -> bool {
+        if hazard <= 0.0 {
+            return false;
+        }
+        let p = 1.0 - (-hazard * pressure.max(0.0)).exp();
+        let hit = self.rng.next_f64() < p;
+        if hit {
+            self.capacity_rejections += 1;
         }
         hit
     }
@@ -70,6 +102,33 @@ mod tests {
         let expect = (1.0 - (-0.1f64).exp()) * n as f64; // ~9.5%
         let ratio = fails as f64 / expect;
         assert!((0.9..1.1).contains(&ratio), "fails={fails} expect~{expect}");
+    }
+
+    #[test]
+    fn zero_capacity_hazard_draws_nothing_from_the_rng() {
+        // the golden-trace guarantee, capacity edition: a disabled hazard
+        // must leave the injector's RNG stream untouched, so interleaved
+        // worker-crash draws land on identical bits
+        let mut a = FailureInjector::new(0.01, 99);
+        let mut b = FailureInjector::new(0.01, 99);
+        for _ in 0..200 {
+            assert!(!a.insufficient_capacity(0.0, 0.9));
+            assert_eq!(a.fails_within(5.0), b.fails_within(5.0));
+        }
+        assert_eq!(a.capacity_rejections, 0);
+    }
+
+    #[test]
+    fn capacity_rejection_rate_rises_with_pressure() {
+        let n = 10_000;
+        let rate = |pressure: f64| {
+            let mut f = FailureInjector::new(0.0, 21);
+            (0..n).filter(|_| f.insufficient_capacity(2.0, pressure)).count() as f64 / n as f64
+        };
+        let (lo, mid, hi) = (rate(0.1), rate(0.5), rate(1.0));
+        assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+        // and zero pressure never rejects even at a high hazard
+        assert_eq!(rate(0.0), 0.0);
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod failure;
 pub mod platform;
 
 pub use failure::FailureInjector;
-pub use platform::{FaasLimits, FaasPlatform, Invocation, InvokeMode};
+pub use platform::{FaasLimits, FaasPlatform, Invocation, InvokeError, InvokeMode};

@@ -86,6 +86,17 @@ pub struct Invocation {
     pub throttled: bool,
 }
 
+/// Typed refusal of a whole fleet launch — distinct from the per-worker
+/// startup anomalies an [`Invocation`] carries: a refused launch places
+/// *nothing* (and bills nothing), and the caller must back off and retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InvokeError {
+    /// the provider could not place the fleet: the account is too close
+    /// to its concurrency limit (AWS's `TooManyRequestsException` /
+    /// insufficient-capacity class of errors)
+    InsufficientCapacity,
+}
+
 /// The simulated platform. Deterministic given its seed.
 pub struct FaasPlatform {
     pub limits: FaasLimits,
@@ -94,11 +105,22 @@ pub struct FaasPlatform {
     running: u32,
     pub total_invocations: u64,
     pub total_throttled: u64,
+    /// fleet launches refused outright with
+    /// [`InvokeError::InsufficientCapacity`] (each one retried by the
+    /// caller after a backoff; see [`admit_fleet`](Self::admit_fleet))
+    pub total_capacity_rejections: u64,
 }
 
 impl FaasPlatform {
     pub fn new(limits: FaasLimits, seed: u64) -> Self {
-        FaasPlatform { limits, rng: Pcg::new(seed), running: 0, total_invocations: 0, total_throttled: 0 }
+        FaasPlatform {
+            limits,
+            rng: Pcg::new(seed),
+            running: 0,
+            total_invocations: 0,
+            total_throttled: 0,
+            total_capacity_rejections: 0,
+        }
     }
 
     pub fn with_seed(seed: u64) -> Self {
@@ -200,6 +222,30 @@ impl FaasPlatform {
         }
         self.running += n.min(self.limits.concurrency_limit);
         out
+    }
+
+    /// Admission control for a whole fleet launch: before any workers
+    /// are invoked, the provider may refuse the request outright with
+    /// [`InvokeError::InsufficientCapacity`] — probability rising with
+    /// `pressure` (the account's in-flight load over its current limit)
+    /// under the caller's `hazard` severity. The stochastic decision
+    /// lives in the per-job [`FailureInjector`] (so each job's retry
+    /// path is deterministic on its own seed); the platform counts the
+    /// refusals account-wide. With `hazard <= 0` this is `Ok` without a
+    /// single RNG draw — the bit-identical default path.
+    ///
+    /// [`FailureInjector`]: crate::faas::FailureInjector
+    pub fn admit_fleet(
+        &mut self,
+        injector: &mut crate::faas::FailureInjector,
+        hazard: f64,
+        pressure: f64,
+    ) -> Result<(), InvokeError> {
+        if injector.insufficient_capacity(hazard, pressure) {
+            self.total_capacity_rejections += 1;
+            return Err(InvokeError::InsufficientCapacity);
+        }
+        Ok(())
     }
 
     /// Workers finished; release concurrency.
@@ -414,6 +460,34 @@ mod tests {
             let tb = wb * model.expected_kth(k2, 32);
             assert!(ta <= tb + 1e-12, "k={k2}: {ta} > {tb}");
         }
+    }
+
+    #[test]
+    fn admit_fleet_counts_refusals_and_zero_hazard_is_free() {
+        use crate::faas::FailureInjector;
+        // zero hazard: always admitted, platform RNG and injector RNG
+        // both untouched (the bit-identity contract)
+        let mut p = FaasPlatform::with_seed(14);
+        let mut q = FaasPlatform::with_seed(14);
+        let mut inj = FailureInjector::none();
+        for _ in 0..100 {
+            assert_eq!(p.admit_fleet(&mut inj, 0.0, 1.0), Ok(()));
+        }
+        assert_eq!(p.total_capacity_rejections, 0);
+        let ia = p.invoke_workers(16, InvokeMode::DirectTracked);
+        let ib = q.invoke_workers(16, InvokeMode::DirectTracked);
+        for (x, y) in ia.iter().zip(ib.iter()) {
+            assert_eq!(x.startup_delay_s.to_bits(), y.startup_delay_s.to_bits());
+        }
+        // a saturated account under a harsh hazard gets refused sometimes,
+        // and the platform's counter tracks the injector's exactly
+        let mut inj = FailureInjector::new(0.0, 5);
+        let refusals = (0..1000)
+            .filter(|_| p.admit_fleet(&mut inj, 3.0, 1.0) == Err(InvokeError::InsufficientCapacity))
+            .count() as u64;
+        assert!(refusals > 800, "p = 1 - exp(-3) ~ 0.95, got {refusals}/1000");
+        assert_eq!(p.total_capacity_rejections, refusals);
+        assert_eq!(inj.capacity_rejections, refusals);
     }
 
     #[test]

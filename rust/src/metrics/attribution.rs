@@ -2,7 +2,8 @@
 //!
 //! Folds a traced job's leaf spans ([`crate::trace`]) into a wall-clock
 //! decomposition (queueing / idle / profiling / init / compute / bubble /
-//! comm / straggler wait / restart) and its billing ledger into a cost
+//! comm / straggler wait / restart / capacity wait) and its billing
+//! ledger into a cost
 //! decomposition (profiling / compute / straggler premium / comm /
 //! storage) — each with an explicit `unattributed` residual computed as
 //! the *last term* of a pinned-order fold:
@@ -56,6 +57,8 @@ pub struct TimeAttribution {
     pub straggler_wait_s: f64,
     /// failure-recovery overhead on the critical path
     pub restart_s: f64,
+    /// backoff after `insufficient_capacity` launch refusals
+    pub capacity_wait_s: f64,
     /// residual: `duration - (sum of the above)`, exactly
     pub unattributed_s: f64,
 }
@@ -72,6 +75,7 @@ impl TimeAttribution {
             + self.comm_s
             + self.straggler_wait_s
             + self.restart_s
+            + self.capacity_wait_s
     }
 
     /// Total of all components including the residual — bitwise equal to
@@ -138,6 +142,7 @@ fn attribute_parts(
         comm_s: trace.bucket_sum_s(TimeBucket::Comm),
         straggler_wait_s: trace.bucket_sum_s(TimeBucket::StragglerWait),
         restart_s: trace.bucket_sum_s(TimeBucket::Restart),
+        capacity_wait_s: trace.bucket_sum_s(TimeBucket::CapacityWait),
         unattributed_s: 0.0,
     };
     time.unattributed_s = duration_s - time.partial();

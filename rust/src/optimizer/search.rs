@@ -76,6 +76,23 @@ impl ConfigSpace {
         }
     }
 
+    /// Memory grid for a coordinate-descent resize pass: the incumbent
+    /// first (so strict-improvement comparisons keep it on ties), then
+    /// every on-grid size. Used by `resize_search` to sweep `mem_mb`
+    /// while holding workers fixed, mirroring `sync_search`'s
+    /// policy sweep.
+    pub fn mem_candidates(&self, incumbent: u32) -> Vec<u32> {
+        let mut out = vec![incumbent];
+        let mut m = self.min_mem_mb;
+        while m <= self.max_mem_mb {
+            if m != incumbent {
+                out.push(m);
+            }
+            m += self.mem_step_mb;
+        }
+        out
+    }
+
     /// Normalize to [0,1]^2 for GP length-scale stability.
     pub fn normalize(&self, c: Config) -> [f64; 2] {
         [
@@ -155,6 +172,25 @@ mod tests {
         let hi = s.normalize(Config { workers: s.max_workers, mem_mb: s.max_mem_mb });
         assert_eq!(lo, [0.0, 0.0]);
         assert_eq!(hi, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn mem_candidates_incumbent_first_no_duplicates() {
+        let s = ConfigSpace {
+            min_workers: 2,
+            max_workers: 6,
+            worker_step: 2,
+            min_mem_mb: 128,
+            max_mem_mb: 512,
+            mem_step_mb: 128,
+        };
+        // on-grid incumbent: appears exactly once, in front
+        let cands = s.mem_candidates(256);
+        assert_eq!(cands, vec![256, 128, 384, 512]);
+        // off-grid incumbent (clamped space drift): still listed first,
+        // full grid follows
+        let cands = s.mem_candidates(200);
+        assert_eq!(cands, vec![200, 128, 256, 384, 512]);
     }
 
     #[test]

@@ -106,6 +106,9 @@ pub enum TimeBucket {
     Comm,
     StragglerWait,
     Restart,
+    /// backoff after the provider refused a fleet launch for
+    /// insufficient account capacity
+    CapacityWait,
 }
 
 /// Typed payload of one trace event. Span kinds carry `[t0, t1]` on the
@@ -133,6 +136,9 @@ pub enum EventKind {
     StragglerWait { premium_cost: f64 },
     /// worker restart overhead on the critical path
     Restart { workers: u32 },
+    /// backoff between an insufficient-capacity refusal and the next
+    /// launch attempt (the retry contract of the capacity-error path)
+    CapacityWait,
 
     // ---- lifecycle (per-job) ----
     /// job submitted (driver constructed) at its arrival time
@@ -143,6 +149,12 @@ pub enum EventKind {
     Leased { funcs: u32 },
     /// configuration adopted (phase start, quota refit, deadline guard)
     Reconfig { workers: u32, mem_mb: u32 },
+    /// mid-run memory resize adopted by the `resize_search` pass — the
+    /// running fleet retires and relaunches at the new size
+    Resize { from_mb: u32, to_mb: u32 },
+    /// one fleet-launch attempt refused by the provider for insufficient
+    /// account capacity (`attempt` counts refusals of this launch so far)
+    CapacityRejected { attempt: u32 },
     /// fleet revoked by a higher-class job or a capacity shock
     Preempt,
     /// worker failures detected by the lifecycle protocol this iteration
@@ -183,10 +195,13 @@ impl EventKind {
             EventKind::Comm => "comm",
             EventKind::StragglerWait { .. } => "straggler_wait",
             EventKind::Restart { .. } => "restart",
+            EventKind::CapacityWait => "capacity_wait",
             EventKind::Submit => "submit",
             EventKind::PhaseSpan { .. } => "phase",
             EventKind::Leased { .. } => "leased",
             EventKind::Reconfig { .. } => "reconfig",
+            EventKind::Resize { .. } => "resize",
+            EventKind::CapacityRejected { .. } => "capacity_rejected",
             EventKind::Preempt => "preempt",
             EventKind::Failure { .. } => "failure",
             EventKind::StageHandoff { .. } => "stage_handoff",
@@ -213,11 +228,14 @@ impl EventKind {
             | EventKind::Bubble
             | EventKind::Comm
             | EventKind::StragglerWait { .. }
-            | EventKind::Restart { .. } => Lane::Activity,
+            | EventKind::Restart { .. }
+            | EventKind::CapacityWait => Lane::Activity,
             EventKind::Submit
             | EventKind::PhaseSpan { .. }
             | EventKind::Leased { .. }
             | EventKind::Reconfig { .. }
+            | EventKind::Resize { .. }
+            | EventKind::CapacityRejected { .. }
             | EventKind::Preempt
             | EventKind::Failure { .. }
             | EventKind::StageHandoff { .. }
@@ -244,6 +262,7 @@ impl EventKind {
             EventKind::Comm => Some(TimeBucket::Comm),
             EventKind::StragglerWait { .. } => Some(TimeBucket::StragglerWait),
             EventKind::Restart { .. } => Some(TimeBucket::Restart),
+            EventKind::CapacityWait => Some(TimeBucket::CapacityWait),
             _ => None,
         }
     }
@@ -262,6 +281,7 @@ impl EventKind {
                 | EventKind::Comm
                 | EventKind::StragglerWait { .. }
                 | EventKind::Restart { .. }
+                | EventKind::CapacityWait
                 | EventKind::PhaseSpan { .. }
         )
     }
@@ -435,10 +455,13 @@ mod tests {
             EventKind::Comm,
             EventKind::StragglerWait { premium_cost: 0.0 },
             EventKind::Restart { workers: 1 },
+            EventKind::CapacityWait,
             EventKind::Submit,
             EventKind::PhaseSpan { phase: 0, iters: 4 },
             EventKind::Leased { funcs: 4 },
             EventKind::Reconfig { workers: 4, mem_mb: 2048 },
+            EventKind::Resize { from_mb: 3072, to_mb: 2048 },
+            EventKind::CapacityRejected { attempt: 1 },
             EventKind::Preempt,
             EventKind::Failure { workers: 1 },
             EventKind::StageHandoff { stages: 2, micro_batches: 4 },

@@ -225,10 +225,12 @@ impl WarmState {
         if desired <= have {
             return;
         }
-        // clamp to the caps' actual room (per-image room also counts the
-        // non-matching sizes) so an over-cap target does not re-attempt
-        // (and re-reject) the impossible remainder on every tick
-        let image_room = p.cfg.per_image_cap.saturating_sub(p.parked_for(image));
+        // clamp to the caps' actual room so an over-cap target does not
+        // re-attempt (and re-reject) the impossible remainder on every
+        // tick; the per-image cap applies to the servable class (see
+        // `WarmPool::park`), so non-matching sizes left by a resize do
+        // not eat this size's room
+        let image_room = p.cfg.per_image_cap.saturating_sub(p.parked_matching(image, mem_mb));
         let total_room = p.cfg.total_cap.saturating_sub(p.parked_total());
         let want = (desired - have).min(image_room).min(total_room);
         if want == 0 {
@@ -447,6 +449,37 @@ mod tests {
         assert_eq!(w.checkout(1, 3072, 8, 2.0), 8, "the burst launches warm");
         // and the 1024 MB containers still serve their own size
         assert_eq!(w.checkout(1, 1024, 10, 3.0), 10);
+    }
+
+    #[test]
+    fn resize_retirees_do_not_block_the_new_size_cap() {
+        // mid-run-resize regression: the retired 1024 MB cohort fills its
+        // own size class; with a tight per-image cap the 3072 MB class
+        // must still accept check-ins AND prewarm top-ups, and the pool
+        // ledger must agree with the classwise inventory throughout
+        let mut w = WarmState::new(&WarmParams {
+            pool: Some(PoolConfig {
+                per_image_cap: 4,
+                total_cap: 64,
+                match_memory: true,
+                ..Default::default()
+            }),
+            prewarm: None,
+            bank: None,
+        });
+        w.checkin(1, 1024, 4, 0.0); // pre-resize fleet retires (class full)
+        w.prewarm_to(1, 3072, 4, 1.0, 0.35);
+        let r = w.report();
+        assert_eq!(r.prewarm_spawns, 4, "top-up not suppressed by retirees");
+        assert_eq!(r.rejected, 0);
+        // ledger vs pool: every accepted container is parked, classwise
+        let p = w.pool().unwrap();
+        assert_eq!(p.parked_matching(1, 1024), 4);
+        assert_eq!(p.parked_matching(1, 3072), 4);
+        assert_eq!(r.checkins, 8);
+        assert_eq!(w.checkout(1, 3072, 4, 2.0), 4, "new size launches warm");
+        w.finalize(10.0);
+        assert!(w.report().conserves());
     }
 
     #[test]

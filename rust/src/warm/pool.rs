@@ -42,7 +42,10 @@ pub type ImageId = u64;
 pub struct PoolConfig {
     /// seconds a parked container stays warm before eviction
     pub ttl_s: f64,
-    /// most containers parked per image at once (overflow is rejected)
+    /// most containers parked per image at once (overflow is rejected);
+    /// under [`match_memory`](Self::match_memory) the cap applies per
+    /// servable (image, mem) class — sizes that cannot serve each other
+    /// do not compete for it
     pub per_image_cap: u32,
     /// most containers parked fleet-wide at once
     pub total_cap: u32,
@@ -207,7 +210,13 @@ impl WarmPool {
         self.evict_expired(now);
         let mut accepted = 0;
         for _ in 0..n {
-            let image_room = self.parked_for(image) < self.cfg.per_image_cap;
+            // the per-image cap guards *servable* inventory: under
+            // match_memory it applies per (image, mem) class, so
+            // retired wrong-size containers left behind by a mid-run
+            // resize cannot squat the cap and block check-ins of the
+            // size the next launch will actually ask for (total_cap
+            // still bounds the fleet-wide inventory)
+            let image_room = self.parked_matching(image, mem_mb) < self.cfg.per_image_cap;
             let total_room = self.parked_total() < self.cfg.total_cap;
             if !(image_room && total_room) {
                 self.rejected += 1;
@@ -335,6 +344,34 @@ mod tests {
         assert_eq!(p.checkin(2, 1024, 5, 0.0), 1, "total cap");
         assert_eq!(p.rejected, 7);
         assert!(p.conserves());
+    }
+
+    #[test]
+    fn per_image_cap_is_per_size_class_under_match_memory() {
+        // the mid-run-resize regression: a retired wrong-size cohort
+        // must not consume the image cap and block check-ins of the
+        // size future launches will request
+        let mut p = WarmPool::new(PoolConfig {
+            per_image_cap: 2,
+            total_cap: 16,
+            match_memory: true,
+            ..Default::default()
+        });
+        assert_eq!(p.checkin(1, 1024, 2, 0.0), 2, "old size fills its class");
+        assert_eq!(p.checkin(1, 3072, 2, 1.0), 2, "new size has its own cap room");
+        assert_eq!(p.checkin(1, 3072, 1, 2.0), 0, "new size class is now full");
+        assert_eq!(p.rejected, 1);
+        assert_eq!(p.checkout(1, 3072, 2, 3.0), 2);
+        assert!(p.conserves());
+        // without the memory gate, the cap stays per image (unchanged
+        // pre-existing behavior): the second size finds no room
+        let mut q = WarmPool::new(PoolConfig {
+            per_image_cap: 2,
+            total_cap: 16,
+            ..Default::default()
+        });
+        assert_eq!(q.checkin(1, 1024, 2, 0.0), 2);
+        assert_eq!(q.checkin(1, 3072, 2, 1.0), 0);
     }
 
     #[test]

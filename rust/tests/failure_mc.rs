@@ -1,0 +1,113 @@
+//! Monte-Carlo calibration of the failure injector: the empirical
+//! frequencies of `fails_within` and `insufficient_capacity` must match
+//! their analytic laws within a sampling-noise band.
+//!
+//! Same discipline as the Blom-estimator MC tests in `util::stats`:
+//! fixed seeds make every run reproduce the same draws, so the 4-sigma
+//! binomial band is a one-time verification, not a flaky threshold.
+
+use smlt::faas::FailureInjector;
+
+/// 4-sigma binomial band around analytic probability `p` for `n` draws.
+fn band(p: f64, n: u64) -> f64 {
+    4.0 * (p * (1.0 - p) / n as f64).sqrt()
+}
+
+#[test]
+fn mc_fails_within_matches_exponential_law() {
+    // empirical failure frequency vs 1 - exp(-hazard·dt) over a grid
+    // spanning rare (<1%) to common (~63%) failure regimes
+    let n = 40_000u64;
+    for (i, &(hazard, dt)) in [
+        (0.001f64, 5.0f64),
+        (0.01, 10.0),
+        (0.05, 4.0),
+        (0.2, 1.0),
+        (1.0, 1.0),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut f = FailureInjector::new(hazard, 1000 + i as u64);
+        let hits = (0..n).filter(|_| f.fails_within(dt)).count() as f64;
+        let p_hat = hits / n as f64;
+        let p = 1.0 - (-hazard * dt).exp();
+        assert!(
+            (p_hat - p).abs() < band(p, n),
+            "hazard {hazard} dt {dt}: empirical {p_hat} vs analytic {p}"
+        );
+        assert_eq!(f.injected as f64, hits, "counter tracks every hit");
+    }
+}
+
+#[test]
+fn mc_insufficient_capacity_matches_pressure_law() {
+    // empirical refusal frequency vs 1 - exp(-hazard·pressure): the
+    // account-pressure analogue of the worker-crash law above
+    let n = 40_000u64;
+    for (i, &(hazard, pressure)) in [
+        (0.5f64, 0.2f64),
+        (1.0, 0.5),
+        (2.0, 0.5),
+        (2.0, 1.0),
+        (4.0, 0.9),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut f = FailureInjector::new(0.0, 4000 + i as u64);
+        let hits = (0..n)
+            .filter(|_| f.insufficient_capacity(hazard, pressure))
+            .count() as f64;
+        let p_hat = hits / n as f64;
+        let p = 1.0 - (-hazard * pressure).exp();
+        assert!(
+            (p_hat - p).abs() < band(p, n),
+            "hazard {hazard} pressure {pressure}: empirical {p_hat} vs analytic {p}"
+        );
+        assert_eq!(f.capacity_rejections as f64, hits);
+    }
+}
+
+#[test]
+fn mc_capacity_rate_monotone_in_pressure_and_hazard() {
+    // the realism property fig20 leans on: refusals rise monotonically
+    // with account pressure (at fixed hazard) and with hazard severity
+    // (at fixed pressure); zero pressure or zero hazard never refuses
+    let n = 20_000u64;
+    let rate = |hazard: f64, pressure: f64, seed: u64| {
+        let mut f = FailureInjector::new(0.0, seed);
+        (0..n).filter(|_| f.insufficient_capacity(hazard, pressure)).count() as f64 / n as f64
+    };
+    // pressure sweep at fixed hazard: strictly increasing (the analytic
+    // gaps are far wider than the 4-sigma noise at n = 20k)
+    let by_pressure: Vec<f64> =
+        [0.1, 0.3, 0.6, 1.0].iter().map(|&pr| rate(2.0, pr, 77)).collect();
+    for w in by_pressure.windows(2) {
+        assert!(w[0] < w[1], "pressure sweep not increasing: {by_pressure:?}");
+    }
+    // hazard sweep at fixed pressure
+    let by_hazard: Vec<f64> =
+        [0.25, 1.0, 4.0].iter().map(|&hz| rate(hz, 0.8, 78)).collect();
+    for w in by_hazard.windows(2) {
+        assert!(w[0] < w[1], "hazard sweep not increasing: {by_hazard:?}");
+    }
+    // hard zeros: no pressure or no hazard → no refusals, ever
+    assert_eq!(rate(5.0, 0.0, 79), 0.0);
+    assert_eq!(rate(0.0, 1.0, 80), 0.0);
+}
+
+#[test]
+fn mc_zero_hazard_capacity_draws_leave_the_crash_stream_untouched() {
+    // interleaving disabled capacity checks between worker-crash draws
+    // must not shift a single bit of the crash sequence — the contract
+    // that keeps every pre-capacity golden trace valid
+    let mut probe = FailureInjector::new(0.02, 314);
+    let mut clean = FailureInjector::new(0.02, 314);
+    for i in 0..5_000 {
+        assert!(!probe.insufficient_capacity(0.0, (i % 10) as f64 / 10.0));
+        assert_eq!(probe.fails_within(3.0), clean.fails_within(3.0), "draw {i} diverged");
+    }
+    assert_eq!(probe.capacity_rejections, 0);
+    assert_eq!(probe.injected, clean.injected);
+}

@@ -5,8 +5,11 @@
 //! same finish times, same costs, same denials, same shock records — on
 //! randomized fleets across every arbiter, finite and infinite
 //! starvation bounds, capacity shocks, preemption, per-tenant quotas and
-//! weights, and the warm/prewarm layer. The heap kernel is only a faster
-//! index over the same event order; any divergence is a scheduling bug.
+//! weights, the warm/prewarm layer (memory-keyed matching included),
+//! mid-run memory resizing, and `insufficient_capacity` injection (both
+//! kernels must walk the backoff-and-retry path identically). The heap
+//! kernel is only a faster index over the same event order; any
+//! divergence is a scheduling bug.
 //!
 //! [`ClusterSim::run`]: smlt::cluster::ClusterSim::run
 //! [`ClusterSim::run_legacy_scan`]: smlt::cluster::ClusterSim::run_legacy_scan
@@ -73,15 +76,18 @@ fn build_fleet(case_seed: u64) -> ClusterSim {
         },
     };
     let image = tiny_job(SystemKind::Smlt, 0, Goal::None).image_id();
+    // exact Lambda matching in half the pooled cases: resize retirements
+    // then leave genuinely unservable inventory behind
+    let match_memory = rng.next_f64() < 0.5;
     let warm = match rng.below(3) {
         0 => WarmParams::default(),
         1 => WarmParams {
-            pool: Some(PoolConfig { ttl_s: 1200.0, ..Default::default() }),
+            pool: Some(PoolConfig { ttl_s: 1200.0, match_memory, ..Default::default() }),
             prewarm: None,
             bank: None,
         },
         _ => WarmParams {
-            pool: Some(PoolConfig { ttl_s: 1200.0, ..Default::default() }),
+            pool: Some(PoolConfig { ttl_s: 1200.0, match_memory, ..Default::default() }),
             prewarm: Some(PrewarmPolicy {
                 forecast: ArrivalProcess::Poisson { rate_per_s: 1.0 / 120.0, seed: 11 },
                 source: if rng.next_f64() < 0.5 {
@@ -134,12 +140,23 @@ fn build_fleet(case_seed: u64) -> ClusterSim {
         } else {
             TenantQuota::capped(4 + rng.below(account_limit as u64) as u32)
         };
-        sim.submit_weighted(
-            tiny_job(sys, 7000 + i as u64 + rng.below(1 << 16), goal),
-            rng.uniform(0.0, 300.0),
-            quota,
-            1.0 + rng.below(4) as f64,
-        );
+        let seed = 7000 + i as u64 + rng.below(1 << 16);
+        // multi-phase jobs in some slots: the workload shape the mid-run
+        // resize pass actually acts on (single-phase jobs never resize)
+        let mut job = if rng.next_f64() < 0.4 {
+            let mut j = SimJob::new(
+                sys,
+                Workloads::dynamic_batching(&ModelProfile::resnet18(), &[(8, 128), (8, 256)]),
+            );
+            j.seed = seed;
+            j.goal = goal;
+            j
+        } else {
+            tiny_job(sys, seed, goal)
+        };
+        job.resize_search = rng.next_f64() < 0.4;
+        job.capacity_hazard = [0.0, 0.05, 0.5][rng.below(3) as usize];
+        sim.submit_weighted(job, rng.uniform(0.0, 300.0), quota, 1.0 + rng.below(4) as f64);
     }
     sim
 }
@@ -159,6 +176,8 @@ fn prop_heap_kernel_bit_identical_to_legacy_scan() {
         assert_eq!(heap.peak_in_flight, scan.peak_in_flight, "seed {case_seed}");
         assert_eq!(heap.preemptions, scan.preemptions, "seed {case_seed}");
         assert_eq!(heap.throttled_invocations, scan.throttled_invocations);
+        assert_eq!(heap.capacity_retries, scan.capacity_retries, "seed {case_seed}");
+        assert_eq!(heap.capacity_wait_s.to_bits(), scan.capacity_wait_s.to_bits());
         assert_eq!(heap.account_limit, scan.account_limit);
         assert_eq!(heap.makespan_s.to_bits(), scan.makespan_s.to_bits());
         assert_eq!(heap.total_cost().to_bits(), scan.total_cost().to_bits());
@@ -188,6 +207,16 @@ fn prop_heap_kernel_bit_identical_to_legacy_scan() {
             assert_eq!(x.outcome.total_cost().to_bits(), y.outcome.total_cost().to_bits());
             assert_eq!(x.outcome.iters_done, y.outcome.iters_done);
             assert_eq!(x.outcome.config_trace, y.outcome.config_trace);
+            assert_eq!(x.outcome.capacity_retries, y.outcome.capacity_retries);
+            assert_eq!(
+                x.outcome.capacity_wait_s.to_bits(),
+                y.outcome.capacity_wait_s.to_bits()
+            );
+            assert_eq!(
+                x.outcome.launches, y.outcome.launches,
+                "tenant {} billed different launches (seed {case_seed})",
+                x.tenant
+            );
             assert_eq!(
                 x.outcome.trace.events, y.outcome.trace.events,
                 "tenant {} recorded different trace streams (seed {case_seed})",

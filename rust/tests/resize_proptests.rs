@@ -1,0 +1,360 @@
+//! The resize/failure matrix: property tests pinning the mid-run memory
+//! autoscaling pass and the `insufficient_capacity` launch path.
+//!
+//! The load-bearing contracts, in order: (1) with `resize_search` off and
+//! `capacity_hazard` zero a randomized fleet is **bitwise** the default
+//! fleet — the new layers cost not a single RNG draw when disabled;
+//! (2) slot leases are conserved under capacity-rejected launches (jobs
+//! back off, retry, and always finish — no lease leaks, no wedges);
+//! (3) the warm pool's conservation identity survives resize retirements
+//! under memory-keyed matching; (4) resize+capacity runs are
+//! bit-deterministic under a fixed seed, trace streams included.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use common::cases;
+use smlt::baselines::SystemKind;
+use smlt::cluster::{
+    ArbiterKind, CapacityTrace, ClusterParams, ClusterSim, FleetOutcome, TenantQuota,
+};
+use smlt::coordinator::{SimJob, Workloads};
+use smlt::optimizer::Config;
+use smlt::perfmodel::ModelProfile;
+use smlt::trace::{EventKind, TimeBucket, TraceConfig};
+use smlt::util::rng::Pcg;
+use smlt::warm::{PoolConfig, WarmParams};
+
+/// Multi-phase dynamic-batching job: the workload shape the resize pass
+/// acts on (batch changes move the analytically-best memory size).
+fn multi_job(seed: u64) -> SimJob {
+    let mut j = SimJob::new(
+        SystemKind::Smlt,
+        Workloads::dynamic_batching(&ModelProfile::resnet18(), &[(8, 128), (8, 256), (8, 512)]),
+    );
+    j.seed = seed;
+    j
+}
+
+fn single_job(seed: u64) -> SimJob {
+    let mut j = SimJob::new(
+        SystemKind::Smlt,
+        Workloads::static_run(ModelProfile::resnet18(), 10, 128),
+    );
+    j.seed = seed;
+    j
+}
+
+/// A randomized fleet over the knobs the resize/capacity layers interact
+/// with: account size, arbiters, preemption, capacity shocks, the warm
+/// pool with and without memory-keyed matching, and mixed single-/multi-
+/// phase jobs on adaptive and fixed-config systems. Deterministic given
+/// `case_seed`; `tweak` sets the per-job knobs under test.
+fn build_fleet(
+    case_seed: u64,
+    force_trace: bool,
+    tweak: &dyn Fn(usize, &mut SimJob),
+) -> ClusterSim {
+    let mut rng = Pcg::new(case_seed);
+    let account_limit = 16 + rng.below(100) as u32;
+    let match_memory = rng.next_f64() < 0.5;
+    let warm = if rng.next_f64() < 0.7 {
+        WarmParams {
+            pool: Some(PoolConfig { ttl_s: 1800.0, match_memory, ..Default::default() }),
+            prewarm: None,
+            bank: None,
+        }
+    } else {
+        WarmParams::default()
+    };
+    let arbiter = if rng.next_f64() < 0.5 {
+        ArbiterKind::GoalClass
+    } else {
+        ArbiterKind::WeightedFair { starvation_bound_s: f64::INFINITY }
+    };
+    let capacity = if rng.next_f64() < 0.5 {
+        CapacityTrace::Static
+    } else {
+        // a mid-run limit shrink moves the capacity pressure too
+        CapacityTrace::Step { at_s: 150.0 + rng.uniform(0.0, 300.0), to: 8 + rng.below(16) as u32 }
+    };
+    let trace_flip = rng.next_f64() < 0.5;
+    let mut sim = ClusterSim::new(ClusterParams {
+        seed: rng.below(1 << 20),
+        account_limit,
+        preemption: rng.next_f64() < 0.5,
+        arbiter,
+        capacity,
+        warm,
+        trace: if force_trace || trace_flip { TraceConfig::on() } else { TraceConfig::off() },
+        ..Default::default()
+    });
+    let n = 2 + rng.below(4) as usize;
+    for i in 0..n {
+        let seed = 9000 + 17 * i as u64 + rng.below(1 << 16);
+        let mut j = if rng.next_f64() < 0.6 { multi_job(seed) } else { single_job(seed) };
+        if rng.next_f64() < 0.4 {
+            j.system = SystemKind::LambdaMl;
+        }
+        tweak(i, &mut j);
+        sim.submit(j, rng.uniform(0.0, 200.0), TenantQuota::unlimited());
+    }
+    sim
+}
+
+/// Bit-level equality of everything a fleet outcome records, the new
+/// resize/capacity evidence included.
+fn assert_fleets_bit_identical(a: &FleetOutcome, b: &FleetOutcome) {
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (x, y) in a.jobs.iter().zip(b.jobs.iter()) {
+        assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits(), "tenant {}", x.tenant);
+        assert_eq!(x.queue_wait_s.to_bits(), y.queue_wait_s.to_bits());
+        assert_eq!(x.preemptions, y.preemptions);
+        assert_eq!(x.outcome.total_cost().to_bits(), y.outcome.total_cost().to_bits());
+        assert_eq!(x.outcome.iters_done, y.outcome.iters_done);
+        assert_eq!(x.outcome.config_trace, y.outcome.config_trace);
+        assert_eq!(x.outcome.warm_hits, y.outcome.warm_hits);
+        assert_eq!(x.outcome.cold_starts, y.outcome.cold_starts);
+        assert_eq!(x.outcome.capacity_retries, y.outcome.capacity_retries);
+        assert_eq!(x.outcome.capacity_wait_s.to_bits(), y.outcome.capacity_wait_s.to_bits());
+        assert_eq!(x.outcome.launches, y.outcome.launches);
+        assert_eq!(x.outcome.trace.events, y.outcome.trace.events, "tenant {}", x.tenant);
+    }
+    assert_eq!(a.total_cost().to_bits(), b.total_cost().to_bits());
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits());
+    assert_eq!(a.peak_in_flight, b.peak_in_flight);
+    assert_eq!(a.denials, b.denials);
+    assert_eq!(a.capacity_retries, b.capacity_retries);
+    assert_eq!(a.capacity_wait_s.to_bits(), b.capacity_wait_s.to_bits());
+    assert_eq!(a.trace.events, b.trace.events);
+}
+
+#[test]
+fn prop_disabled_knobs_are_bit_identical_to_default_fleet() {
+    // the acceptance bar for the whole PR: jobs that explicitly switch
+    // both knobs off must be bit-for-bit the default-constructed fleet —
+    // pinning the defaults to off AND the off paths to zero-draw no-ops
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let default = build_fleet(case_seed, false, &|_, _| {}).run();
+        let off = build_fleet(case_seed, false, &|_, j| {
+            j.resize_search = false;
+            j.capacity_hazard = 0.0;
+        })
+        .run();
+        assert_fleets_bit_identical(&default, &off);
+        assert_eq!(default.capacity_retries, 0, "no hazard, no refusals");
+        assert_eq!(default.capacity_wait_s, 0.0);
+        for j in &default.jobs {
+            assert_eq!(j.outcome.capacity_retries, 0);
+            assert!(j.outcome.launches.iter().all(|l| l.capacity_retries == 0));
+        }
+    });
+}
+
+#[test]
+fn prop_resize_on_single_phase_jobs_never_diverges() {
+    // the fleet_started gate: the resize pass only runs once the fleet
+    // is up, and the first launch already picks its memory freely — so a
+    // single-phase job with the knob ON is bitwise the knob-off run
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let single = Workloads::static_run(ModelProfile::resnet18(), 10, 128);
+        let off = build_fleet(case_seed, false, &|_, j| {
+            j.phases = single.clone();
+        })
+        .run();
+        let single2 = Workloads::static_run(ModelProfile::resnet18(), 10, 128);
+        let on = build_fleet(case_seed, false, &|_, j| {
+            j.phases = single2.clone();
+            j.resize_search = true;
+        })
+        .run();
+        assert_fleets_bit_identical(&off, &on);
+    });
+}
+
+#[test]
+fn prop_capacity_hazard_is_inert_on_vm_systems() {
+    // the admission gate is serverless-only: a VM fleet with a huge
+    // hazard must be bitwise the zero-hazard run (no draw, no wait)
+    cases(3, |rng| {
+        let case_seed = rng.next_u64();
+        let vm = |hazard: f64| {
+            build_fleet(case_seed, false, &move |_, j| {
+                j.system = SystemKind::Mlcd;
+                j.capacity_hazard = hazard;
+            })
+            .run()
+        };
+        let off = vm(0.0);
+        let on = vm(5.0);
+        assert_fleets_bit_identical(&off, &on);
+        assert_eq!(on.capacity_retries, 0);
+    });
+}
+
+#[test]
+fn prop_leases_conserved_under_capacity_rejections() {
+    // capacity refusals may delay launches but never corrupt the slot
+    // accounting: jobs always finish, the account's in-flight peak stays
+    // within the largest limit ever granted, and the three retry ledgers
+    // (fleet total, per-job counter, per-launch records) agree exactly
+    let total_retries = AtomicU64::new(0);
+    cases(6, |rng| {
+        let case_seed = rng.next_u64();
+        let out = build_fleet(case_seed, false, &|_, j| {
+            j.capacity_hazard = 2.0;
+        })
+        .run();
+        let max_limit = out
+            .shocks
+            .iter()
+            .map(|s| s.from_limit.max(s.to_limit))
+            .max()
+            .unwrap_or(0)
+            .max(out.account_limit);
+        assert!(out.peak_in_flight <= max_limit);
+        let per_job: u64 = out.jobs.iter().map(|j| j.outcome.capacity_retries).sum();
+        assert_eq!(out.capacity_retries, per_job, "fleet and job ledgers agree");
+        total_retries.fetch_add(out.capacity_retries, Ordering::Relaxed);
+        for j in &out.jobs {
+            assert!(j.finish_s.is_finite());
+            assert!(
+                j.outcome.iters_done == 10 || j.outcome.iters_done == 24,
+                "tenant {} wedged at {} iters",
+                j.tenant,
+                j.outcome.iters_done
+            );
+            let launches = &j.outcome.launches;
+            assert!(!launches.is_empty(), "serverless jobs record their launches");
+            let retries: u64 = launches.iter().map(|l| l.capacity_retries as u64).sum();
+            assert_eq!(retries, j.outcome.capacity_retries, "launch records agree");
+            let cold: u64 = launches.iter().map(|l| l.cold_starts as u64).sum();
+            let warm: u64 = launches.iter().map(|l| l.warm_hits as u64).sum();
+            assert_eq!(cold, j.outcome.cold_starts);
+            assert_eq!(warm, j.outcome.warm_hits);
+            for l in launches {
+                assert_eq!(l.funcs, l.warm_hits + l.cold_starts);
+                assert!(l.capacity_retries <= 8, "retry wall is capped");
+            }
+            // each refusal costs at least the 2 s base backoff
+            assert!(
+                j.outcome.capacity_wait_s >= 2.0 * j.outcome.capacity_retries as f64 - 1e-9,
+                "{} waited {}s over {} retries",
+                j.tenant,
+                j.outcome.capacity_wait_s,
+                j.outcome.capacity_retries
+            );
+        }
+    });
+    assert!(
+        total_retries.load(Ordering::Relaxed) > 0,
+        "a hazard-2.0 sweep must actually exercise the refusal path"
+    );
+}
+
+#[test]
+fn prop_warm_pool_conserves_across_resize_retirements() {
+    // a resize parks the old-size fleet and checks out the new size:
+    // under memory-keyed matching those retirees are unservable for the
+    // relaunch, but the pool's conservation identity (checkins == hits +
+    // evictions after the final drain) must survive any retire/launch
+    // interleaving the resize pass produces
+    let relaunches = AtomicU64::new(0);
+    cases(6, |rng| {
+        let case_seed = rng.next_u64();
+        let mut r = Pcg::new(case_seed);
+        let mut sim = ClusterSim::new(ClusterParams {
+            seed: r.below(1 << 20),
+            account_limit: 64 + r.below(64) as u32,
+            warm: WarmParams {
+                pool: Some(PoolConfig {
+                    ttl_s: 3600.0,
+                    match_memory: true,
+                    ..Default::default()
+                }),
+                prewarm: None,
+                bank: None,
+            },
+            ..Default::default()
+        });
+        let n = 2 + r.below(3) as usize;
+        for i in 0..n {
+            let mut j = multi_job(9000 + 17 * i as u64 + r.below(1 << 16));
+            if r.next_f64() < 0.5 {
+                // fixed-config system launched at a grossly oversized
+                // memory: the resize pass is its only mem mover, and the
+                // efficiency goal pulls it off the 10 GB ceiling
+                j.system = SystemKind::LambdaMl;
+                j.fixed = Config { workers: 16, mem_mb: 10_240 };
+            }
+            j.resize_search = true;
+            sim.submit(j, r.uniform(0.0, 300.0), TenantQuota::unlimited());
+        }
+        let out = sim.run();
+        assert!(out.warm.conserves(), "resize retirements must not leak containers");
+        for j in &out.jobs {
+            assert_eq!(j.outcome.iters_done, 24, "tenant {} wedged", j.tenant);
+            assert!(!j.outcome.launches.is_empty());
+            relaunches.fetch_add(j.outcome.launches.len().saturating_sub(1) as u64, Ordering::Relaxed);
+        }
+        // fleet-level warm hits equal the sum of per-job hits even with
+        // resizes interleaving the park/checkout traffic
+        let per_job: u64 = out.jobs.iter().map(|j| j.outcome.warm_hits).sum();
+        assert_eq!(out.warm.hits, per_job);
+    });
+    assert!(
+        relaunches.load(Ordering::Relaxed) > 0,
+        "the sweep must actually produce resize-forced relaunches"
+    );
+}
+
+#[test]
+fn prop_resize_capacity_runs_bit_deterministic() {
+    // both layers join the simulator's core contract: same seed, same
+    // world — launch records, retry ledgers and trace streams included
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let knobs = |_: usize, j: &mut SimJob| {
+            j.resize_search = true;
+            j.capacity_hazard = 1.0;
+        };
+        let a = build_fleet(case_seed, true, &knobs).run();
+        let b = build_fleet(case_seed, true, &knobs).run();
+        assert_fleets_bit_identical(&a, &b);
+    });
+}
+
+#[test]
+fn prop_traced_capacity_waits_match_the_counters() {
+    // the trace layer and the live counters must tell the same story:
+    // the CapacityWait bucket re-sums to the job's capacity_wait_s (up
+    // to re-tiling float noise) and the CapacityRejected instants count
+    // the retries exactly
+    cases(4, |rng| {
+        let case_seed = rng.next_u64();
+        let out = build_fleet(case_seed, true, &|_, j| {
+            j.capacity_hazard = 2.0;
+        })
+        .run();
+        for j in &out.jobs {
+            let bucket = j.outcome.trace.bucket_sum_s(TimeBucket::CapacityWait);
+            let counter = j.outcome.capacity_wait_s;
+            assert!(
+                (bucket - counter).abs() <= 1e-9 * counter.max(1.0),
+                "tenant {}: bucket {bucket} vs counter {counter}",
+                j.tenant
+            );
+            let rejected = j
+                .outcome
+                .trace
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::CapacityRejected { .. }))
+                .count() as u64;
+            assert_eq!(rejected, j.outcome.capacity_retries, "tenant {}", j.tenant);
+        }
+    });
+}
